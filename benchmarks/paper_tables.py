@@ -1,0 +1,262 @@
+"""Paper-table reproductions on the simulated-NPU backend.
+
+  * Table I   — effective TOPS of ours vs the baseline-compiler NPU
+  * Table II  — CP problem partitioning: compile time vs inference time
+  * Table III — latency + LTP across the vision suite: ours vs eNPU-A
+                (equal resources, baseline compiler) vs eNPU-B (2x
+                resources, baseline compiler)
+  * Fig. 6    — TCM memory-over-time with and without fusion+tiling
+  * §VI       — GenAI (transformer-block) speedup vs a scalar-core model
+
+"Ours" is the full CP stack (two formats + fusion CP + DAE scheduling);
+"eNPU-X" is the same machine model driven by the baseline compiler
+(single format, layer-by-layer, serialized DMA/compute) — the behavior
+Table I attributes to the reference stacks.  Reported speedups are
+therefore compiler-for-compiler at identical silicon, the paper's own
+controlled comparison.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import asdict, dataclass, replace
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import (ENPU_A, ENPU_B, NEUTRON_2TOPS, CompileResult,
+                        CompilerOptions, compile_graph, cycles_to_ms,
+                        effective_tops)
+from repro.frontends.vision import VISION_MODELS, build, table4_targets
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..",
+                           "experiments", "paper")
+
+
+#: models small enough to compile at full resolution quickly; the YOLO
+#: family runs at misc-scale via res_scale (noted in the output).
+TABLE3_MODELS = [
+    ("mobilenet_v1", 1.0), ("mobilenet_v2", 1.0),
+    ("mobilenet_v3_min", 1.0), ("resnet50_v1", 1.0),
+    ("efficientnet_lite0", 1.0), ("efficientdet_lite0", 1.0),
+    ("mobilenet_v1_ssd", 1.0), ("mobilenet_v2_ssd", 1.0),
+    ("yolov8n_det", 0.5), ("yolov8n_seg", 0.5), ("yolov8s_det", 0.5),
+    ("damo_yolo_nl", 0.5),
+]
+
+
+def _compile(name: str, res_scale: float, cfg, opts: CompilerOptions
+             ) -> Tuple[CompileResult, float]:
+    g, _ = build(name, res_scale=res_scale)
+    t0 = time.monotonic()
+    res = compile_graph(g, cfg, opts)
+    return res, time.monotonic() - t0
+
+
+@dataclass
+class Row:
+    model: str
+    res_scale: float
+    ours_ms: float
+    enpu_a_ms: float
+    enpu_b_ms: float
+    speedup_vs_a: float
+    speedup_vs_b: float
+    ours_ltp: float
+    enpu_a_ltp: float
+    enpu_b_ltp: float
+    ours_eff_tops: float
+    enpu_a_eff_tops: float
+
+
+def bench_table3(models=None, verbose: bool = True) -> List[Row]:
+    rows: List[Row] = []
+    for name, rs in (models or TABLE3_MODELS):
+        ours, _ = _compile(name, rs, NEUTRON_2TOPS, CompilerOptions())
+        base_a, _ = _compile(name, rs, ENPU_A, CompilerOptions.baseline())
+        base_b, _ = _compile(name, rs, ENPU_B, CompilerOptions.baseline())
+        o = ours.program.stats()
+        a = base_a.program.stats()
+        b = base_b.program.stats()
+        row = Row(
+            model=name, res_scale=rs,
+            ours_ms=o["latency_ms"], enpu_a_ms=a["latency_ms"],
+            enpu_b_ms=b["latency_ms"],
+            speedup_vs_a=a["latency_ms"] / o["latency_ms"],
+            speedup_vs_b=b["latency_ms"] / o["latency_ms"],
+            ours_ltp=o["latency_ms"] * NEUTRON_2TOPS.peak_tops,
+            enpu_a_ltp=a["latency_ms"] * ENPU_A.peak_tops,
+            enpu_b_ltp=b["latency_ms"] * ENPU_B.peak_tops,
+            ours_eff_tops=o["effective_tops"],
+            enpu_a_eff_tops=a["effective_tops"],
+        )
+        rows.append(row)
+        if verbose:
+            print(f"  {name:20s}(x{rs:3.1f}) ours {row.ours_ms:8.2f} ms"
+                  f" | eNPU-A {row.enpu_a_ms:8.2f} ms ({row.speedup_vs_a:4.2f}x)"
+                  f" | eNPU-B {row.enpu_b_ms:8.2f} ms ({row.speedup_vs_b:4.2f}x)"
+                  f" | LTP {row.ours_ltp:7.1f} vs {row.enpu_a_ltp:7.1f}"
+                  f"/{row.enpu_b_ltp:7.1f}", flush=True)
+    gm_a = float(np.exp(np.mean([np.log(r.speedup_vs_a) for r in rows])))
+    gm_b = float(np.exp(np.mean([np.log(r.speedup_vs_b) for r in rows])))
+    best_ltp = all(r.ours_ltp <= min(r.enpu_a_ltp, r.enpu_b_ltp) + 1e-9
+                   for r in rows)
+    if verbose:
+        print(f"  mean speedup vs eNPU-A {gm_a:.2f}x (paper: 1.8x), "
+              f"vs eNPU-B {gm_b:.2f}x (paper: 1.3x); "
+              f"best LTP everywhere: {best_ltp}")
+    _save("table3", {"rows": [asdict(r) for r in rows],
+                     "mean_speedup_vs_a": gm_a,
+                     "mean_speedup_vs_b": gm_b,
+                     "best_ltp_everywhere": best_ltp})
+    return rows
+
+
+def bench_table1(verbose: bool = True) -> Dict:
+    """Effective TOPS on ResNet50V1 / EfficientNet-Lite0 (paper Table I
+    measures how far real NPUs fall below peak)."""
+    out = {}
+    for name in ("resnet50_v1", "efficientnet_lite0"):
+        ours, _ = _compile(name, 1.0, NEUTRON_2TOPS, CompilerOptions())
+        base, _ = _compile(name, 1.0, ENPU_A, CompilerOptions.baseline())
+        out[name] = {
+            "peak_tops": NEUTRON_2TOPS.peak_tops,
+            "ours_effective_tops": ours.program.stats()["effective_tops"],
+            "baseline_effective_tops":
+                base.program.stats()["effective_tops"],
+        }
+        if verbose:
+            o = out[name]
+            print(f"  {name:20s} peak {o['peak_tops']:.2f} | "
+                  f"ours {o['ours_effective_tops']:.3f} | "
+                  f"baseline-compiler {o['baseline_effective_tops']:.3f}")
+    _save("table1", out)
+    return out
+
+
+def bench_table2(model: str = "yolov8n_det", res_scale: float = 0.4,
+                 verbose: bool = True) -> Dict:
+    """Partitioning ablation (paper Table II): compile time vs modeled
+    inference time for the 2x2 {partition, monolithic} x phases grid."""
+    variants = {
+        "no_partitioning": CompilerOptions(partition=False,
+                                           cp_time_limit_s=2.0,
+                                           monolithic_time_limit_s=30.0),
+        "both_partitioned": CompilerOptions(partition=True,
+                                            cp_time_limit_s=0.5),
+    }
+    out = {}
+    for nm, opts in variants.items():
+        res, wall = _compile(model, res_scale, NEUTRON_2TOPS, opts)
+        out[nm] = {"compile_s": wall,
+                   "inference_ms": res.program.stats()["latency_ms"]}
+        if verbose:
+            print(f"  {nm:18s} compile {wall:7.2f} s   "
+                  f"inference {out[nm]['inference_ms']:7.2f} ms")
+    if verbose:
+        c0 = out["no_partitioning"]
+        c1 = out["both_partitioned"]
+        print(f"  compile-time cut {100*(1-c1['compile_s']/c0['compile_s']):.0f}% "
+              f"(paper: ~81%), inference cost "
+              f"{100*(c1['inference_ms']/c0['inference_ms']-1):+.1f}% "
+              f"(paper: ~+3.3%)")
+    _save("table2", out)
+    return out
+
+
+def bench_fig6(model: str = "mobilenet_v2", verbose: bool = True) -> Dict:
+    """Memory-over-time with vs without fusion+tiling (paper Fig. 6)."""
+    g, _ = build(model)
+    with_f = compile_graph(g, NEUTRON_2TOPS, CompilerOptions())
+    g2, _ = build(model)
+    # "without" = the paper's comparison point: naive tile bounds and
+    # layer-by-layer order (no fusion), DAE overlap unchanged
+    no_f = compile_graph(g2, NEUTRON_2TOPS,
+                         CompilerOptions(fusion=False, overlap=True,
+                                         naive_tiling=True))
+    tl_f = with_f.program.memory_timeline()
+    tl_n = no_f.program.memory_timeline()
+    sf, sn = with_f.program.stats(), no_f.program.stats()
+    out = {
+        "with_fusion_peak_banks": max(tl_f) if tl_f else 0,
+        "without_fusion_peak_banks": max(tl_n) if tl_n else 0,
+        "with_fusion_mean_banks": float(np.mean(tl_f)) if tl_f else 0,
+        "without_fusion_mean_banks": float(np.mean(tl_n)) if tl_n else 0,
+        # the paper's point is the *off-chip* consequence of the on-chip
+        # profile: fused execution keeps intermediates out of DRAM
+        "with_fusion_ddr_mb": sf["ddr_mb"],
+        "without_fusion_ddr_mb": sn["ddr_mb"],
+        "with_fusion_ms": sf["latency_ms"],
+        "without_fusion_ms": sn["latency_ms"],
+        "timeline_with": tl_f[:400],
+        "timeline_without": tl_n[:400],
+    }
+    if verbose:
+        print(f"  mean banks {out['with_fusion_mean_banks']:.1f} vs "
+              f"{out['without_fusion_mean_banks']:.1f} | DDR "
+              f"{out['with_fusion_ddr_mb']:.1f} vs "
+              f"{out['without_fusion_ddr_mb']:.1f} MB | latency "
+              f"{out['with_fusion_ms']:.2f} vs "
+              f"{out['without_fusion_ms']:.2f} ms")
+    _save("fig6", out)
+    return out
+
+
+def bench_genai(verbose: bool = True) -> Dict:
+    """§VI: transformer matmuls on the NPU vs 4x Cortex-A55 at 1.8x clock.
+
+    A55: 2x 128-bit NEON pipes -> 16 int8 MACs/cycle/core; 4 cores at
+    1.8 GHz ~ 0.23 TOPS peak, ~60% sustained on GEMM.  The NPU runs the
+    same (batch=1) decoder-block GEMMs through the compiler."""
+    from repro.core.ir import GraphBuilder
+    # matrix-matrix regime (prefill block of 64 tokens), as §VI states —
+    # batch-1 single-token GEMV is DDR-bound on BOTH sides and
+    # uninformative.  Tokens map to the H dimension (paper §IV-A).
+    d_model, d_ff, seq = 768, 3072, 64
+    b = GraphBuilder("genai_block")
+    x = b.input((seq, 1, d_model))
+    for blk in range(4):
+        q = b.conv(x, d_model, k=1)
+        o = b.conv(q, d_model, k=1)
+        h = b.conv(o, d_ff, k=1, act="gelu")
+        x = b.conv(h, d_model, k=1)
+    b.mark_output(x)
+    g = b.build()
+    res = compile_graph(g, NEUTRON_2TOPS, CompilerOptions())
+    npu_ms = res.program.stats()["latency_ms"]
+    macs = g.total_macs()
+    a55_macs_per_s = 4 * 16 * 1.8e9 * 0.6
+    w_bytes = g.total_param_bytes()
+    cpu_ms = max(macs / a55_macs_per_s,
+                 w_bytes / 8e9) * 1e3          # A55 cluster DDR ~8 GB/s
+    out = {"npu_ms": npu_ms, "cpu_ms": cpu_ms,
+           "speedup": cpu_ms / npu_ms, "gmacs": macs / 1e9}
+    if verbose:
+        print(f"  GEMM block: NPU {npu_ms:.3f} ms vs 4xA55 {cpu_ms:.3f} "
+              f"ms -> {out['speedup']:.1f}x (paper: ~10x)")
+    _save("genai", out)
+    return out
+
+
+def _save(name: str, obj: Dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def run_all():
+    print("[Table I] effective TOPS")
+    bench_table1()
+    print("[Table III] latency + LTP across the vision suite")
+    bench_table3()
+    print("[Table II] CP partitioning")
+    bench_table2()
+    print("[Fig 6] fusion memory profile")
+    bench_fig6()
+    print("[§VI] GenAI GEMM speedup")
+    bench_genai()
+
+
+if __name__ == "__main__":
+    run_all()

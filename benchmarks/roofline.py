@@ -1,0 +1,65 @@
+"""Roofline table from cached dry-run artifacts.
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+prints/saves the per-(arch x shape x mesh) three-term roofline table of
+EXPERIMENTS.md §Roofline.  Does not recompile anything.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.analysis.roofline import Roofline, format_table
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load_rows(dryrun_dir: str = DRYRUN_DIR, mesh: Optional[str] = None,
+              tag: str = "") -> List[Roofline]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            art = json.load(f)
+        if (art.get("tag") or "") != tag:
+            continue
+        if mesh and art["mesh"] != mesh:
+            continue
+        rows.append(Roofline(**art["roofline"]))
+    return rows
+
+
+def summarize(rows: List[Roofline]) -> Dict:
+    if not rows:
+        return {}
+    worst = min(rows, key=lambda r: r.peak_fraction)
+    coll = max(rows, key=lambda r: r.t_collective /
+               max(r.t_compute + r.t_memory + r.t_collective, 1e-12))
+    return {
+        "n_cells": len(rows),
+        "worst_roofline": (worst.arch, worst.shape,
+                           round(worst.peak_fraction, 3)),
+        "most_collective_bound": (coll.arch, coll.shape,
+                                  round(coll.t_collective /
+                                        max(coll.t_compute, 1e-12), 2)),
+        "bottleneck_histogram": {
+            b: sum(1 for r in rows if r.bottleneck == b)
+            for b in ("compute", "memory", "collective")},
+    }
+
+
+def main():
+    rows = load_rows()
+    if not rows:
+        print("no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first")
+        return
+    print(format_table(rows))
+    s = summarize(rows)
+    print("\nsummary:", json.dumps(s, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark entrypoint: `PYTHONPATH=src python -m benchmarks.run`.
+
+Runs the paper-table reproductions on the simulated-NPU backend and then
+prints the roofline table from any cached dry-run artifacts.  Pass
+``--fast`` to restrict Table III to the four small classification models
+(full suite ~6 min single-core).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--skip-tables", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args(argv)
+
+    if not args.skip_tables:
+        from . import paper_tables as pt
+        print("=" * 72)
+        print("PAPER-TABLE REPRODUCTIONS (simulated Neutron NPU)")
+        print("=" * 72)
+        print("[Table I] effective TOPS")
+        pt.bench_table1()
+        print("[Table III] latency + LTP")
+        models = None
+        if args.fast:
+            models = [("mobilenet_v1", 1.0), ("mobilenet_v2", 1.0),
+                      ("mobilenet_v3_min", 1.0),
+                      ("efficientnet_lite0", 1.0)]
+        pt.bench_table3(models=models)
+        print("[Table II] CP partitioning")
+        pt.bench_table2()
+        print("[Fig 6] fusion memory profile")
+        pt.bench_fig6()
+        print("[§VI] GenAI GEMM speedup")
+        pt.bench_genai()
+
+    if not args.skip_roofline:
+        print("=" * 72)
+        print("ROOFLINE (from cached dry-run artifacts)")
+        print("=" * 72)
+        from . import roofline as rf
+        rf.main()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,23 @@
+"""Compile the full vision benchmark suite and print the Table-III-style
+comparison (ours vs the baseline reference-stack compiler).
+
+    PYTHONPATH=src python examples/compile_vision.py [--fast]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.paper_tables import bench_table3  # noqa: E402
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--fast", action="store_true")
+args = ap.parse_args()
+
+models = None
+if args.fast:
+    models = [("mobilenet_v1", 1.0), ("mobilenet_v2", 1.0),
+              ("efficientnet_lite0", 1.0)]
+bench_table3(models=models)

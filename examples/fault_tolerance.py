@@ -1,0 +1,58 @@
+"""Fault-tolerance drill: kill -> restore -> elastic re-mesh.
+
+    PYTHONPATH=src python examples/fault_tolerance.py
+
+1. trains a reduced model for 20 steps with checkpoints every 5;
+2. simulates a node failure at step 20 (process state lost);
+3. restores from the latest valid checkpoint and verifies the loss
+   curve continues bit-identically (deterministic data pipeline);
+4. simulates losing 3 of 8 hosts and plans the elastic re-mesh
+   (shrunken data axis, preserved model axis).
+"""
+import os
+import shutil
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import train_loop  # noqa: E402
+from repro.runtime.fault import FaultMonitor, plan_remesh  # noqa: E402
+
+ckpt = os.path.join(tempfile.gettempdir(), "repro_fault_demo")
+shutil.rmtree(ckpt, ignore_errors=True)
+
+print("=== phase 1: train 20 steps with checkpoints ===")
+losses_a = train_loop("mamba2-370m", steps=20, smoke=True, ckpt_dir=ckpt,
+                      ckpt_every=5, seq_len=128, global_batch=8,
+                      log_every=5)
+
+print("\n=== phase 2: 'node failure' -> restart from checkpoint ===")
+# a fresh process restores from step 20 and continues to 30
+losses_b = train_loop("mamba2-370m", steps=30, smoke=True, ckpt_dir=ckpt,
+                      ckpt_every=5, seq_len=128, global_batch=8,
+                      log_every=5)
+
+print("\n=== phase 3: reference run without failure ===")
+shutil.rmtree(ckpt, ignore_errors=True)
+losses_c = train_loop("mamba2-370m", steps=30, smoke=True, ckpt_dir=None,
+                      seq_len=128, global_batch=8, log_every=10)
+
+resumed = losses_b[-5:]
+reference = losses_c[-5:]
+drift = max(abs(a - b) for a, b in zip(resumed, reference))
+print(f"\nloss drift after restart vs uninterrupted run: {drift:.2e}")
+assert drift < 1e-3, "restart is not deterministic!"
+
+print("\n=== phase 4: elastic re-mesh after losing 3/8 hosts ===")
+mon = FaultMonitor(n_hosts=8, timeout_s=0.01)
+for h in (2, 5, 7):
+    mon.mark_failed(h)
+healthy = mon.healthy_hosts()
+print(f"healthy hosts: {healthy}")
+# 8 hosts x 32 chips = 256 chips; model axis 16 preserved
+plan = plan_remesh(global_batch=256, old_data=16, model_axis=16,
+                   n_healthy_chips=len(healthy) * 32)
+print(f"re-mesh: {plan.old_shape} -> {plan.new_shape}; per-shard batch "
+      f"{plan.batch_per_shard_old} -> {plan.batch_per_shard_new}")
+print("fault-tolerance drill passed.")

@@ -1,0 +1,19 @@
+"""Batched serving with KV caches across four architecture families.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Prefill + greedy decode for a dense GQA model, the gemma3 local:global
+pattern (ring-buffer local caches), a pure-SSM model (O(1) state), and
+the whisper encoder-decoder (cross-attention KV) — the same serve_step
+the decode dry-run cells lower at production scale.
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import serve  # noqa: E402
+
+for arch in ("qwen2-vl-2b", "gemma3-27b", "mamba2-370m", "whisper-tiny"):
+    print(f"\n=== {arch} (reduced config) ===")
+    serve(arch, batch=4, prompt_len=24, gen=12, smoke=True)

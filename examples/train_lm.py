@@ -1,0 +1,39 @@
+"""End-to-end LM training: ~100M-parameter model, a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses the full production path — deterministic sharded data pipeline,
+jit'd train_step (AdamW + cosine schedule + microbatch accumulation),
+async checkpointing with restart — on a reduced mamba2 config sized to
+~100M parameters.  Loss is printed every 20 steps and must decrease.
+"""
+import argparse
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.train import train_loop  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="mamba2-370m")
+    args = ap.parse_args()
+
+    ckpt = os.path.join(tempfile.gettempdir(), "repro_train_lm_ckpt")
+    losses = train_loop(
+        args.arch, steps=args.steps, smoke=True, ckpt_dir=ckpt,
+        ckpt_every=50, seq_len=256, global_batch=16, n_micro=2,
+        log_every=20)
+    first = sum(losses[:10]) / max(len(losses[:10]), 1)
+    last = sum(losses[-10:]) / max(len(losses[-10:]), 1)
+    print(f"\nmean loss first-10 {first:.4f} -> last-10 {last:.4f}")
+    assert last < first, "loss did not decrease!"
+    print("training works end-to-end (loss decreased).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,379 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+so for scan-over-layers models (every LM here) it under-reports FLOPs and
+bytes by ~n_layers x.  This module re-derives the three roofline inputs
+from the post-SPMD, scheduled HLO text with loop multipliers:
+
+  * **flops** — 2 * out_elems * contracted_elems per ``dot``
+    (+convolution support), multiplied through nested while trip counts;
+  * **bytes** — HBM traffic modeled at fusion boundaries: operands +
+    outputs of top-level instructions, with two scan-critical
+    refinements: an operand consumed only by a ``dynamic-slice`` inside
+    the fusion counts the *slice* bytes (a layer reads its own weight
+    slice, not the whole stacked array), and a fusion rooted at
+    ``dynamic-update-slice`` counts the *update* bytes (in-place write);
+    tuple plumbing (while/get-tuple-element/tuple/bitcast/parameter)
+    counts zero;
+  * **collective wire bytes** — per-device bytes-on-wire per collective
+    (ring model, see ``roofline.py``), also loop-multiplied.
+
+Trip counts: the largest integer constant in the while condition
+computation (the canonical `lt(counter, L)` pattern XLA emits for scans).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8,
+    "u64": 8, "f64": 8, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*{")
+_INSTR_RE = re.compile(
+    r"^(ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(.*?\)|[\w\[\],{}/* ]+?)\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_LHS_B_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+#: pure data-plumbing opcodes: zero modeled HBM traffic
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "iota", "rng",
+    "get-dimension-size", "partition-id", "replica-id", "domain",
+    "opt-barrier", "add-dependency", "custom-call",
+}
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    elems = 0
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    out_bytes: int
+    out_elems: int
+    raw: str = ""
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    by_name: Dict[str, Instr] = field(default_factory=dict)
+    params: Dict[int, Instr] = field(default_factory=dict)
+    root: Optional[Instr] = None
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=dict)
+    collective_count: Dict[str, int] = field(default_factory=dict)
+    dot_flops_by_shape: Dict[str, float] = field(default_factory=dict)
+    max_trip: int = 1
+    bytes_by_instr: Dict[str, float] = field(default_factory=dict)
+
+    def top_bytes(self, n: int = 20):
+        return sorted(self.bytes_by_instr.items(), key=lambda kv: -kv[1])[:n]
+
+    def add_collective(self, kind: str, b: float, n: int = 1) -> None:
+        self.wire_bytes += b
+        self.collective_bytes[kind] = \
+            self.collective_bytes.get(kind, 0.0) + b
+        self.collective_count[kind] = \
+            self.collective_count.get(kind, 0) + n
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        hm = _HEADER_RE.match(line)
+        if hm and ("=" not in line.split("(")[0]):
+            cur = Computation(hm.group(2))
+            comps[cur.name] = cur
+            if hm.group(1):                      # ENTRY
+                comps["__entry__"] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        is_root, name, type_str, opcode, opnds, attrs = im.groups()
+        elems, byts = _shape_elems_bytes(type_str)
+        operands = []
+        depth = 0
+        tok = ""
+        for ch in opnds:
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+            if ch == "," and depth == 0:
+                operands.append(tok.strip())
+                tok = ""
+            else:
+                tok += ch
+        if tok.strip():
+            operands.append(tok.strip())
+        operands = [o.lstrip("%").strip() for o in operands
+                    if o.strip().startswith("%")]
+        inst = Instr(name, type_str, opcode, operands, attrs, byts, elems,
+                     raw=line)
+        cur.instrs.append(inst)
+        cur.by_name[name] = inst
+        if opcode == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", line)
+            if pm:
+                cur.params[int(pm.group(1))] = inst
+        if is_root:
+            cur.root = inst
+    return comps
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Largest integer constant reachable from the while condition —
+    XLA's canonical `lt(counter, L)` scan pattern."""
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    seen = set()
+
+    def scan(c: Computation) -> None:
+        if c.name in seen:
+            return
+        seen.add(c.name)
+        for inst in c.instrs:
+            for m in _CONST_INT_RE.finditer(inst.raw):
+                best_holder[0] = max(best_holder[0], int(m.group(1)))
+            cm = _CALLS_RE.search(inst.attrs)
+            if cm and cm.group(1) in comps:
+                scan(comps[cm.group(1)])
+
+    best_holder = [best]
+    scan(comp)
+    return best_holder[0]
+
+
+def _dot_flops(comp: Computation, inst: Instr) -> float:
+    lhs = comp.by_name.get(inst.operands[0]) if inst.operands else None
+    if lhs is None:
+        return 2.0 * inst.out_elems          # conservative
+    lm = _SHAPE_RE.search(lhs.type_str)
+    if not lm:
+        return 0.0
+    dims = [int(d) for d in lm.group(2).split(",")] if lm.group(2) else []
+    cm = _LHS_C_RE.search(inst.attrs)
+    contract = 1
+    if cm and cm.group(1):
+        for i in cm.group(1).split(","):
+            idx = int(i)
+            if idx < len(dims):
+                contract *= dims[idx]
+    return 2.0 * inst.out_elems * contract
+
+
+def _conv_flops(comp: Computation, inst: Instr) -> float:
+    # flops = 2 * out_elems * (kernel spatial * in_features)
+    rhs = comp.by_name.get(inst.operands[1]) \
+        if len(inst.operands) > 1 else None
+    if rhs is None:
+        return 2.0 * inst.out_elems
+    rm = _SHAPE_RE.search(rhs.type_str)
+    dims = [int(d) for d in rm.group(2).split(",")] if rm and rm.group(2) \
+        else []
+    k = 1
+    for d in dims[:-1]:
+        k *= d
+    return 2.0 * inst.out_elems * k
+
+
+def _collective_wire(inst: Instr) -> Tuple[str, float]:
+    kind = next((c for c in COLLECTIVES
+                 if inst.opcode == c or inst.opcode.startswith(c)), "")
+    if not kind or inst.opcode.endswith("-done"):
+        return "", 0.0
+    n = 1
+    g = _GROUPS_RE.search(inst.attrs)
+    if g:
+        n = len([x for x in g.group(1).split(",") if x.strip() != ""])
+    else:
+        g2 = _GROUPS_IOTA_RE.search(inst.attrs)
+        if g2:
+            n = int(g2.group(2))
+    out_b = inst.out_bytes
+    if kind == "all-gather":
+        wire = out_b * (n - 1) / max(n, 1)
+    elif kind == "reduce-scatter":
+        wire = out_b * (n - 1)
+    elif kind == "all-reduce":
+        wire = 2 * out_b * (n - 1) / max(n, 1)
+    elif kind == "all-to-all":
+        wire = out_b * (n - 1) / max(n, 1)
+    else:
+        wire = out_b
+    return kind, wire
+
+
+def _fusion_bytes(comps: Dict[str, Computation], comp: Computation,
+                  inst: Instr) -> float:
+    """Bytes for a fusion op: slice-aware operands + DUS-aware output."""
+    called = None
+    cm = _CALLS_RE.search(inst.attrs)
+    if cm:
+        called = comps.get(cm.group(1))
+    total = 0.0
+    # output: if root is dynamic-update-slice, count the update size
+    out_b = inst.out_bytes
+    dus_target: Optional[str] = None
+    if called is not None and called.root is not None \
+            and called.root.opcode == "dynamic-update-slice":
+        upd = None
+        for opn in called.root.operands[1:2]:
+            upd = called.by_name.get(opn)
+        if upd is not None:
+            out_b = upd.out_bytes
+        if called.root.operands:
+            dus_target = called.root.operands[0]
+    total += out_b
+    # operands
+    for k, opn in enumerate(inst.operands):
+        op_inst = comp.by_name.get(opn)
+        op_b = op_inst.out_bytes if op_inst else 0
+        if called is not None and k in called.params:
+            p = called.params[k]
+            users = [i for i in called.instrs if p.name in i.operands]
+            if dus_target is not None and users and \
+                    all(u.name == called.root.name for u in users) and \
+                    p.name == dus_target:
+                op_b = 0          # in-place DUS target: no real read
+            elif users and all(u.opcode in ("dynamic-slice", "bitcast",
+                                            "reshape", "copy")
+                               for u in users):
+                sl = [u for u in users if u.opcode == "dynamic-slice"]
+                if sl:
+                    op_b = max(u.out_bytes for u in sl)
+        total += op_b
+    return total
+
+
+def _analyze(comps: Dict[str, Computation], comp: Computation,
+             mult: float, cost: HloCost, flops_only: bool = False
+             ) -> None:
+    for inst in comp.instrs:
+        op = inst.opcode
+        if op == "while":
+            bm = _BODY_RE.search(inst.attrs)
+            cm = _COND_RE.search(inst.attrs)
+            trip = _trip_count(comps, cm.group(1)) if cm else 1
+            cost.max_trip = max(cost.max_trip, int(trip * mult))
+            if bm and bm.group(1) in comps:
+                _analyze(comps, comps[bm.group(1)], mult * trip, cost,
+                         flops_only)
+            continue
+        if op in ("call", "conditional", "async-start"):
+            for m in re.finditer(r"(?:to_apply|called_computations=\{?|"
+                                 r"branch_computations=\{)%?([\w.\-]+)",
+                                 inst.attrs):
+                sub = comps.get(m.group(1))
+                if sub:
+                    _analyze(comps, sub, mult, cost, flops_only)
+            continue
+        if op == "dot":
+            f = _dot_flops(comp, inst) * mult
+            cost.flops += f
+            key = inst.type_str.strip()
+            cost.dot_flops_by_shape[key] = \
+                cost.dot_flops_by_shape.get(key, 0.0) + f
+        elif op.startswith("convolution"):
+            cost.flops += _conv_flops(comp, inst) * mult
+        kind, wire = _collective_wire(inst)
+        if kind:
+            cost.add_collective(kind, wire * mult, int(mult))
+            if not flops_only:
+                cost.bytes += inst.out_bytes * mult
+            continue
+        if flops_only:
+            # still recurse into fusions for their dots
+            if op == "fusion":
+                cm2 = _CALLS_RE.search(inst.attrs)
+                if cm2 and cm2.group(1) in comps:
+                    _analyze(comps, comps[cm2.group(1)], mult, cost,
+                             flops_only=True)
+            continue
+        if op in _FREE_OPS:
+            continue
+        if op == "fusion":
+            fb = _fusion_bytes(comps, comp, inst) * mult
+            cost.bytes += fb
+            key = f"{comp.name}/{inst.name}"
+            cost.bytes_by_instr[key] = cost.bytes_by_instr.get(key, 0.0) + fb
+            cm2 = _CALLS_RE.search(inst.attrs)
+            if cm2 and cm2.group(1) in comps:
+                _analyze(comps, comps[cm2.group(1)], mult, cost,
+                         flops_only=True)
+            continue
+        # plain top-level op: operands + output
+        b = inst.out_bytes
+        for opn in inst.operands:
+            oi = comp.by_name.get(opn)
+            if oi is not None:
+                b += oi.out_bytes
+        cost.bytes += b * mult
+        key = f"{comp.name}/{inst.name}({op})"
+        cost.bytes_by_instr[key] = cost.bytes_by_instr.get(key, 0.0) \
+            + b * mult
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = parse_module(text)
+    entry = comps.get("__entry__")
+    cost = HloCost()
+    if entry is None:
+        return cost
+    _analyze(comps, entry, 1.0, cost)
+    return cost

@@ -1,0 +1,25 @@
+"""eIQ-Neutron compiler mid-end (the paper's primary contribution).
+
+Public API:
+    ir            — graph IR, builder, reference executor
+    npu           — Neutron machine model + cost functions
+    cpsolver      — self-contained 0-1 CP solver
+    formats       — depth/line parallelism selection (§IV-A)
+    tiling        — temporal tiling + layer fusion CP (§IV-C)
+    scheduling    — tick DAE scheduling CP (§IV-B)
+    allocation    — banked-TCM allocation + V2P (§IV-D)
+    executor      — functional banked-TCM simulator (validation)
+    pipeline      — compile_graph() driver
+"""
+from .ir import Graph, GraphBuilder, Op, Tensor, reference_execute
+from .npu import (ENPU_A, ENPU_B, NEUTRON_2TOPS, NPUConfig, compute_job_cost,
+                  cycles_to_ms, dma_cost, effective_tops)
+from .pipeline import CompileResult, CompilerOptions, compile_graph
+from .program import NPUProgram
+
+__all__ = [
+    "Graph", "GraphBuilder", "Op", "Tensor", "reference_execute",
+    "NPUConfig", "NEUTRON_2TOPS", "ENPU_A", "ENPU_B",
+    "compute_job_cost", "dma_cost", "cycles_to_ms", "effective_tops",
+    "CompileResult", "CompilerOptions", "compile_graph", "NPUProgram",
+]

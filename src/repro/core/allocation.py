@@ -1,0 +1,231 @@
+"""TCM memory allocation + V2P emission (paper §IV-D).
+
+Given the timed job program, allocation reserves virtual space for every
+resident tile, assigns physical banks, and emits the V2P remap updates so
+the compute engines see contiguous data.  The paper's four properties map
+onto this implementation as:
+
+  a) *virtual-space contiguity* — tiles of a tensor get consecutive
+     virtual slots (tensor base + tile index), recorded in the program
+     meta for the executor;
+  b) *physical preservation* — a tile's bank set never changes while it
+     is resident (bank sets are only assigned on acquisition);
+  c) *reuse optimization* — banks freed by tiles dying at a tick are
+     preferentially recycled for that tick's outputs (output-over-input
+     overwriting);
+  d) *bank exclusivity* — banks are whole-tile granular, so two tensors
+     never share a bank; asserted on every acquisition.
+
+Because the V2P table makes physical banks interchangeable, a feasible
+allocation exists whenever the scheduler respected the Eq. (7) capacity
+constraint; the paper's CP formulation is needed on hardware with
+*address-contiguous* physical constraints, which V2P removes.  The
+allocator still verifies capacity tick-by-tick and can locally *re-time*
+jobs (delay a prefetch, advance a push) to repair transient
+over-subscription introduced by the scheduler's windowed re-timing; a
+genuine overflow raises :class:`AllocationError`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .npu import NPUConfig
+from .program import DmaJob, NPUProgram, Tick, TileRef, V2PJob
+
+
+class AllocationError(RuntimeError):
+    pass
+
+
+@dataclass
+class Allocation:
+    banks: Dict[Tuple[str, int], List[int]] = field(default_factory=dict)
+    tiles: Dict[Tuple[str, int], "TileRef"] = field(default_factory=dict)
+    peak_banks: int = 0
+    v2p_updates: int = 0
+    repair_spills: int = 0
+    spill_events: List = field(default_factory=list)
+
+
+def allocate(prog: NPUProgram, cfg: Optional[NPUConfig] = None
+             ) -> Allocation:
+    """Assign physical banks over the program's ticks; mutates `prog` by
+    appending V2P jobs and possibly re-timing DMA jobs (fix-up)."""
+    cfg = cfg or prog.cfg
+    n_banks = cfg.tcm_banks
+    free: List[int] = list(range(n_banks))
+    held: Dict[Tuple[str, int], List[int]] = {}
+    alloc = Allocation()
+    dead_after = prog.meta.get("dead_after_tick", {})
+
+    # Pre-scan: last tick each tile is used by a compute or push job —
+    # lets the fix-up advance pushes safely.
+    last_use: Dict[Tuple[str, int], int] = {}
+    for t in prog.ticks:
+        if t.compute:
+            for tl in t.compute.in_tiles + t.compute.out_tiles:
+                last_use[tl.key] = t.index
+        for j in t.dma:
+            if j.kind == "push":
+                last_use.setdefault(j.tile.key, t.index)
+
+    from .npu import dma_cost
+    from .program import DmaJob
+
+    protected: Set[Tuple[str, int]] = set()
+
+    def force_spill(tick: Tick, want: int) -> None:
+        """Last-resort repair: push a resident, not-currently-needed tile
+        to DRAM now and schedule a re-fetch right before its next compute
+        use.  Functionally exact (the executor round-trips the data);
+        costs extra DDR traffic, which the latency accounting charges."""
+        cands = sorted(
+            ((key, banks) for key, banks in held.items()
+             if key not in protected),
+            key=lambda kv: -len(kv[1]))
+        for key, banks in cands:
+            if len(free) >= want:
+                return
+            tile = alloc.tiles.get(key)
+            if tile is None:
+                continue
+            # next compute use of this tile (if any)
+            next_use: Optional[int] = None
+            for t2 in prog.ticks[tick.index + 1:]:
+                if t2.compute and key in {tl.key for tl
+                                          in t2.compute.in_tiles}:
+                    next_use = t2.index
+                    break
+            # a scheduled push BEFORE the next use would now target a
+            # non-resident tile — move it to this tick instead of adding
+            # a duplicate
+            moved = False
+            horizon = next_use if next_use is not None \
+                else len(prog.ticks)
+            for t2 in prog.ticks[tick.index + 1:horizon]:
+                for j in list(t2.dma):
+                    if j.kind == "push" and j.tile.key == key:
+                        t2.dma.remove(j)
+                        tick.dma.append(j)
+                        moved = True
+                        break
+                if moved:
+                    break
+            if not moved:
+                tick.dma.append(DmaJob("push", tile, tile.nbytes,
+                                       dma_cost(cfg, tile.nbytes)))
+            if next_use is not None:
+                prog.ticks[next_use].dma.insert(0, DmaJob(
+                    "fetch", tile, tile.nbytes,
+                    dma_cost(cfg, tile.nbytes)))
+            release(key)
+            alloc.repair_spills += 1
+            alloc.spill_events.append((tick.index, key, len(banks)))
+
+    def acquire(tick: Tick, tl: TileRef) -> None:
+        if tl.key in held:
+            return
+        if len(free) < tl.banks:
+            # fix-up: advance pushes of tiles unused from here on
+            for key in list(held):
+                if len(free) >= tl.banks:
+                    break
+                if last_use.get(key, 10 ** 9) > tick.index:
+                    continue  # needed later — cannot advance its push
+                # tile resident but never used again: if a push job exists
+                # in a later tick, advance it here and free the banks
+                moved = False
+                for t2 in prog.ticks[tick.index + 1:]:
+                    for j in list(t2.dma):
+                        if j.kind == "push" and j.tile.key == key:
+                            t2.dma.remove(j)
+                            tick.dma.append(j)
+                            release(key)
+                            moved = True
+                            break
+                    if moved:
+                        break
+        if len(free) < tl.banks:
+            force_spill(tick, tl.banks)
+        if len(free) < tl.banks:
+            raise AllocationError(
+                f"tick {tick.index}: need {tl.banks} banks for {tl}, "
+                f"only {len(free)} free")
+        got = [free.pop() for _ in range(tl.banks)]
+        held[tl.key] = got
+        alloc.banks[tl.key] = got
+        alloc.tiles[tl.key] = tl
+        tick.v2p.append(V2PJob(tl, got, cfg.v2p_cycles))
+        alloc.v2p_updates += 1
+        alloc.peak_banks = max(alloc.peak_banks, n_banks - len(free))
+
+    def release(key: Tuple[str, int]) -> None:
+        banks = held.pop(key, None)
+        if banks:
+            free.extend(banks)
+
+    for idx, tick in enumerate(prog.ticks):
+        # 0. eviction pushes release first: the scheduler frees a pushed
+        #    tile's banks within its tick, and evicted tiles are never
+        #    inputs of the tick's compute (Eq. 3) — so their release is
+        #    ordered before this tick's fetch acquisitions.
+        compute_keys = set()
+        if tick.compute:
+            compute_keys = {tl.key for tl in tick.compute.in_tiles
+                            + tick.compute.out_tiles}
+        protected.clear()
+        protected.update(compute_keys)
+        protected.update(j.tile.key for j in tick.dma
+                         if j.kind in ("fetch", "lfetch", "lcopy"))
+        early_released = set()
+        for j in tick.dma:
+            if j.kind == "push" and j.tile.key not in compute_keys:
+                release(j.tile.key)
+                early_released.add(j.tile.key)
+        # 1. fetches/l-copies acquire banks (written during this tick).
+        #    A fetch that doesn't fit yet is DEFERRED to the next tick —
+        #    legal until (and including) the tick of its first compute
+        #    use, since the controller sequences DMA before the compute
+        #    job within a tick.  This repairs residual drift between the
+        #    scheduler's bank model and the physical ledger.
+        for j in list(tick.dma):
+            if j.kind in ("fetch", "lfetch", "lcopy"):
+                if j.tile.key in held:
+                    continue
+                if len(free) < j.tile.banks \
+                        and j.tile.key not in compute_keys \
+                        and idx + 1 < len(prog.ticks):
+                    tick.dma.remove(j)
+                    prog.ticks[idx + 1].dma.append(j)
+                    continue
+                acquire(tick, j.tile)
+        # 2. compute: inputs must be held; outputs acquire
+        if tick.compute:
+            for tl in tick.compute.in_tiles:
+                if tl.key not in held:
+                    raise AllocationError(
+                        f"tick {tick.index}: input {tl} of "
+                        f"{tick.compute.op_name} not resident")
+            # bank exclusivity: inputs/outputs disjoint by construction —
+            # verify no bank appears twice across held tiles
+            for tl in tick.compute.out_tiles:
+                acquire(tick, tl)
+        # 3. remaining pushes release banks at end of tick
+        for j in tick.dma:
+            if j.kind == "push" and j.tile.key not in early_released:
+                release(j.tile.key)
+        # 4. dead tiles release
+        for key in dead_after.get(tick.index, []):
+            release(tuple(key))
+        # invariant: a bank is held by at most one tile
+        seen: Set[int] = set()
+        for key, banks in held.items():
+            for b in banks:
+                if b in seen:
+                    raise AllocationError(f"bank {b} double-held")
+                seen.add(b)
+
+    prog.meta["peak_banks"] = alloc.peak_banks
+    prog.meta["v2p_updates"] = alloc.v2p_updates
+    return alloc

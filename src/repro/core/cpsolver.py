@@ -1,0 +1,329 @@
+"""Self-contained 0-1 constraint-programming solver.
+
+The paper formulates tiling/fusion (§IV-C), scheduling (§IV-B) and memory
+allocation (§IV-D) as constraint programs and solves them with an external
+CP solver.  No solver ships in this container, so this module implements a
+real one: pseudo-boolean linear constraints over 0/1 variables, a linear
+(+ pairwise-max) objective, constraint propagation, a caller-supplied warm
+start as incumbent, and depth-first branch & bound with activity-based
+variable ordering under a wall-clock deadline.
+
+Design notes
+------------
+* All model variables are booleans.  The paper's integer quantities
+  (``MemTh_t``, bank extents) are linearized by the model builders — see
+  tiling.py / scheduling.py — so linear pseudo-boolean constraints are
+  sufficient and keep propagation cheap.
+* The scheduling objective Eq. (8) contains ``max(l_DM(t), l_C(t))``
+  per tick; :class:`MaxTerm` supports exactly that shape.  Its lower bound
+  under a partial assignment is ``max_k(lb(expr_k))`` which keeps B&B
+  bounds admissible.
+* ``solve`` always returns the best incumbent found; ``optimal`` is True
+  only when the search space was exhausted within the deadline.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+Terms = Sequence[Tuple[int, int]]  # (var_id, coef)
+
+
+@dataclass
+class MaxTerm:
+    """Objective contribution ``max_k(const_k + sum coef*var)``."""
+
+    exprs: List[Tuple[int, Terms]]  # (const, terms)
+
+    def value(self, vals: Sequence[int]) -> int:
+        return max(c + sum(co * vals[v] for v, co in t)
+                   for c, t in self.exprs)
+
+    def lower_bound(self, vals: Sequence[int], assigned: Sequence[bool]
+                    ) -> int:
+        lb = None
+        for c, t in self.exprs:
+            e = c
+            for v, co in t:
+                if assigned[v]:
+                    e += co * vals[v]
+                elif co < 0:
+                    e += co
+            lb = e if lb is None else max(lb, e)
+        return lb or 0
+
+
+@dataclass
+class _Constraint:
+    vars: List[int]
+    coefs: List[int]
+    rhs: int               # sum coefs*x <= rhs
+    name: str = ""
+
+
+@dataclass
+class Solution:
+    values: Dict[int, int]
+    objective: float
+    optimal: bool
+    feasible: bool
+    nodes: int
+    wall_s: float
+
+    def __getitem__(self, var: int) -> int:
+        return self.values[var]
+
+
+class CPModel:
+    def __init__(self, name: str = "model"):
+        self.name = name
+        self.n_vars = 0
+        self.var_names: List[str] = []
+        self.cons: List[_Constraint] = []
+        self.obj_terms: List[Tuple[int, int]] = []
+        self.obj_const: int = 0
+        self.max_terms: List[MaxTerm] = []
+        self.fixed: Dict[int, int] = {}
+
+    # ---- variables ----
+    def bool(self, name: str = "") -> int:
+        vid = self.n_vars
+        self.n_vars += 1
+        self.var_names.append(name or f"x{vid}")
+        return vid
+
+    def fix(self, var: int, val: int) -> None:
+        self.fixed[var] = int(val)
+
+    # ---- constraints (normalized to <=) ----
+    def add(self, terms: Terms, sense: str, rhs: int, name: str = "") -> None:
+        terms = [(v, c) for v, c in terms if c != 0]
+        if sense == "<=":
+            self.cons.append(_Constraint([v for v, _ in terms],
+                                         [c for _, c in terms], rhs, name))
+        elif sense == ">=":
+            self.cons.append(_Constraint([v for v, _ in terms],
+                                         [-c for _, c in terms], -rhs, name))
+        elif sense == "==":
+            self.add(terms, "<=", rhs, name)
+            self.add(terms, ">=", rhs, name)
+        else:
+            raise ValueError(sense)
+
+    def add_implies(self, a: int, b: int, name: str = "") -> None:
+        """a -> b   ==   a - b <= 0."""
+        self.add([(a, 1), (b, -1)], "<=", 0, name)
+
+    def add_at_most_one(self, vars_: Iterable[int], name: str = "") -> None:
+        self.add([(v, 1) for v in vars_], "<=", 1, name)
+
+    def add_exactly_one(self, vars_: Iterable[int], name: str = "") -> None:
+        self.add([(v, 1) for v in vars_], "==", 1, name)
+
+    # ---- objective ----
+    def minimize(self, terms: Terms = (), const: int = 0,
+                 max_terms: Sequence[MaxTerm] = ()) -> None:
+        self.obj_terms = list(terms)
+        self.obj_const = const
+        self.max_terms = list(max_terms)
+
+    def objective_value(self, vals: Sequence[int]) -> int:
+        o = self.obj_const + sum(c * vals[v] for v, c in self.obj_terms)
+        for mt in self.max_terms:
+            o += mt.value(vals)
+        return o
+
+    def check(self, vals: Sequence[int]) -> List[str]:
+        """Return names of violated constraints (empty == feasible)."""
+        bad = []
+        for con in self.cons:
+            s = sum(c * vals[v] for v, c in zip(con.vars, con.coefs))
+            if s > con.rhs:
+                bad.append(con.name or "<unnamed>")
+        for v, val in self.fixed.items():
+            if vals[v] != val:
+                bad.append(f"fixed:{self.var_names[v]}")
+        return bad
+
+
+# --------------------------------------------------------------------------
+# Solver
+# --------------------------------------------------------------------------
+
+
+class _SearchState:
+    __slots__ = ("vals", "assigned", "minsum", "trail")
+
+    def __init__(self, n_vars: int, cons: List[_Constraint]):
+        self.vals = [0] * n_vars
+        self.assigned = [False] * n_vars
+        # minsum[c] = sum of min contribution of every var in constraint c
+        self.minsum = [sum(min(0, co) for co in c.coefs) for c in cons]
+        self.trail: List[Tuple[int, List[Tuple[int, int]]]] = []
+
+
+def solve(model: CPModel, time_limit_s: float = 10.0,
+          warm_start: Optional[Dict[int, int]] = None) -> Solution:
+    t0 = time.monotonic()
+    deadline = t0 + time_limit_s
+    n = model.n_vars
+    cons = model.cons
+
+    # occurrence lists: var -> [(constraint index, coef)]
+    occ: List[List[Tuple[int, int]]] = [[] for _ in range(n)]
+    for ci, c in enumerate(cons):
+        for v, co in zip(c.vars, c.coefs):
+            occ[v].append((ci, co))
+
+    obj_coef = [0] * n
+    for v, c in model.obj_terms:
+        obj_coef[v] += c
+
+    # ---- incumbent from warm start ----
+    best_vals: Optional[List[int]] = None
+    best_obj = float("inf")
+    if warm_start is not None:
+        ws = [0] * n
+        for v, val in warm_start.items():
+            ws[v] = int(val)
+        for v, val in model.fixed.items():
+            ws[v] = val
+        if not model.check(ws):
+            best_vals = ws
+            best_obj = model.objective_value(ws)
+
+    st = _SearchState(n, cons)
+    nodes = 0
+
+    def assign(v: int, val: int) -> bool:
+        """Assign and update minsums.  Returns False on conflict."""
+        changed: List[Tuple[int, int]] = []
+        st.vals[v] = val
+        st.assigned[v] = True
+        ok = True
+        for ci, co in occ[v]:
+            old_min = min(0, co)
+            new_min = co * val
+            if new_min != old_min:
+                st.minsum[ci] += new_min - old_min
+                changed.append((ci, new_min - old_min))
+            if st.minsum[ci] > cons[ci].rhs:
+                ok = False
+        st.trail.append((v, changed))
+        return ok
+
+    def undo() -> None:
+        v, changed = st.trail.pop()
+        st.assigned[v] = False
+        st.vals[v] = 0
+        for ci, delta in changed:
+            st.minsum[ci] -= delta
+
+    def propagate(level_mark: int) -> bool:
+        """Unit-force vars whose assignment is implied.  Appends to trail;
+        caller rewinds to level_mark on failure."""
+        moved = True
+        while moved:
+            moved = False
+            for ci, c in enumerate(cons):
+                slack = c.rhs - st.minsum[ci]
+                if slack < 0:
+                    return False
+                for v, co in zip(c.vars, c.coefs):
+                    if st.assigned[v]:
+                        continue
+                    if co > 0 and co > slack:
+                        if not assign(v, 0):
+                            return False
+                        moved = True
+                    elif co < 0 and -co > slack:
+                        if not assign(v, 1):
+                            return False
+                        moved = True
+        return True
+
+    def obj_lb() -> float:
+        lb = model.obj_const
+        for v in range(n):
+            if st.assigned[v]:
+                lb += obj_coef[v] * st.vals[v]
+            elif obj_coef[v] < 0:
+                lb += obj_coef[v]
+        for mt in model.max_terms:
+            lb += mt.lower_bound(st.vals, st.assigned)
+        return lb
+
+    # static branching order: objective-coefficient magnitude, then index
+    order = sorted(range(n), key=lambda v: (-abs(obj_coef[v]), v))
+
+    # apply fixed vars up front
+    root_ok = True
+    for v, val in model.fixed.items():
+        if not assign(v, val):
+            root_ok = False
+    if root_ok:
+        root_ok = propagate(0)
+
+    def dfs(depth: int) -> None:
+        nonlocal nodes, best_vals, best_obj
+        if time.monotonic() > deadline:
+            raise TimeoutError
+        nodes += 1
+        if obj_lb() >= best_obj:
+            return
+        # pick next unassigned var
+        v = next((u for u in order if not st.assigned[u]), None)
+        if v is None:
+            obj = model.objective_value(st.vals)
+            if obj < best_obj:
+                best_obj = obj
+                best_vals = list(st.vals)
+            return
+        # value order: cheaper objective contribution first
+        first = 0 if obj_coef[v] >= 0 else 1
+        for val in (first, 1 - first):
+            mark = len(st.trail)
+            ok = assign(v, val)
+            if ok:
+                ok = propagate(mark)
+            if ok:
+                dfs(depth + 1)
+            while len(st.trail) > mark:
+                undo()
+
+    optimal = False
+    if root_ok:
+        try:
+            dfs(0)
+            optimal = True
+        except (TimeoutError, RecursionError):
+            optimal = False
+
+    wall = time.monotonic() - t0
+    if best_vals is None:
+        return Solution({}, float("inf"), optimal, False, nodes, wall)
+    return Solution({v: best_vals[v] for v in range(n)},
+                    float(best_obj), optimal, True, nodes, wall)
+
+
+def brute_force(model: CPModel) -> Solution:
+    """Exhaustive reference solver for tests (<= ~20 vars)."""
+    n = model.n_vars
+    assert n <= 22, "brute_force is for tiny models"
+    best = None
+    best_obj = float("inf")
+    for mask in range(1 << n):
+        vals = [(mask >> i) & 1 for i in range(n)]
+        if any(vals[v] != val for v, val in model.fixed.items()):
+            continue
+        if model.check(vals):
+            continue
+        o = model.objective_value(vals)
+        if o < best_obj:
+            best_obj = o
+            best = vals
+    if best is None:
+        return Solution({}, float("inf"), True, False, 1 << n, 0.0)
+    return Solution({v: best[v] for v in range(n)}, float(best_obj),
+                    True, True, 1 << n, 0.0)

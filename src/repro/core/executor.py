@@ -1,0 +1,339 @@
+"""Functional banked-TCM simulator.
+
+Replays a compiled :class:`NPUProgram` tick by tick against real tensor
+data and asserts that the compiler's output is *correct*, not just fast:
+
+  * every compute input is resident in TCM when used (Eq. 2),
+  * tiles only enter TCM via fetch/compute and leave via push/death
+    (Eq. 1 persistency),
+  * banks are never double-held (allocation property d),
+  * model outputs land in DRAM bit-identical (float32 tolerance) to the
+    pure-numpy :func:`repro.core.ir.reference_execute` oracle.
+
+This is the repro analogue of running the compiled binary on silicon.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .ir import Graph, Op, _apply_act, _conv2d_ref, reference_execute
+from .program import NPUProgram, TileRef
+from .tiling import TilingResult, in_row_range
+
+
+class ExecutionError(RuntimeError):
+    pass
+
+
+@dataclass
+class ExecutionReport:
+    outputs: Dict[str, np.ndarray]
+    max_err: float
+    ticks: int
+    ddr_bytes: int
+    ok: bool = True
+
+
+# --------------------------------------------------------------------------
+# Row/channel gathering from resident tiles
+# --------------------------------------------------------------------------
+
+
+class _TcmState:
+    def __init__(self, g: Graph):
+        self.g = g
+        self.data: Dict[Tuple[str, int], np.ndarray] = {}
+        self.resident: set = set()
+
+    def put(self, tl: TileRef, arr: np.ndarray) -> None:
+        self.data[tl.key] = arr
+        self.resident.add(tl.key)
+
+    def drop(self, key: Tuple[str, int]) -> None:
+        self.resident.discard(key)
+        self.data.pop(key, None)
+
+    def gather_rows(self, tiling: TilingResult, tensor: str,
+                    a: int, b: int) -> np.ndarray:
+        """Assemble rows [a, b) of `tensor` from resident tiles."""
+        tt = tiling.tiles[tensor]
+        shape = self.g.tensors[tensor].shape
+        if tt.axis == "chan":
+            parts = []
+            for tl in tt.tiles:
+                if tl.key not in self.resident:
+                    raise ExecutionError(f"{tl} not resident")
+                parts.append(self.data[tl.key])
+            full = np.concatenate(parts, axis=-1)
+            return full[a:b] if len(shape) == 3 else full
+        parts = []
+        covered = a
+        for tl in sorted(tt.covering(a, b), key=lambda t: t.r0):
+            if tl.key not in self.resident:
+                raise ExecutionError(f"{tl} not resident")
+            arr = self.data[tl.key]
+            lo = max(a, tl.r0)
+            hi = min(b, tl.r1)
+            if lo != covered:
+                raise ExecutionError(
+                    f"gap gathering {tensor}[{a}:{b}) at row {covered}")
+            parts.append(arr[lo - tl.r0: hi - tl.r0])
+            covered = hi
+        if covered < b:
+            raise ExecutionError(
+                f"rows {covered}:{b} of {tensor} missing from TCM")
+        return np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+
+    def gather_param(self, tiling: TilingResult, tensor: str,
+                     c0: int, c1: int) -> np.ndarray:
+        tt = tiling.tiles[tensor]
+        parts = []
+        for tl in sorted(tt.covering_chan(c0, c1), key=lambda t: t.r0):
+            if tl.key not in self.resident:
+                raise ExecutionError(f"param {tl} not resident")
+            arr = self.data[tl.key]
+            lo, hi = max(c0, tl.r0), min(c1, tl.r1)
+            parts.append(arr[lo - tl.r0: hi - tl.r0])
+        out = np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+        if out.shape[0] != c1 - c0:
+            raise ExecutionError(f"param {tensor}[{c0}:{c1}) incomplete")
+        return out
+
+
+# --------------------------------------------------------------------------
+# Per-step computation (mirrors ir.reference_execute on a row window)
+# --------------------------------------------------------------------------
+
+
+def _run_step(g: Graph, tiling: TilingResult, tcm: _TcmState, op: Op,
+              r0: int, r1: int, axis: str) -> Dict[str, np.ndarray]:
+    a = op.attrs
+    k = op.kind
+    out0 = g.tensors[op.outputs[0]]
+    H = out0.shape[0] if len(out0.shape) == 3 else 1
+
+    if axis == "chan":
+        c0, c1 = r0, r1
+        rr0, rr1 = 0, H
+    else:
+        c0 = 0
+        c1 = out0.shape[-1]
+        rr0, rr1 = r0, r1
+
+    def rows_of(x, lo, hi):
+        return tcm.gather_rows(tiling, x.name, lo, hi)
+
+    if k in ("conv", "dwconv"):
+        x = g.act_inputs(op)[0]
+        ih = x.shape[0]
+        kh = a["k"][0]
+        s = a["stride"]
+        pt, pb, pl, pr = a["pad"]
+        u0 = rr0 * s - pt
+        u1 = (rr1 - 1) * s - pt + kh
+        lo, hi = max(0, u0), min(ih, u1)
+        win = rows_of(x, lo, hi)
+        top, bot = max(0, -u0), max(0, u1 - ih)
+        w = tcm.gather_param(tiling, op.inputs[1], c0, c1)
+        if k == "dwconv" and axis == "chan":
+            win = win[:, :, c0:c1]
+        y = _conv2d_ref(win, w, s, (top, bot, pl, pr), k == "dwconv")
+        if len(op.inputs) > 2:
+            y = y + tcm.gather_param(tiling, op.inputs[2], c0, c1)
+        y = _apply_act(y, a.get("act", "none"))
+    elif k == "fc":
+        x = g.act_inputs(op)[0]
+        xin = rows_of(x, 0, x.shape[0] if len(x.shape) == 3 else 1)
+        w = tcm.gather_param(tiling, op.inputs[1], c0, c1)[:, 0, 0, :]
+        y = (w @ xin.reshape(-1))
+        if len(op.inputs) > 2:
+            y = y + tcm.gather_param(tiling, op.inputs[2], c0, c1)
+        y = _apply_act(y, a.get("act", "none")).reshape(1, 1, -1)
+    elif k == "add":
+        xs = [rows_of(x, *in_row_range(op, rr0, rr1,
+                                       x.shape[0] if len(x.shape) == 3
+                                       else 1))
+              for x in g.act_inputs(op)]
+        y = _apply_act(xs[0] + xs[1], a.get("act", "none"))
+    elif k == "mul":
+        xs = []
+        for x in g.act_inputs(op):
+            ih = x.shape[0] if len(x.shape) == 3 else 1
+            lo, hi = in_row_range(op, rr0, rr1, ih)
+            xs.append(rows_of(x, lo, hi))
+        y = xs[0] * xs[1]
+    elif k == "scalar":
+        x = rows_of(g.act_inputs(op)[0], rr0, rr1)
+        v = a["value"]
+        y = {"add": x + v, "mul": x * v, "div": x / v}[a["op"]]
+    elif k == "act":
+        y = _apply_act(rows_of(g.act_inputs(op)[0], rr0, rr1), a["act"])
+    elif k == "maxpool":
+        x = g.act_inputs(op)[0]
+        ih = x.shape[0]
+        kk, s = a["k"], a["stride"]
+        pt, pb, pl, pr = a["pad"]
+        u0 = rr0 * s - pt
+        u1 = (rr1 - 1) * s - pt + kk
+        lo, hi = max(0, u0), min(ih, u1)
+        win = rows_of(x, lo, hi)
+        top, bot = max(0, -u0), max(0, u1 - ih)
+        xp = np.pad(win, ((top, bot), (pl, pr), (0, 0)),
+                    constant_values=-np.inf)
+        Hp, Wp, C = xp.shape
+        oh = (Hp - kk) // s + 1
+        ow = (Wp - kk) // s + 1
+        y = np.full((oh, ow, C), -np.inf, dtype=np.float32)
+        for i in range(kk):
+            for j in range(kk):
+                y = np.maximum(y, xp[i:i + oh * s:s, j:j + ow * s:s, :])
+    elif k == "avgpool":
+        x = g.act_inputs(op)[0]
+        ih = x.shape[0]
+        if a["k"] == 0:
+            win = rows_of(x, 0, ih)
+            y = win.mean(axis=(0, 1), keepdims=True)
+        else:
+            kk, s = a["k"], a["stride"]
+            pt, pb, pl, pr = a["pad"]
+            u0 = rr0 * s - pt
+            u1 = (rr1 - 1) * s - pt + kk
+            lo, hi = max(0, u0), min(ih, u1)
+            win = rows_of(x, lo, hi)
+            top, bot = max(0, -u0), max(0, u1 - ih)
+            xp = np.pad(win, ((top, bot), (pl, pr), (0, 0)))
+            Hp, Wp, C = xp.shape
+            oh = (Hp - kk) // s + 1
+            ow = (Wp - kk) // s + 1
+            y = np.zeros((oh, ow, C), dtype=np.float32)
+            for i in range(kk):
+                for j in range(kk):
+                    y += xp[i:i + oh * s:s, j:j + ow * s:s, :]
+            y = y / (kk * kk)
+    elif k == "resize":
+        f = a["factor"]
+        lo, hi = rr0 // f, (rr1 + f - 1) // f
+        win = rows_of(g.act_inputs(op)[0], lo, hi)
+        y = np.repeat(np.repeat(win, f, axis=0), f, axis=1)
+        y = y[rr0 - lo * f: rr1 - lo * f]
+    elif k == "concat":
+        xs = [rows_of(x, rr0, rr1) for x in g.act_inputs(op)]
+        y = np.concatenate(xs, axis=2)
+    elif k == "split":
+        xin = rows_of(g.act_inputs(op)[0], rr0, rr1)
+        parts = np.split(xin, a["sections"], axis=2)
+        return {o: p for o, p in zip(op.outputs, parts)}
+    else:  # pragma: no cover
+        raise NotImplementedError(k)
+    return {op.outputs[0]: y}
+
+
+# --------------------------------------------------------------------------
+# Program replay
+# --------------------------------------------------------------------------
+
+
+def execute(prog: NPUProgram, g: Graph, tiling: TilingResult,
+            inputs: Dict[str, np.ndarray],
+            weights: Dict[str, np.ndarray],
+            check: bool = True, atol: float = 1e-4) -> ExecutionReport:
+    dram: Dict[str, np.ndarray] = {}
+    written: Dict[str, np.ndarray] = {}
+    for t in g.tensors.values():
+        if t.kind == "input":
+            dram[t.name] = np.asarray(inputs[t.name], dtype=np.float32)
+        elif t.is_param:
+            dram[t.name] = np.asarray(weights[t.name], dtype=np.float32)
+
+    tcm = _TcmState(g)
+    dead_after = prog.meta.get("dead_after_tick", {})
+    ddr = 0
+
+    def tile_slice(tl: TileRef, arr: np.ndarray) -> np.ndarray:
+        t = g.tensors[tl.tensor]
+        if t.is_param:
+            return arr[tl.r0:tl.r1]
+        if tl.axis == "chan":
+            return arr[..., tl.r0:tl.r1]
+        return arr[tl.r0:tl.r1]
+
+    for tick in prog.ticks:
+        for j in tick.dma:
+            if j.kind in ("fetch", "lfetch"):
+                src = dram.get(j.tile.tensor)
+                if src is None:
+                    raise ExecutionError(
+                        f"tick {tick.index}: fetch of {j.tile} but tensor "
+                        f"not in DRAM (never pushed?)")
+                tcm.put(j.tile, tile_slice(j.tile, src))
+                ddr += j.nbytes
+            elif j.kind == "lcopy":
+                pass  # halo duplication — layout-only, no data change
+        if tick.compute:
+            cj = tick.compute
+            op = g.op(cj.op_name)
+            # derive the step range from the out tiles
+            axis = cj.out_tiles[0].axis
+            r0 = min(tl.r0 for tl in cj.out_tiles
+                     if tl.tensor == op.outputs[0])
+            r1 = max(tl.r1 for tl in cj.out_tiles
+                     if tl.tensor == op.outputs[0])
+            results = _run_step(g, tiling, tcm, op, r0, r1, axis)
+            for tl in cj.out_tiles:
+                y = results[tl.tensor]
+                if axis == "chan":
+                    tcm.put(tl, y[..., tl.r0 - r0: tl.r1 - r0])
+                else:
+                    tcm.put(tl, y[tl.r0 - r0: tl.r1 - r0])
+        for j in tick.dma:
+            if j.kind == "push":
+                t = g.tensors[j.tile.tensor]
+                if j.tile.key not in tcm.resident:
+                    raise ExecutionError(
+                        f"tick {tick.index}: push of non-resident {j.tile}")
+                if t.name not in dram:
+                    dram[t.name] = np.zeros(t.shape, dtype=np.float32)
+                    written[t.name] = np.zeros(t.shape, dtype=bool)
+                arr = tcm.data[j.tile.key]
+                if t.is_param:
+                    dram[t.name][j.tile.r0:j.tile.r1] = arr
+                elif j.tile.axis == "chan":
+                    dram[t.name][..., j.tile.r0:j.tile.r1] = arr
+                    if t.name in written:
+                        written[t.name][..., j.tile.r0:j.tile.r1] = True
+                else:
+                    dram[t.name][j.tile.r0:j.tile.r1] = arr
+                    if t.name in written:
+                        written[t.name][j.tile.r0:j.tile.r1] = True
+                tcm.drop(j.tile.key)
+                ddr += j.nbytes
+        for key in dead_after.get(tick.index, []):
+            tcm.drop(tuple(key))
+
+    max_err = 0.0
+    outputs: Dict[str, np.ndarray] = {}
+    if check:
+        ref = reference_execute(g, inputs, weights)
+        for t in g.outputs:
+            if t.name not in dram:
+                raise ExecutionError(f"output {t.name} never pushed to DRAM")
+            if t.name in written and not written[t.name].all():
+                raise ExecutionError(f"output {t.name} partially written")
+            got = dram[t.name]
+            want = ref[t.name]
+            err = float(np.max(np.abs(got - want))) if got.size else 0.0
+            scale = float(np.max(np.abs(want)) + 1e-6)
+            if err > atol * max(1.0, scale):
+                raise ExecutionError(
+                    f"output {t.name} mismatch: max|err|={err:.3e} "
+                    f"(scale {scale:.3e})")
+            max_err = max(max_err, err)
+            outputs[t.name] = got
+    else:
+        outputs = {t.name: dram.get(t.name) for t in g.outputs}
+
+    return ExecutionReport(outputs, max_err, len(prog.ticks), ddr)

@@ -1,0 +1,566 @@
+"""Graph IR for the eIQ-Neutron compiler mid-end.
+
+The paper's compiler front-end ingests a LiteRT model and lowers it to an
+internal IR of *tensors* and *operators* (paper §IV).  This module is that
+IR: a static, batch-1, HWC-layout dataflow graph with
+
+  * shape inference for every operator the vision benchmarks need,
+  * MAC/byte accounting (drives the cost model and Table IV checks),
+  * a pure-numpy reference executor (the functional oracle every compiled
+    NPU program is validated against),
+  * topological utilities used by the tiling / fusion / scheduling passes.
+
+Activations use (H, W, C) layout; parameters use (outC, fH, fW, inC) — the
+exact layouts of paper Algorithm 1.  Batch is always 1 (edge inference).
+All tensors are nominally INT8 (1 byte/element) for memory accounting; the
+reference executor computes in float32 and the quantization is a
+scale-per-tensor affine model, matching the paper's INT8 deployment.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Tensors
+# --------------------------------------------------------------------------
+
+ACT_KINDS = ("input", "activation", "output")
+
+
+@dataclass
+class Tensor:
+    """A logical tensor in the graph.
+
+    kind:
+      - "input":      model input (starts in DRAM, paper Fig. 5)
+      - "activation": intermediate feature map (starts N/E)
+      - "output":     model output (must end in DRAM)
+      - "parameter":  weights/bias (starts in DRAM)
+    shape: activations (H, W, C); parameters (outC, fH, fW, inC) or (C,) bias.
+    """
+
+    name: str
+    shape: Tuple[int, ...]
+    kind: str = "activation"
+    dtype: str = "int8"
+    producer: Optional[str] = None          # op name, None for inputs/params
+    consumers: List[str] = field(default_factory=list)
+    scale: float = 1.0                      # affine quant scale (float ref)
+
+    @property
+    def elems(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    @property
+    def bytes(self) -> int:
+        per = {"int8": 1, "int16": 2, "int32": 4, "float32": 4}[self.dtype]
+        return self.elems * per
+
+    @property
+    def is_param(self) -> bool:
+        return self.kind == "parameter"
+
+    @property
+    def hwc(self) -> Tuple[int, int, int]:
+        assert self.kind in ACT_KINDS and len(self.shape) == 3, self
+        return self.shape  # type: ignore[return-value]
+
+
+# --------------------------------------------------------------------------
+# Operators
+# --------------------------------------------------------------------------
+
+#: op kinds understood by the lowering / cost model.
+OP_KINDS = (
+    "conv",        # conv2d; attrs: stride, pad (explicit 4-tuple), act
+    "dwconv",      # depthwise conv2d (groups == C)
+    "fc",          # fully connected == 1x1 conv on (1,1,C) (paper §IV-A)
+    "add",         # elementwise add (paired depthwise, paper §IV-A)
+    "mul",         # Hadamard
+    "scalar",      # op with a constant scalar (1x1 depthwise, paper §IV-A)
+    "act",         # standalone activation
+    "maxpool",     # attrs: k, stride, pad
+    "avgpool",     # attrs: k, stride, pad (k == 0 -> global)
+    "resize",      # nearest-neighbour upsample; attrs: factor
+    "concat",      # channel concat
+    "split",       # channel split; attrs: sections -> multiple outputs
+    "pad",         # spatial zero-pad
+    "format",      # TCM format conversion (inserted by the compiler)
+    "reshape",     # logical reshape (free at runtime, kept for heads)
+)
+
+ACTIVATIONS = ("none", "relu", "relu6", "hswish", "hsigmoid", "silu",
+               "sigmoid", "gelu", "mish", "sqrelu", "leaky")
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    inputs: List[str]                 # tensor names (activations first)
+    outputs: List[str]                # tensor names
+    attrs: Dict = field(default_factory=dict)
+
+    @property
+    def output(self) -> str:
+        return self.outputs[0]
+
+
+# --------------------------------------------------------------------------
+# Graph
+# --------------------------------------------------------------------------
+
+
+class Graph:
+    def __init__(self, name: str):
+        self.name = name
+        self.tensors: Dict[str, Tensor] = {}
+        self.ops: List[Op] = []
+        self._op_index: Dict[str, Op] = {}
+
+    # -- construction -------------------------------------------------------
+    def add_tensor(self, t: Tensor) -> Tensor:
+        if t.name in self.tensors:
+            raise ValueError(f"duplicate tensor {t.name}")
+        self.tensors[t.name] = t
+        return t
+
+    def add_op(self, op: Op) -> Op:
+        if op.name in self._op_index:
+            raise ValueError(f"duplicate op {op.name}")
+        for i in op.inputs:
+            self.tensors[i].consumers.append(op.name)
+        for o in op.outputs:
+            self.tensors[o].producer = op.name
+        self.ops.append(op)
+        self._op_index[op.name] = op
+        return op
+
+    def op(self, name: str) -> Op:
+        return self._op_index[name]
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def inputs(self) -> List[Tensor]:
+        return [t for t in self.tensors.values() if t.kind == "input"]
+
+    @property
+    def outputs(self) -> List[Tensor]:
+        return [t for t in self.tensors.values() if t.kind == "output"]
+
+    @property
+    def params(self) -> List[Tensor]:
+        return [t for t in self.tensors.values() if t.is_param]
+
+    def act_inputs(self, op: Op) -> List[Tensor]:
+        return [self.tensors[i] for i in op.inputs
+                if not self.tensors[i].is_param]
+
+    def param_inputs(self, op: Op) -> List[Tensor]:
+        return [self.tensors[i] for i in op.inputs if self.tensors[i].is_param]
+
+    def topo_ops(self) -> List[Op]:
+        """Topologically ordered ops (graph build order is already topo,
+        but verify — the passes rely on it)."""
+        ready: set = {t.name for t in self.tensors.values()
+                      if t.producer is None}
+        out: List[Op] = []
+        pending = list(self.ops)
+        guard = 0
+        while pending:
+            guard += 1
+            if guard > len(self.ops) + 2:
+                raise RuntimeError(f"graph {self.name} has a cycle")
+            rest = []
+            for op in pending:
+                if all(i in ready for i in op.inputs):
+                    out.append(op)
+                    ready.update(op.outputs)
+                else:
+                    rest.append(op)
+            pending = rest
+        return out
+
+    # -- accounting ---------------------------------------------------------
+    def op_macs(self, op: Op) -> int:
+        """Multiply-accumulate count of one op (for Table IV / cost model)."""
+        k = op.kind
+        if k in ("conv", "fc"):
+            w = self.param_inputs(op)[0]
+            oh, ow, oc = self.tensors[op.output].hwc
+            outc, fh, fw, inc = w.shape
+            return oh * ow * oc * fh * fw * inc
+        if k == "dwconv":
+            w = self.param_inputs(op)[0]
+            oh, ow, oc = self.tensors[op.output].hwc
+            _, fh, fw, _ = w.shape
+            return oh * ow * oc * fh * fw
+        if k in ("add", "mul", "scalar", "act"):
+            return self.tensors[op.output].elems
+        if k in ("maxpool", "avgpool"):
+            kk = op.attrs.get("k", 2) or 2
+            return self.tensors[op.output].elems * kk * kk
+        return 0
+
+    def total_macs(self) -> int:
+        return sum(self.op_macs(op) for op in self.ops)
+
+    def total_param_bytes(self) -> int:
+        return sum(t.bytes for t in self.params)
+
+    def stats(self) -> Dict[str, float]:
+        return {
+            "ops": len(self.ops),
+            "gmacs": self.total_macs() / 1e9,
+            "params_m": sum(t.elems for t in self.params) / 1e6,
+            "param_bytes": self.total_param_bytes(),
+        }
+
+    def __repr__(self) -> str:  # pragma: no cover
+        s = self.stats()
+        return (f"Graph({self.name}: {s['ops']} ops, {s['gmacs']:.2f} GMACs,"
+                f" {s['params_m']:.1f}M params)")
+
+
+# --------------------------------------------------------------------------
+# Builder — shape-inferring convenience layer
+# --------------------------------------------------------------------------
+
+
+def _pair(v) -> Tuple[int, int]:
+    return (v, v) if isinstance(v, int) else tuple(v)  # type: ignore
+
+
+def conv_out_dim(inp: int, k: int, s: int, p0: int, p1: int) -> int:
+    return (inp + p0 + p1 - k) // s + 1
+
+
+def same_pad(inp: int, k: int, s: int) -> Tuple[int, int]:
+    """TF 'SAME' padding split (left/top gets the smaller half)."""
+    out = math.ceil(inp / s)
+    total = max(0, (out - 1) * s + k - inp)
+    return total // 2, total - total // 2
+
+
+class GraphBuilder:
+    """Fluent builder; returns tensor names.  Weights are created as
+    deterministic pseudo-random parameters so the reference executor is
+    reproducible without any external data."""
+
+    def __init__(self, name: str, seed: int = 0):
+        self.g = Graph(name)
+        self._ctr = 0
+        self._rng = np.random.default_rng(seed)
+        self._weights: Dict[str, np.ndarray] = {}
+
+    # ---- naming ----
+    def _n(self, prefix: str) -> str:
+        self._ctr += 1
+        return f"{prefix}_{self._ctr}"
+
+    # ---- tensors ----
+    def input(self, shape: Tuple[int, int, int], name: str = "input") -> str:
+        self.g.add_tensor(Tensor(name, shape, kind="input"))
+        return name
+
+    def mark_output(self, name: str) -> str:
+        self.g.tensors[name].kind = "output"
+        return name
+
+    def _act_tensor(self, shape, prefix="t") -> str:
+        nm = self._n(prefix)
+        self.g.add_tensor(Tensor(nm, tuple(int(x) for x in shape)))
+        return nm
+
+    def _param(self, shape, prefix="w") -> str:
+        nm = self._n(prefix)
+        self.g.add_tensor(Tensor(nm, tuple(int(x) for x in shape),
+                                 kind="parameter"))
+        # deterministic small-int weights (int8-representable)
+        self._weights[nm] = (
+            self._rng.integers(-4, 5, size=shape).astype(np.float32) / 16.0)
+        return nm
+
+    def weight_array(self, name: str) -> np.ndarray:
+        return self._weights[name]
+
+    # ---- ops ----
+    def conv(self, x: str, out_c: int, k: int = 3, s: int = 1,
+             act: str = "none", pad: str = "same", bias: bool = True,
+             groups: int = 1) -> str:
+        h, w, c = self.g.tensors[x].hwc
+        kh, kw = _pair(k)
+        if pad == "same":
+            pt, pb = same_pad(h, kh, s)
+            pl, pr = same_pad(w, kw, s)
+        elif pad == "valid":
+            pt = pb = pl = pr = 0
+        else:
+            pt, pb, pl, pr = pad  # explicit
+        oh = conv_out_dim(h, kh, s, pt, pb)
+        ow = conv_out_dim(w, kw, s, pl, pr)
+        if groups == c and out_c == c:
+            wshape = (out_c, kh, kw, 1)
+            kind = "dwconv"
+        elif groups == 1:
+            wshape = (out_c, kh, kw, c)
+            kind = "conv"
+        else:
+            raise NotImplementedError("only dense or depthwise groups")
+        wt = self._param(wshape)
+        ins = [x, wt]
+        if bias:
+            ins.append(self._param((out_c,), prefix="b"))
+        out = self._act_tensor((oh, ow, out_c))
+        self.g.add_op(Op(self._n(kind), kind, ins, [out], {
+            "stride": s, "k": (kh, kw), "pad": (pt, pb, pl, pr), "act": act,
+        }))
+        return out
+
+    def dwconv(self, x: str, k: int = 3, s: int = 1, act: str = "none",
+               pad: str = "same", bias: bool = True) -> str:
+        c = self.g.tensors[x].hwc[2]
+        return self.conv(x, c, k=k, s=s, act=act, pad=pad, bias=bias,
+                         groups=c)
+
+    def fc(self, x: str, out_c: int, act: str = "none",
+           bias: bool = True) -> str:
+        shp = self.g.tensors[x].shape
+        c = shp[-1] if len(shp) == 1 else shp[2]
+        if len(shp) == 3 and shp[:2] != (1, 1):
+            raise ValueError("fc expects (1,1,C) — use global pool first")
+        wt = self._param((out_c, 1, 1, c))
+        ins = [x, wt]
+        if bias:
+            ins.append(self._param((out_c,), prefix="b"))
+        out = self._act_tensor((1, 1, out_c))
+        self.g.add_op(Op(self._n("fc"), "fc", ins, [out], {"act": act}))
+        return out
+
+    def add(self, a: str, b: str, act: str = "none") -> str:
+        sa = self.g.tensors[a].hwc
+        assert sa == self.g.tensors[b].hwc, (sa, self.g.tensors[b].hwc)
+        out = self._act_tensor(sa)
+        self.g.add_op(Op(self._n("add"), "add", [a, b], [out], {"act": act}))
+        return out
+
+    def mul(self, a: str, b: str) -> str:
+        sa = self.g.tensors[a].hwc
+        sb = self.g.tensors[b].hwc
+        # broadcast (1,1,C) * (H,W,C) for SE blocks
+        out_shape = tuple(max(x, y) for x, y in zip(sa, sb))
+        out = self._act_tensor(out_shape)
+        self.g.add_op(Op(self._n("mul"), "mul", [a, b], [out], {}))
+        return out
+
+    def activation(self, x: str, act: str) -> str:
+        assert act in ACTIVATIONS, act
+        out = self._act_tensor(self.g.tensors[x].hwc)
+        self.g.add_op(Op(self._n("act"), "act", [x], [out], {"act": act}))
+        return out
+
+    def maxpool(self, x: str, k: int = 2, s: Optional[int] = None,
+                pad: str = "valid") -> str:
+        s = s or k
+        h, w, c = self.g.tensors[x].hwc
+        if pad == "same":
+            pt, pb = same_pad(h, k, s)
+            pl, pr = same_pad(w, k, s)
+        else:
+            pt = pb = pl = pr = 0
+        oh = conv_out_dim(h, k, s, pt, pb)
+        ow = conv_out_dim(w, k, s, pl, pr)
+        out = self._act_tensor((oh, ow, c))
+        self.g.add_op(Op(self._n("maxpool"), "maxpool", [x], [out],
+                         {"k": k, "stride": s, "pad": (pt, pb, pl, pr)}))
+        return out
+
+    def global_avgpool(self, x: str) -> str:
+        c = self.g.tensors[x].hwc[2]
+        out = self._act_tensor((1, 1, c))
+        self.g.add_op(Op(self._n("gap"), "avgpool", [x], [out],
+                         {"k": 0, "stride": 1, "pad": (0, 0, 0, 0)}))
+        return out
+
+    def resize(self, x: str, factor: int = 2) -> str:
+        h, w, c = self.g.tensors[x].hwc
+        out = self._act_tensor((h * factor, w * factor, c))
+        self.g.add_op(Op(self._n("resize"), "resize", [x], [out],
+                         {"factor": factor}))
+        return out
+
+    def concat(self, xs: Sequence[str]) -> str:
+        shapes = [self.g.tensors[x].hwc for x in xs]
+        h, w = shapes[0][:2]
+        assert all(s[:2] == (h, w) for s in shapes), shapes
+        out = self._act_tensor((h, w, sum(s[2] for s in shapes)))
+        self.g.add_op(Op(self._n("concat"), "concat", list(xs), [out], {}))
+        return out
+
+    def split(self, x: str, sections: int) -> List[str]:
+        h, w, c = self.g.tensors[x].hwc
+        assert c % sections == 0
+        outs = [self._act_tensor((h, w, c // sections))
+                for _ in range(sections)]
+        self.g.add_op(Op(self._n("split"), "split", [x], outs,
+                         {"sections": sections}))
+        return outs
+
+    def scalar(self, x: str, op: str, value: float) -> str:
+        out = self._act_tensor(self.g.tensors[x].hwc)
+        self.g.add_op(Op(self._n("scalar"), "scalar", [x], [out],
+                         {"op": op, "value": value}))
+        return out
+
+    def build(self) -> "Graph":
+        # verify topological consistency once at build time
+        self.g.topo_ops()
+        return self.g
+
+
+# --------------------------------------------------------------------------
+# Reference executor (numpy, float32) — the functional oracle
+# --------------------------------------------------------------------------
+
+
+def _apply_act(x: np.ndarray, act: str) -> np.ndarray:
+    if act in ("none", None):
+        return x
+    if act == "relu":
+        return np.maximum(x, 0)
+    if act == "relu6":
+        return np.clip(x, 0, 6)
+    if act == "hswish":
+        return x * np.clip(x + 3, 0, 6) / 6
+    if act == "hsigmoid":
+        return np.clip(x + 3, 0, 6) / 6
+    if act == "silu":
+        return x / (1 + np.exp(-np.clip(x, -30, 30)))
+    if act == "sigmoid":
+        return 1 / (1 + np.exp(-np.clip(x, -30, 30)))
+    if act == "gelu":
+        return 0.5 * x * (1 + np.tanh(np.sqrt(2 / np.pi)
+                                      * (x + 0.044715 * x ** 3)))
+    if act == "mish":
+        sp = np.log1p(np.exp(-np.abs(x))) + np.maximum(x, 0)  # softplus
+        return x * np.tanh(sp)
+    if act == "sqrelu":
+        r = np.maximum(x, 0)
+        return r * r
+    if act == "leaky":
+        return np.where(x > 0, x, 0.1 * x)
+    raise ValueError(act)
+
+
+def _conv2d_ref(x: np.ndarray, w: np.ndarray, stride: int,
+                pad: Tuple[int, int, int, int], depthwise: bool
+                ) -> np.ndarray:
+    """x (H,W,C); w (outC,fh,fw,inC).  Straight sliding-window conv."""
+    pt, pb, pl, pr = pad
+    xp = np.pad(x, ((pt, pb), (pl, pr), (0, 0)))
+    H, W, C = xp.shape
+    oc, fh, fw, ic = w.shape
+    oh = (H - fh) // stride + 1
+    ow = (W - fw) // stride + 1
+    # im2col
+    cols = np.empty((oh, ow, fh, fw, C), dtype=np.float32)
+    for i in range(fh):
+        for j in range(fw):
+            cols[:, :, i, j, :] = xp[i:i + oh * stride:stride,
+                                     j:j + ow * stride:stride, :]
+    if depthwise:
+        # w (C, fh, fw, 1)
+        ker = np.transpose(w[:, :, :, 0], (1, 2, 0))  # (fh, fw, C)
+        return np.einsum("hwijc,ijc->hwc", cols, ker, optimize=True)
+    return np.einsum("hwijc,oijc->hwo", cols.reshape(oh, ow, fh, fw, ic),
+                     w, optimize=True)
+
+
+def reference_execute(g: Graph, inputs: Dict[str, np.ndarray],
+                      weights: Dict[str, np.ndarray]
+                      ) -> Dict[str, np.ndarray]:
+    """Execute the graph in float32.  Returns every tensor's value."""
+    vals: Dict[str, np.ndarray] = {}
+    for t in g.tensors.values():
+        if t.kind == "input":
+            vals[t.name] = np.asarray(inputs[t.name], dtype=np.float32)
+        elif t.is_param:
+            vals[t.name] = np.asarray(weights[t.name], dtype=np.float32)
+    for op in g.topo_ops():
+        k = op.kind
+        a = op.attrs
+        if k in ("conv", "dwconv"):
+            x = vals[op.inputs[0]]
+            w = vals[op.inputs[1]]
+            y = _conv2d_ref(x, w, a["stride"], a["pad"], k == "dwconv")
+            if len(op.inputs) > 2:
+                y = y + vals[op.inputs[2]]
+            vals[op.output] = _apply_act(y, a.get("act", "none"))
+        elif k == "fc":
+            x = vals[op.inputs[0]].reshape(-1)
+            w = vals[op.inputs[1]][:, 0, 0, :]
+            y = w @ x
+            if len(op.inputs) > 2:
+                y = y + vals[op.inputs[2]]
+            vals[op.output] = _apply_act(y, a.get("act", "none")
+                                         ).reshape(1, 1, -1)
+        elif k == "add":
+            vals[op.output] = _apply_act(
+                vals[op.inputs[0]] + vals[op.inputs[1]], a.get("act", "none"))
+        elif k == "mul":
+            vals[op.output] = vals[op.inputs[0]] * vals[op.inputs[1]]
+        elif k == "scalar":
+            x = vals[op.inputs[0]]
+            v = a["value"]
+            vals[op.output] = {"add": x + v, "mul": x * v,
+                               "div": x / v}[a["op"]]
+        elif k == "act":
+            vals[op.output] = _apply_act(vals[op.inputs[0]], a["act"])
+        elif k == "maxpool":
+            x = vals[op.inputs[0]]
+            pt, pb, pl, pr = a["pad"]
+            xp = np.pad(x, ((pt, pb), (pl, pr), (0, 0)),
+                        constant_values=-np.inf)
+            kk, s = a["k"], a["stride"]
+            H, W, C = xp.shape
+            oh = (H - kk) // s + 1
+            ow = (W - kk) // s + 1
+            y = np.full((oh, ow, C), -np.inf, dtype=np.float32)
+            for i in range(kk):
+                for j in range(kk):
+                    y = np.maximum(y, xp[i:i + oh * s:s, j:j + ow * s:s, :])
+            vals[op.output] = y
+        elif k == "avgpool":
+            x = vals[op.inputs[0]]
+            if a["k"] == 0:  # global
+                vals[op.output] = x.mean(axis=(0, 1), keepdims=True)
+            else:
+                kk, s = a["k"], a["stride"]
+                pt, pb, pl, pr = a["pad"]
+                xp = np.pad(x, ((pt, pb), (pl, pr), (0, 0)))
+                H, W, C = xp.shape
+                oh = (H - kk) // s + 1
+                ow = (W - kk) // s + 1
+                y = np.zeros((oh, ow, C), dtype=np.float32)
+                for i in range(kk):
+                    for j in range(kk):
+                        y += xp[i:i + oh * s:s, j:j + ow * s:s, :]
+                vals[op.output] = y / (kk * kk)
+        elif k == "resize":
+            f = a["factor"]
+            vals[op.output] = np.repeat(np.repeat(vals[op.inputs[0]], f,
+                                                  axis=0), f, axis=1)
+        elif k == "concat":
+            vals[op.output] = np.concatenate([vals[i] for i in op.inputs],
+                                             axis=2)
+        elif k == "split":
+            parts = np.split(vals[op.inputs[0]], a["sections"], axis=2)
+            for o, p in zip(op.outputs, parts):
+                vals[o] = p
+        else:
+            raise NotImplementedError(k)
+    return vals

@@ -1,0 +1,276 @@
+"""Neutron NPU machine model (paper §III).
+
+This is the analytical performance model of the eIQ Neutron subsystem the
+compiler optimizes against — the "hardware half" of the co-design.  The
+container has no NPU silicon, so the model plays the role the cycle
+estimator plays inside the real compiler: it converts (job, tile, format)
+into cycles, and the scheduler's objective (Eq. 8) is evaluated against it.
+
+Model summary (paper §III-B/C):
+  * ``cores`` compute cores; each has M pipelined dot-product units of
+    vector length N -> 2*N*M ops/cycle/core.  N=M=16, 4 cores @1 GHz
+    = 2.048 TOPS (the paper's 2-TOPS configuration).
+  * One operand vector is broadcast to all M units (N bytes/cycle input
+    bandwidth at full rate); the other operand can be held stationary in a
+    per-core weight scratchpad W_C (8 KiB) or streamed.
+  * A accumulators per unit (A = 2M = 32) allow A output pixels in flight,
+    dividing the non-shared operand bandwidth by A.
+  * Fused epilogue: rescale + activation + min/max pool at no extra cost.
+  * Three 128-bit buses per core; TCM is multi-banked and non-arbitrated —
+    conflicts are the *compiler's* job to avoid (scheduling constraint #3).
+  * DMA: multi-dimensional strided DDR<->TCM and TCM<->TCM transfers.
+
+Every returned latency is in cycles at ``freq`` (1 GHz default) so cycles
+== nanoseconds; helpers convert to ms.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+from .ir import Graph, Op
+
+
+@dataclass(frozen=True)
+class NPUConfig:
+    """Hardware parameters.  Defaults = the paper's 2-TOPS MPU instance
+    (N=M=16, A=2M, W_C=8KiB, 4 cores, 1 MiB TCM, 12 GB/s DDR)."""
+
+    name: str = "neutron-2tops"
+    cores: int = 4
+    M: int = 16                      # dot-product units per core
+    N: int = 16                      # dot-product vector length
+    A: int = 32                      # accumulators per unit (2M)
+    Wc_bytes: int = 8 * 1024         # per-core weight scratchpad
+    freq_hz: float = 1.0e9
+    tcm_bytes: int = 1 * 1024 * 1024
+    tcm_banks: int = 32              # non-arbitrated banks
+    bus_bytes: int = 16              # 128-bit operand/result buses
+    n_buses: int = 3
+    ddr_gbps: float = 12.0           # DDR bandwidth (GB/s)
+    tcm_gbps: float = 64.0           # aggregate TCM bandwidth (GB/s)
+    dma_setup_cycles: int = 400      # per DMA job programming overhead
+    job_setup_cycles: int = 300      # per compute-job programming overhead
+    v2p_cycles: int = 64             # V2P table update
+
+    @property
+    def peak_tops(self) -> float:
+        return 2 * self.N * self.M * self.cores * self.freq_hz / 1e12
+
+    @property
+    def bank_bytes(self) -> int:
+        return self.tcm_bytes // self.tcm_banks
+
+    @property
+    def ddr_bytes_per_cycle(self) -> float:
+        return self.ddr_gbps * 1e9 / self.freq_hz
+
+    @property
+    def tcm_bytes_per_cycle(self) -> float:
+        return self.tcm_gbps * 1e9 / self.freq_hz
+
+    def scaled(self, factor: float) -> "NPUConfig":
+        """eNPU-B-style scaling: x`factor` TOPS, SRAM and DDR bandwidth."""
+        return replace(
+            self,
+            name=f"{self.name}-x{factor:g}",
+            cores=int(self.cores * factor),
+            tcm_bytes=int(self.tcm_bytes * factor),
+            tcm_banks=int(self.tcm_banks * factor),
+            ddr_gbps=self.ddr_gbps * factor,
+            tcm_gbps=self.tcm_gbps * factor,
+        )
+
+
+#: the two reference configurations of paper §V.
+NEUTRON_2TOPS = NPUConfig()
+ENPU_A = replace(NPUConfig(), name="enpu-a")        # equal resources
+ENPU_B = NPUConfig().scaled(2.0)                    # 2x resources
+
+
+# --------------------------------------------------------------------------
+# Compute-job cost model
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class JobCost:
+    cycles: int
+    macs: int
+    in_bytes: int
+    w_bytes: int
+    out_bytes: int
+    bound: str  # "compute" | "operand-bw" | "weight-bw" | "output-bw"
+
+    @property
+    def util(self) -> float:
+        return self.macs / max(self.cycles, 1)
+
+
+def _dot_engine_cycles(cfg: NPUConfig, out_pixels: int, out_c: int,
+                       dot_len: int, engines: int,
+                       weights_stationary: bool) -> Tuple[int, str]:
+    """Cycles for one core-group to produce `out_pixels x out_c` results,
+    each a dot product of length `dot_len`, spread over `engines` cores.
+
+    Within a core: M units each produce one output-channel result per
+    pass; A accumulators keep A pixels in flight.  The paper's bandwidth
+    argument: the shared operand (ifmap in depth parallelism) needs N
+    bytes/cycle; the non-shared one (weights) is either stationary in W_C
+    or streamed with A-fold reuse.
+    """
+    if engines <= 0:
+        engines = 1
+    # --- pure MAC throughput (with padding to lockstep, paper §IV-A)
+    oc_per_engine = math.ceil(out_c / engines) if out_c else 0
+    if oc_per_engine == 0 or out_pixels == 0 or dot_len == 0:
+        return 0, "compute"
+    oc_passes = math.ceil(oc_per_engine / cfg.M)
+    dot_cycles = math.ceil(dot_len / cfg.N)
+    compute = out_pixels * oc_passes * dot_cycles
+
+    # --- operand (shared, e.g. ifmap) bandwidth: N bytes/cycle needed,
+    #     one 128-bit bus provides bus_bytes per cycle.
+    operand_rate = min(1.0, cfg.bus_bytes / cfg.N)
+    # --- weight bandwidth: stationary weights stream once per W_C refill;
+    #     otherwise every pass re-reads them with A-fold pixel reuse.
+    w_bytes_total = out_c * dot_len  # int8
+    if weights_stationary and w_bytes_total <= cfg.Wc_bytes * engines:
+        w_stream_cycles = math.ceil(w_bytes_total / (cfg.bus_bytes * engines))
+        weight_limited = 0
+    else:
+        # streamed: per pixel-group of A, each engine re-fetches its slice
+        per_engine_w = math.ceil(w_bytes_total / engines)
+        refetches = math.ceil(out_pixels / cfg.A)
+        w_stream_cycles = math.ceil(per_engine_w * refetches / cfg.bus_bytes)
+        weight_limited = w_stream_cycles
+
+    cycles = max(math.ceil(compute / operand_rate), w_stream_cycles)
+    if cycles == compute:
+        bound = "compute"
+    elif cycles == weight_limited:
+        bound = "weight-bw"
+    else:
+        bound = "operand-bw"
+    return cycles, bound
+
+
+def compute_job_cost(cfg: NPUConfig, g: Graph, op: Op,
+                     out_h: int, fmt: str, engines: Optional[int] = None,
+                     out_c: Optional[int] = None) -> JobCost:
+    """Cost of computing `out_h` output lines (restricted to `out_c`
+    output channels when the op is channel-partitioned) of `op` in format
+    `fmt` ("depth" or "line", paper §IV-A) on `engines` cores."""
+    engines = engines or cfg.cores
+    k = op.kind
+    out = g.tensors[op.output]
+    if out.kind == "parameter":  # pragma: no cover
+        raise ValueError("op writes a parameter?")
+    if len(out.shape) == 3:
+        H, W, C = out.shape
+    else:
+        H, W, C = 1, 1, out.shape[0]
+    out_h = min(out_h, H)
+    c_frac = 1.0
+    if out_c is not None and C:
+        c_frac = out_c / C
+        C = out_c
+    a = op.attrs
+
+    w_bytes = math.ceil(sum(t.bytes for t in g.param_inputs(op)) * c_frac)
+    in_bytes = sum(t.bytes for t in g.act_inputs(op))
+    in_bytes = math.ceil(in_bytes * out_h / max(H, 1))
+    out_bytes = out_h * W * C
+
+    if k in ("conv", "fc"):
+        wt = g.param_inputs(op)[0]
+        oc, fh, fw, ic = wt.shape
+        dot_len = fh * fw * ic
+        pixels = out_h * W
+        if fmt == "depth":
+            # split outC over engines; ifmap broadcast-shared
+            cyc, bound = _dot_engine_cycles(cfg, pixels, C, dot_len,
+                                            engines, weights_stationary=True)
+        else:
+            # line: split lines over engines; weights broadcast-shared
+            pix_e = math.ceil(out_h / engines) * W
+            cyc, bound = _dot_engine_cycles(cfg, pix_e, C, dot_len, 1,
+                                            weights_stationary=True)
+        macs = pixels * C * dot_len
+    elif k == "dwconv":
+        wt = g.param_inputs(op)[0]
+        _, fh, fw, _ = wt.shape
+        dot_len = fh * fw
+        pixels = out_h * W
+        if fmt == "depth":
+            cyc, bound = _dot_engine_cycles(cfg, pixels,
+                                            math.ceil(C / 1), dot_len,
+                                            engines, True)
+            # depthwise cannot share the ifmap across channels: each unit
+            # needs its own channel stream -> M-fold operand bandwidth.
+            cyc = max(cyc, math.ceil(pixels * C * dot_len
+                                     / (cfg.bus_bytes * engines)))
+            bound = "operand-bw" if cyc > pixels else bound
+        else:
+            pix_e = math.ceil(out_h / engines) * W
+            cyc, bound = _dot_engine_cycles(cfg, pix_e, C, dot_len, 1, True)
+        macs = pixels * C * dot_len
+    elif k in ("add", "mul", "scalar", "act", "concat", "split", "pad"):
+        # element-wise / data-movement ops: TCM-bandwidth bound, fused
+        # through the vector path (paired depthwise, paper §IV-A).
+        elems = out_h * W * C * (2 if k in ("add", "mul") else 1)
+        cyc = math.ceil(elems / (cfg.bus_bytes * engines))
+        macs = out_h * W * C
+        bound = "operand-bw"
+    elif k in ("maxpool", "avgpool"):
+        kk = a.get("k", 2) or max(H, W)  # global -> full reduce
+        elems = out_h * W * C * (kk * kk if a.get("k", 2) else 1)
+        if a.get("k", 2) == 0:
+            ih = g.act_inputs(op)[0].shape[0]
+            iw = g.act_inputs(op)[0].shape[1]
+            elems = ih * iw * C
+        cyc = math.ceil(elems / (cfg.bus_bytes * engines))
+        macs = elems
+        bound = "operand-bw"
+    elif k == "resize":
+        cyc = math.ceil(out_h * W * C / (cfg.bus_bytes * engines))
+        macs = 0
+        bound = "output-bw"
+    elif k in ("format", "reshape"):
+        cyc = math.ceil(out_bytes / cfg.tcm_bytes_per_cycle)
+        macs = 0
+        bound = "output-bw"
+    else:  # pragma: no cover
+        raise NotImplementedError(k)
+
+    # result write-back shares the third bus
+    cyc = max(cyc, math.ceil(out_bytes / (cfg.bus_bytes * engines)))
+    cyc += cfg.job_setup_cycles
+    return JobCost(int(cyc), int(macs), int(in_bytes), int(w_bytes),
+                   int(out_bytes), bound)
+
+
+# --------------------------------------------------------------------------
+# Data-mover cost model
+# --------------------------------------------------------------------------
+
+
+def dma_cost(cfg: NPUConfig, nbytes: int, kind: str = "ddr") -> int:
+    """Cycles for one DMA job.  kind: ddr (DDR<->TCM) or tcm (TCM<->TCM,
+    used for line-format expansion copies, paper §IV-A)."""
+    if nbytes <= 0:
+        return 0
+    rate = cfg.ddr_bytes_per_cycle if kind == "ddr" \
+        else cfg.tcm_bytes_per_cycle
+    return int(cfg.dma_setup_cycles + math.ceil(nbytes / rate))
+
+
+def cycles_to_ms(cfg: NPUConfig, cycles: float) -> float:
+    return cycles / cfg.freq_hz * 1e3
+
+
+def effective_tops(cfg: NPUConfig, macs: int, cycles: float) -> float:
+    """ops/latency — the paper's 'effective TOPS' (Table I)."""
+    secs = cycles / cfg.freq_hz
+    return 2 * macs / secs / 1e12 if secs > 0 else 0.0

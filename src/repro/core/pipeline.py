@@ -1,0 +1,114 @@
+"""Compiler driver: graph -> timed NPU program (paper §IV end-to-end).
+
+``compile_graph`` chains the mid-end passes — format selection, temporal
+tiling + layer fusion, tick DAE scheduling, memory allocation — and
+returns the compiled program plus per-phase diagnostics.  The
+:class:`CompilerOptions` knobs expose exactly the ablations the paper
+evaluates:
+
+  * ``baseline()``        — the eNPU-A-style reference stack: single
+    (depth) format, layer-by-layer execution (no fusion), no DAE overlap.
+    Used for the Table III speedup comparisons.
+  * ``partition=False``   — monolithic CP (Table II row 1).
+  * ``fusion=False``      — no layer fusion (Fig. 6 "without").
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional
+
+from .allocation import Allocation, AllocationError, allocate
+from .formats import FORMATS, FormatPlan, select_formats
+from .ir import Graph
+from .npu import NPUConfig
+from .program import NPUProgram
+from .scheduling import SchedOptions, schedule
+from .tiling import TilingResult, plan_tiling
+
+
+@dataclass
+class CompilerOptions:
+    formats: tuple = FORMATS          # allowed parallelism formats
+    fusion: bool = True               # layer fusion CP (§IV-C)
+    naive_tiling: bool = False        # reference-stack tile bounds
+    overlap: bool = True              # DAE overlap (§IV-B)
+    partition: bool = True            # partition the CP problems
+    partition_steps: int = 12
+    cp_time_limit_s: float = 1.0      # per subproblem
+    monolithic_time_limit_s: float = 20.0
+    dm_penalty: int = 16
+
+    @staticmethod
+    def baseline() -> "CompilerOptions":
+        """The reference embedded-NPU compiler behaviour (§V eNPU-A/B)."""
+        return CompilerOptions(formats=("depth",), fusion=False,
+                               overlap=False, naive_tiling=True)
+
+
+@dataclass
+class CompileResult:
+    program: NPUProgram
+    plan: FormatPlan
+    tiling: TilingResult
+    allocation: Allocation
+    compile_s: float
+    phase_s: Dict[str, float] = field(default_factory=dict)
+
+    def stats(self) -> Dict[str, float]:
+        s = self.program.stats()
+        s["compile_s"] = self.compile_s
+        s.update({f"phase_{k}_s": v for k, v in self.phase_s.items()})
+        return s
+
+
+def compile_graph(g: Graph, cfg: NPUConfig,
+                  opts: Optional[CompilerOptions] = None) -> CompileResult:
+    opts = opts or CompilerOptions()
+    phase: Dict[str, float] = {}
+    t0 = time.monotonic()
+
+    t = time.monotonic()
+    plan = select_formats(cfg, g, allowed=opts.formats)
+    phase["formats"] = time.monotonic() - t
+
+    sched_opt = SchedOptions(
+        overlap=opts.overlap,
+        partition=opts.partition,
+        partition_steps=opts.partition_steps,
+        cp_time_limit_s=(opts.cp_time_limit_s if opts.partition
+                         else opts.monolithic_time_limit_s),
+        dm_penalty=opts.dm_penalty,
+    )
+    # tile-budget ladder: a working set that over-subscribes the TCM at
+    # schedule or allocation time is retried with finer tiles (the
+    # paper's "partitioned into smaller sub-problems" escape hatch,
+    # §III-B).  Within a rung, allocation failures first retry with pure
+    # JIT placement (no CP re-timing) before descending.
+    t = time.monotonic()
+    last_err: Optional[Exception] = None
+    prog = alloc = None
+    for frac in (0.5, 0.25, 0.125, 0.0625, 0.03125):
+        tiling = plan_tiling(cfg, g, plan, fusion=opts.fusion,
+                             cp_time_limit_s=opts.cp_time_limit_s,
+                             budget_frac=frac,
+                             naive=opts.naive_tiling)
+        for so in (sched_opt,
+                   replace(sched_opt, cp_time_limit_s=0.0)):
+            try:
+                prog = schedule(cfg, g, plan, tiling, so)
+                alloc = allocate(prog, cfg)
+                last_err = None
+                break
+            except (RuntimeError, AllocationError) as e:
+                last_err = e
+                prog = alloc = None
+                continue
+        if last_err is None:
+            break
+    if last_err is not None:
+        raise last_err
+    phase["schedule_allocate"] = time.monotonic() - t
+
+    return CompileResult(prog, plan, tiling, alloc,
+                         time.monotonic() - t0, phase)

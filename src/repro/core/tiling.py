@@ -1,0 +1,526 @@
+"""Temporal tiling + layer fusion (paper §IV-C).
+
+Feature maps can exceed the TCM, so tensors are split into line-range
+tiles processed at different times; interleaving tiles across layers
+(*layer fusion*) shrinks the live working set so intermediate maps never
+round-trip through DRAM.  Following the paper:
+
+  * **two tile-size options per tensor** (`LS_{k,i}` selection variables):
+    the largest tile whose working set fits the TCM, and that size reduced
+    by a fixed factor;
+  * a **single-memory-level CP** whose objective minimizes the summed
+    over-capacity memory profile ``sum_t MemTh_t`` (Eq. 9-12) — with
+    ``MemTh_t`` tight at optimum this equals the linear form
+    ``sum_t sum_j banks_j * TCM(j,t)`` used here;
+  * **region decomposition**: fusion is attempted only inside regions
+    whose activations cannot all be held on-chip; everything else is
+    scheduled layer-by-layer (the paper's scalability lever, Table II);
+  * ops whose parameters exceed a TCM fraction are partitioned **by
+    output channels** ("sub-problems with fewer output features" so
+    weights stream set-by-set, paper §III-B) — their outputs are
+    channel-tiled and each step consumes only its own weight chunk.
+
+The output is (a) the per-tensor tiling and (b) a global, tile-granular
+compute order consumed by the scheduler.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from . import cpsolver
+from .formats import FormatPlan
+from .ir import Graph, Op, Tensor
+from .npu import NPUConfig
+from .program import TileRef
+
+# --------------------------------------------------------------------------
+# Receptive-field helpers (shared with the executor)
+# --------------------------------------------------------------------------
+
+
+def in_row_range(op: Op, out_r0: int, out_r1: int, in_h: int
+                 ) -> Tuple[int, int]:
+    """Input rows [r0, r1) needed to produce output rows [out_r0, out_r1).
+    Clipped to the valid input range (padding supplies the rest)."""
+    k = op.kind
+    a = op.attrs
+    if k in ("conv", "dwconv", "maxpool", "avgpool"):
+        if k == "avgpool" and a.get("k", 1) == 0:
+            return (0, in_h)  # global pool needs everything
+        kh = a["k"][0] if isinstance(a.get("k"), tuple) else a.get("k", 1)
+        s = a.get("stride", 1)
+        pt = a.get("pad", (0, 0, 0, 0))[0]
+        r0 = out_r0 * s - pt
+        r1 = (out_r1 - 1) * s - pt + kh
+        lo = max(0, min(r0, in_h))
+        hi = min(in_h, max(0, r1))
+        return (min(lo, hi), hi)
+    if k == "resize":
+        f = a["factor"]
+        return (out_r0 // f, min(in_h, (out_r1 + f - 1) // f))
+    if k in ("fc",):
+        return (0, in_h)
+    if in_h == 1:
+        return (0, 1)  # broadcast input (e.g. SE-block (1,1,C) scale)
+    # elementwise / concat / split / act / scalar: 1:1 rows
+    return (out_r0, min(in_h, out_r1))
+
+
+# --------------------------------------------------------------------------
+# Tiling data model
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class TensorTiles:
+    tensor: str
+    tiles: List[TileRef]
+
+    @property
+    def n(self) -> int:
+        return len(self.tiles)
+
+    @property
+    def axis(self) -> str:
+        return self.tiles[0].axis if self.tiles else "rows"
+
+    def covering(self, r0: int, r1: int) -> List[TileRef]:
+        """Tiles overlapping output-row range [r0, r1).  Channel-tiled
+        tensors span all rows, so every tile overlaps."""
+        if self.axis == "chan":
+            return list(self.tiles)
+        return [t for t in self.tiles if t.r0 < r1 and t.r1 > r0]
+
+    def covering_chan(self, c0: int, c1: int) -> List[TileRef]:
+        if self.axis != "chan":
+            return list(self.tiles)
+        return [t for t in self.tiles if t.r0 < c1 and t.r1 > c0]
+
+
+@dataclass
+class ComputeStep:
+    """One tile-granular compute: `op` producing rows (axis == "rows") or
+    channels (axis == "chan") [r0, r1) of each of its outputs."""
+
+    op_name: str
+    r0: int
+    r1: int
+    axis: str = "rows"
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"{self.op_name}[{self.r0}:{self.r1}@{self.axis}]"
+
+
+@dataclass
+class TilingResult:
+    tiles: Dict[str, TensorTiles]           # tensor -> tiles
+    order: List[ComputeStep]                # global tile compute order
+    regions: List[List[str]]                # op-name regions (diagnostics)
+    fusion_objective: float = 0.0           # CP objective (memory-ticks)
+    stats: Dict = field(default_factory=dict)
+
+    def tile_of(self, tensor: str, idx: int) -> TileRef:
+        return self.tiles[tensor].tiles[idx]
+
+
+def _mk_tiles(t: Tensor, n: int, bank_bytes: int,
+              axis: str = "rows") -> List[TileRef]:
+    """Split tensor into `n` tiles along rows/channels (params: outC)."""
+    if t.is_param:
+        oc = t.shape[0]
+        n = min(n, max(oc, 1))
+        per = [oc // n + (1 if i < oc % n else 0) for i in range(n)]
+        refs, c0 = [], 0
+        bytes_per_oc = t.bytes / max(oc, 1)
+        for i, p in enumerate(per):
+            nb = max(1, math.ceil(p * bytes_per_oc))
+            refs.append(TileRef(t.name, i, c0, c0 + p, nb,
+                                max(1, math.ceil(nb / bank_bytes)), "chan"))
+            c0 += p
+        return refs
+    if axis == "chan":
+        C = t.shape[-1]
+        n = min(n, max(C, 1))
+        per = [C // n + (1 if i < C % n else 0) for i in range(n)]
+        refs, c0 = [], 0
+        bytes_per_c = t.bytes / max(C, 1)
+        for i, p in enumerate(per):
+            nb = max(1, math.ceil(p * bytes_per_c))
+            refs.append(TileRef(t.name, i, c0, c0 + p, nb,
+                                max(1, math.ceil(nb / bank_bytes)), "chan"))
+            c0 += p
+        return refs
+    H = t.shape[0] if len(t.shape) == 3 else 1
+    n = min(n, max(H, 1))
+    rows = [H // n + (1 if i < H % n else 0) for i in range(n)]
+    refs, r0 = [], 0
+    bytes_per_row = t.bytes / max(H, 1)
+    for i, rr in enumerate(rows):
+        nb = max(1, math.ceil(rr * bytes_per_row))
+        refs.append(TileRef(t.name, i, r0, r0 + rr, nb,
+                            max(1, math.ceil(nb / bank_bytes)), "rows"))
+        r0 += rr
+    return refs
+
+
+# --------------------------------------------------------------------------
+# Tile-size options (the paper's LS_{k,i}, two options per tensor)
+# --------------------------------------------------------------------------
+
+
+def _param_bytes(g: Graph, op: Op) -> int:
+    return sum(p.bytes for p in g.param_inputs(op))
+
+
+def _chan_split(cfg: NPUConfig, g: Graph, op: Op) -> int:
+    """#channel sub-problems for a huge-parameter op (0 = not needed)."""
+    pb = _param_bytes(g, op)
+    if op.kind in ("conv", "fc") and pb > cfg.tcm_bytes // 4:
+        return min(int(math.ceil(pb / (cfg.tcm_bytes / 8))),
+                   g.tensors[op.output].shape[-1])
+    return 0
+
+
+def _tile_options(cfg: NPUConfig, g: Graph, budget_frac: float = 0.5,
+                  naive: bool = False
+                  ) -> Dict[str, Tuple[int, int, str]]:
+    """tensor -> (n_tiles option A, option B, axis).
+
+    ``naive=True`` reproduces the reference-stack behaviour the paper
+    describes in §IV-C: the tile bound only ensures the tile itself fits
+    the TCM — it ignores the dependencies that must be co-resident, so
+    adjacent layers' buffers thrash through DRAM.  This is the
+    eNPU-A/B-style baseline tiling."""
+    budget = int(cfg.tcm_bytes * budget_frac)
+    opts: Dict[str, Tuple[int, int, str]] = {}
+    for t in g.tensors.values():
+        if t.is_param:
+            n = 1
+            while t.bytes / n > cfg.tcm_bytes / 8 and n < max(t.shape[0], 1):
+                n *= 2
+            opts[t.name] = (n, n, "chan")
+            continue
+        prod = t.producer
+        if prod is not None:
+            cs = _chan_split(cfg, g, g.op(prod))
+            if cs:
+                opts[t.name] = (cs, cs, "chan")
+                continue
+        H = t.shape[0] if len(t.shape) == 3 else 1
+        if naive:
+            # naive upper bound: the tile alone fits — dependencies are
+            # NOT accounted (shrinks along the retry ladder via
+            # budget_frac so the baseline still always compiles)
+            frac = min(0.45, budget_frac * 0.9)
+            n = 1
+            while t.bytes / n > cfg.tcm_bytes * frac and n < max(H, 1):
+                n *= 2
+            opts[t.name] = (n, n, "rows")
+            continue
+        n = 1
+        while n < max(H, 1):
+            rows = math.ceil(H / n)
+            ws = math.ceil(t.bytes / n)
+            if prod is not None:
+                op = g.op(prod)
+                for x in g.act_inputs(op):
+                    ih = x.shape[0] if len(x.shape) == 3 else 1
+                    a, b = in_row_range(op, 0, rows, ih)
+                    ws += math.ceil(x.bytes * (b - a) / max(ih, 1))
+                ws += sum(min(p.bytes, budget // 4)
+                          for p in g.param_inputs(op))
+            if ws <= budget:
+                break
+            n *= 2
+        opts[t.name] = (n, min(2 * n, max(H, 1)), "rows")
+    return opts
+
+
+# --------------------------------------------------------------------------
+# Region decomposition
+# --------------------------------------------------------------------------
+
+
+def _regions(cfg: NPUConfig, g: Graph,
+             opts: Dict[str, Tuple[int, int, str]]) -> List[List[Op]]:
+    """Maximal runs of row-tiled ops whose activation working set exceeds
+    the TCM — fusion candidates; channel-partitioned ops and cold ops form
+    singleton regions (paper §IV-C)."""
+    thresh = cfg.tcm_bytes // 2
+    regions: List[List[Op]] = []
+    cur: List[Op] = []
+    cur_hot = False
+    for op in g.topo_ops():
+        acts = [g.tensors[o] for o in op.outputs] + g.act_inputs(op)
+        chan = any(opts[o][2] == "chan" for o in op.outputs)
+        hot = (not chan) and sum(t.bytes for t in acts) > thresh
+        if hot and cur_hot:
+            cur.append(op)
+        else:
+            if cur:
+                regions.append(cur)
+            cur = [op]
+            cur_hot = hot
+    if cur:
+        regions.append(cur)
+    return regions
+
+
+# --------------------------------------------------------------------------
+# Greedy fused order (warm start + large-region fallback)
+# --------------------------------------------------------------------------
+
+
+def _greedy_order(g: Graph, region: List[Op],
+                  tiles: Dict[str, TensorTiles]) -> List[ComputeStep]:
+    """Depth-first fusion: emit each op's tiles as soon as the input rows
+    they need have been produced — classic cascaded/fused execution."""
+    region_ops = {op.name for op in region}
+    produced_rows: Dict[str, int] = {}   # tensor -> rows available
+    for t in g.tensors.values():
+        if t.producer is None or t.producer not in region_ops:
+            produced_rows[t.name] = t.shape[0] if len(t.shape) == 3 else 1
+    emitted: Dict[str, int] = {op.name: 0 for op in region}
+    order: List[ComputeStep] = []
+    progress = True
+    while progress:
+        progress = False
+        for op in region:
+            out0 = g.tensors[op.outputs[0]]
+            otiles = tiles[out0.name].tiles
+            while emitted[op.name] < len(otiles):
+                tl = otiles[emitted[op.name]]
+                ok = True
+                for x in g.act_inputs(op):
+                    ih = x.shape[0] if len(x.shape) == 3 else 1
+                    _, need = in_row_range(op, tl.r0, tl.r1, ih)
+                    if produced_rows.get(x.name, 0) < need:
+                        ok = False
+                        break
+                if not ok:
+                    break
+                order.append(ComputeStep(op.name, tl.r0, tl.r1, tl.axis))
+                emitted[op.name] += 1
+                for o in op.outputs:
+                    produced_rows[o] = tl.r1 \
+                        if len(g.tensors[o].shape) == 3 else 1
+                progress = True
+    for op in region:  # safety net for non-DAG-reachable leftovers
+        out0 = g.tensors[op.outputs[0]]
+        for tl in tiles[out0.name].tiles[emitted[op.name]:]:
+            order.append(ComputeStep(op.name, tl.r0, tl.r1, tl.axis))
+    return order
+
+
+# --------------------------------------------------------------------------
+# Fusion CP (per region)
+# --------------------------------------------------------------------------
+
+
+def _fusion_cp(cfg: NPUConfig, g: Graph, region: List[Op],
+               opts: Dict[str, Tuple[int, int, str]],
+               time_limit_s: float) -> Tuple[Dict[str, int],
+                                             List[ComputeStep], float]:
+    """Choose LS (tiles-per-tensor) and tile order for one region by CP.
+
+    Returns (chosen n_tiles per tensor, ordered steps, objective)."""
+    region_ops = {op.name for op in region}
+    bank = cfg.bank_bytes
+
+    # candidate tilings per produced tensor (option A / B)
+    cand: Dict[str, List[List[TileRef]]] = {}
+    for op in region:
+        for oname in op.outputs:
+            t = g.tensors[oname]
+            a, b, axis = opts[oname]
+            variants = [_mk_tiles(t, a, bank, axis)]
+            if b != a:
+                variants.append(_mk_tiles(t, b, bank, axis))
+            cand[oname] = variants
+
+    m = cpsolver.CPModel(f"fusion:{region[0].name}")
+    LS: Dict[Tuple[str, int], int] = {}
+    for oname, variants in cand.items():
+        vs = [m.bool(f"LS[{oname},{k}]") for k in range(len(variants))]
+        for k, v in enumerate(vs):
+            LS[(oname, k)] = v
+        m.add_exactly_one(vs, f"one-size:{oname}")
+
+    # T ticks = total tiles of the *larger* option per op
+    T = sum(max(len(v) for v in cand[op.outputs[0]]) for op in region)
+    T = max(T, 1)
+
+    comp: Dict[Tuple[str, int, int, int], int] = {}
+    state: Dict[Tuple[str, int, int, int], int] = {}
+    for op in region:
+        oname = op.outputs[0]
+        for k, variant in enumerate(cand[oname]):
+            for j, tl in enumerate(variant):
+                cvars = []
+                for t in range(T):
+                    cv = m.bool(f"c[{op.name},{k},{j},{t}]")
+                    comp[(op.name, k, j, t)] = cv
+                    cvars.append(cv)
+                # computed exactly once iff option selected
+                m.add([(cv, 1) for cv in cvars]
+                      + [(LS[(oname, k)], -1)], "==", 0,
+                      f"once:{op.name}/{k}/{j}")
+                # state chain (single-level model: enter only via compute)
+                prev = None
+                for t in range(T):
+                    sv = m.bool(f"s[{oname},{k},{j},{t}]")
+                    state[(oname, k, j, t)] = sv
+                    terms = [(sv, 1), (comp[(op.name, k, j, t)], -1)]
+                    if prev is not None:
+                        terms.append((prev, -1))
+                    m.add(terms, "<=", 0, f"persist:{oname}/{k}/{j}/{t}")
+                    prev = sv
+
+    # at most one compute per tick
+    for t in range(T):
+        m.add([(v, 1) for (onm, k, j, tt), v in comp.items() if tt == t],
+              "<=", 1, f"one-comp:{t}")
+
+    # dependency: computing a tile needs covering region-internal input
+    # tiles resident (under whichever option of the input is selected)
+    for op in region:
+        oname = op.outputs[0]
+        for k, variant in enumerate(cand[oname]):
+            for j, tl in enumerate(variant):
+                for x in g.act_inputs(op):
+                    if x.producer not in region_ops:
+                        continue
+                    ih = x.shape[0] if len(x.shape) == 3 else 1
+                    a, b = in_row_range(op, tl.r0, tl.r1, ih)
+                    for k2, variant2 in enumerate(cand[x.name]):
+                        for j2, tl2 in enumerate(variant2):
+                            if tl2.r0 < b and tl2.r1 > a:
+                                for t in range(T):
+                                    m.add([(comp[(op.name, k, j, t)], 1),
+                                           (LS[(x.name, k2)], 1),
+                                           (state[(x.name, k2, j2, t)], -1)],
+                                          "<=", 1)
+
+    # objective: sum_t sum_j banks_j * state  (== sum_t MemTh_t at optimum)
+    obj = [(sv, cand[oname][k][j].banks)
+           for (oname, k, j, t), sv in state.items()]
+    m.minimize(obj)
+
+    # ---- warm start: option A everywhere + greedy DFS order ----
+    ws_tiles = {oname: TensorTiles(oname, cand[oname][0]) for oname in cand}
+    greedy = _greedy_order(g, region, ws_tiles)
+    ws: Dict[int, int] = {v: 0 for v in range(m.n_vars)}
+    for oname in cand:
+        ws[LS[(oname, 0)]] = 1
+    tick = 0
+    step_tick: Dict[Tuple[str, int], int] = {}
+    for st in greedy:
+        op = g.op(st.op_name)
+        oname = op.outputs[0]
+        for j, tl in enumerate(cand[oname][0]):
+            if tl.r0 == st.r0:
+                ws[comp[(op.name, 0, j, tick)]] = 1
+                step_tick[(op.name, j)] = tick
+        tick += 1
+    for op in region:
+        oname = op.outputs[0]
+        for j, tl in enumerate(cand[oname][0]):
+            t0 = step_tick.get((op.name, j))
+            if t0 is None:
+                continue
+            last = t0
+            for cons_name in g.tensors[oname].consumers:
+                if cons_name not in region_ops:
+                    last = T - 1
+                    break
+                cop = g.op(cons_name)
+                c_out = cop.outputs[0]
+                ih = g.tensors[oname].shape[0] \
+                    if len(g.tensors[oname].shape) == 3 else 1
+                for j2, tl2 in enumerate(cand[c_out][0]):
+                    a, b = in_row_range(cop, tl2.r0, tl2.r1, ih)
+                    if tl.r0 < b and tl.r1 > a:
+                        t2 = step_tick.get((cons_name, j2))
+                        if t2 is not None:
+                            last = max(last, t2)
+            for t in range(t0, last + 1):
+                ws[state[(oname, 0, j, t)]] = 1
+
+    sol = cpsolver.solve(m, time_limit_s=time_limit_s, warm_start=ws)
+    if not sol.feasible:  # fall back to the greedy warm start
+        chosen = {oname: len(cand[oname][0]) for oname in cand}
+        return chosen, greedy, float("inf")
+
+    chosen: Dict[str, int] = {}
+    for oname, variants in cand.items():
+        for k in range(len(variants)):
+            if sol[LS[(oname, k)]]:
+                chosen[oname] = len(variants[k])
+    steps: List[Tuple[int, ComputeStep]] = []
+    for (opn, k, j, t), v in comp.items():
+        if sol[v]:
+            oname = g.op(opn).outputs[0]
+            if sol[LS[(oname, k)]]:
+                tl = cand[oname][k][j]
+                steps.append((t, ComputeStep(opn, tl.r0, tl.r1, tl.axis)))
+    steps.sort(key=lambda x: x[0])
+    return chosen, [s for _, s in steps], sol.objective
+
+
+# --------------------------------------------------------------------------
+# Entry point
+# --------------------------------------------------------------------------
+
+
+def plan_tiling(cfg: NPUConfig, g: Graph, plan: FormatPlan,
+                fusion: bool = True, cp_time_limit_s: float = 1.0,
+                max_cp_tiles: int = 36,
+                budget_frac: float = 0.5,
+                naive: bool = False) -> TilingResult:
+    opts = _tile_options(cfg, g, budget_frac=budget_frac, naive=naive)
+    bank = cfg.bank_bytes
+    regions = _regions(cfg, g, opts)
+
+    n_tiles: Dict[str, int] = {nm: o[0] for nm, o in opts.items()}
+
+    order: List[ComputeStep] = []
+    objective = 0.0
+    cp_regions = 0
+    for region in regions:
+        big = len(region) > 1 and fusion
+        est_tiles = sum(max(opts[o][0], opts[o][1])
+                        for op in region for o in op.outputs[:1])
+        if big and est_tiles <= max_cp_tiles:
+            chosen, steps, obj = _fusion_cp(cfg, g, region, opts,
+                                            cp_time_limit_s)
+            n_tiles.update(chosen)
+            order.extend(steps)
+            if obj != float("inf"):
+                objective += obj
+            cp_regions += 1
+        else:
+            tiles_now = {
+                t.name: TensorTiles(t.name, _mk_tiles(
+                    t, n_tiles[t.name], bank, opts[t.name][2]))
+                for t in g.tensors.values()}
+            if big:
+                order.extend(_greedy_order(g, region, tiles_now))
+            else:
+                for op in region:
+                    out0 = g.tensors[op.outputs[0]]
+                    for tl in tiles_now[out0.name].tiles:
+                        order.append(ComputeStep(op.name, tl.r0, tl.r1,
+                                                 tl.axis))
+
+    tiles = {t.name: TensorTiles(
+        t.name, _mk_tiles(t, n_tiles[t.name], bank, opts[t.name][2]))
+        for t in g.tensors.values()}
+    return TilingResult(
+        tiles=tiles, order=order,
+        regions=[[op.name for op in r] for r in regions],
+        fusion_objective=objective,
+        stats={"regions": len(regions), "cp_regions": cp_regions,
+               "steps": len(order)},
+    )

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships as (pallas kernel, jit'd wrapper in ops.py, pure-jnp
+oracle in ref.py); see ops.py for the dispatch contract.
+"""
+from .ops import (apply_activation, combine_decode_shards, flash_attention,
+                  flash_decode, neutron_matmul, ssd_scan, ssd_step)
+
+__all__ = [
+    "neutron_matmul", "flash_attention", "flash_decode",
+    "combine_decode_shards", "ssd_scan", "ssd_step", "apply_activation",
+]

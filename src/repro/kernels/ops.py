@@ -1,0 +1,173 @@
+"""Public kernel ops — implementation dispatch.
+
+Every op has two implementations with identical semantics:
+
+  * ``pallas``  — the TPU-target kernel (``interpret=True`` on CPU, so it
+    runs the kernel body in Python; correct but slow);
+  * ``ref``     — the pure-jnp oracle (fast under jit on CPU, and what the
+    models use when not running on TPU).
+
+``impl="auto"`` picks pallas on TPU and ref elsewhere, so the same model
+code is TPU-native in production and CPU-testable here.  Tests pin
+``impl="pallas"`` (interpret) vs ``impl="ref"`` and assert allclose.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .flash_attention import flash_attention as _flash_attention_pallas
+from .flash_decode import flash_decode as _flash_decode_pallas
+from .neutron_matmul import neutron_matmul as _neutron_matmul_pallas
+from .ssd_scan import ssd_chunk as _ssd_chunk_pallas
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover
+        return False
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    return impl
+
+
+# --------------------------------------------------------------------------
+# neutron_matmul
+# --------------------------------------------------------------------------
+
+
+def neutron_matmul(x, w, bias=None, scale=None, act: str = "none",
+                   out_dtype=None, out_scale: Optional[float] = None,
+                   impl: str = "auto", **block_kw):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.neutron_matmul_ref(x, w, bias=bias, scale=scale,
+                                       act=act, out_dtype=out_dtype,
+                                       out_scale=out_scale)
+    interpret = not _on_tpu()
+    return _neutron_matmul_pallas(x, w, bias=bias, scale=scale, act=act,
+                                  out_dtype=out_dtype, out_scale=out_scale,
+                                  interpret=interpret, **block_kw)
+
+
+# --------------------------------------------------------------------------
+# flash attention (prefill / train)
+# --------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, causal: bool = True,
+                    window: Optional[int] = None,
+                    sm_scale: Optional[float] = None,
+                    impl: str = "auto", fused_vjp: bool = True,
+                    **block_kw):
+    """q (B,H,S,D); k/v (B,Hkv,Sk,D).
+
+    ``fused_vjp`` uses the FlashAttention-2-style custom backward
+    (O(S·D) residuals).  ``fused_vjp=False`` differentiates through the
+    forward scan — the naive baseline that stacks O(S²) residuals,
+    kept selectable for the §Perf before/after measurement."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        H, Hkv = q.shape[1], k.shape[1]
+        if H != Hkv:
+            g = H // Hkv
+            k = jnp.repeat(k, g, axis=1)
+            v = jnp.repeat(v, g, axis=1)
+        if fused_vjp:
+            return _ref.flash_attention_fused(
+                q, k, v, causal, window, sm_scale,
+                block_kw.get("block_k", 512))
+        return _ref.flash_attention_ref(q, k, v, causal=causal,
+                                        window=window, sm_scale=sm_scale)
+    interpret = not _on_tpu()
+    return _flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                   sm_scale=sm_scale, interpret=interpret,
+                                   **block_kw)
+
+
+# --------------------------------------------------------------------------
+# flash decode
+# --------------------------------------------------------------------------
+
+
+def flash_decode(q, k, v, kv_len=None, sm_scale: Optional[float] = None,
+                 return_lse: bool = False, impl: str = "auto", **block_kw):
+    """q (B,H,D); k/v (B,Hkv,S,D)."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        H, Hkv = q.shape[1], k.shape[1]
+        if H != Hkv:
+            g = H // Hkv
+            k = jnp.repeat(k, g, axis=1)
+            v = jnp.repeat(v, g, axis=1)
+        return _ref.flash_decode_ref(q, k, v, kv_len=kv_len,
+                                     sm_scale=sm_scale,
+                                     return_lse=return_lse)
+    interpret = not _on_tpu()
+    return _flash_decode_pallas(q, k, v, kv_len=kv_len, sm_scale=sm_scale,
+                                return_lse=return_lse, interpret=interpret,
+                                **block_kw)
+
+
+combine_decode_shards = _ref.combine_decode_shards
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD scan
+# --------------------------------------------------------------------------
+
+
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 64, init_state=None,
+             impl: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full chunked SSD: intra-chunk kernel + cross-chunk jnp recurrence.
+
+    x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.ssd_scan_ref(x, dt, A, Bm, Cm, chunk=chunk,
+                                 init_state=init_state)
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = math.ceil(S / chunk)
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    interpret = not _on_tpu()
+    y_in, contrib, total, seg = _ssd_chunk_pallas(
+        x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+
+    def scan_state(s_prev, inp):
+        contrib_c, total_c = inp
+        return s_prev * total_c[..., None, None] + contrib_c, s_prev
+
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((Bsz, H, P, N), dtype=jnp.float32))
+    s_final, s_prevs = jax.lax.scan(
+        scan_state, s0,
+        (contrib.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)            # (B,nc,H,P,N)
+    L = chunk
+    segc = seg.reshape(Bsz, nc, L, H)
+    Cc = Cm.reshape(Bsz, nc, L, N).astype(jnp.float32)
+    y_out = jnp.einsum("bcln,bclh,bchpn->bclhp", Cc, jnp.exp(segc),
+                       s_prevs)
+    y = (y_in.reshape(Bsz, nc, L, H, P) +
+         y_out).reshape(Bsz, nc * L, H, P)[:, :S]
+    return y.astype(x.dtype), s_final.astype(x.dtype)
+
+
+ssd_step = _ref.ssd_step_ref          # O(1) decode step (pure jnp)
+apply_activation = _ref.apply_activation

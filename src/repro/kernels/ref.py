@@ -1,0 +1,405 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the *semantics* of the kernels: small, obviously-correct
+implementations used (a) as the allclose oracle in the kernel test sweeps
+and (b) as the CPU execution path of ``ops.py`` (interpret-mode Pallas is
+far too slow for model-sized shapes).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# --------------------------------------------------------------------------
+# Fused-epilogue activations (the Neutron activation engine, paper §III-B)
+# --------------------------------------------------------------------------
+
+
+def apply_activation(x: jnp.ndarray, act: str) -> jnp.ndarray:
+    if act in ("none", None):
+        return x
+    if act == "relu":
+        return jax.nn.relu(x)
+    if act == "relu6":
+        return jnp.clip(x, 0, 6)
+    if act == "silu":
+        return jax.nn.silu(x)
+    if act == "gelu":
+        return jax.nn.gelu(x)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if act == "sqrelu":                       # nemotron-4 squared ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    if act == "mish":
+        return x * jnp.tanh(jax.nn.softplus(x))
+    raise ValueError(f"unknown activation {act!r}")
+
+
+ACTIVATIONS = ("none", "relu", "relu6", "silu", "gelu", "sigmoid",
+               "sqrelu", "mish")
+
+
+# --------------------------------------------------------------------------
+# neutron_matmul: output-stationary matmul + fused epilogue
+# --------------------------------------------------------------------------
+
+
+def neutron_matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
+                       bias: Optional[jnp.ndarray] = None,
+                       scale: Optional[jnp.ndarray] = None,
+                       act: str = "none",
+                       out_dtype: Optional[jnp.dtype] = None,
+                       out_scale: Optional[float] = None) -> jnp.ndarray:
+    """y = requant(act(scale * (x @ w) + bias)).
+
+    int8 inputs accumulate in int32 (the engine's 32-bit accumulators);
+    float inputs accumulate in float32.  `scale` is scalar or per-column.
+    `out_scale` triggers int8 requantization of the result.
+    """
+    if x.dtype == jnp.int8:
+        acc = jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+    else:
+        acc = jax.lax.dot_general(
+            x.astype(jnp.float32), w.astype(jnp.float32),
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    if scale is not None:
+        acc = acc * scale
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    acc = apply_activation(acc, act)
+    if out_scale is not None:
+        q = jnp.round(acc / out_scale)
+        return jnp.clip(q, -128, 127).astype(jnp.int8)
+    return acc.astype(out_dtype or x.dtype
+                      if x.dtype != jnp.int8 else jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Attention
+# --------------------------------------------------------------------------
+
+
+def attention_naive(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True,
+                    window: Optional[int] = None,
+                    sm_scale: Optional[float] = None) -> jnp.ndarray:
+    """Exact O(S^2) softmax attention.  q (B,H,S,D), k/v (B,H,S,D)."""
+    B, H, S, D = q.shape
+    sm_scale = sm_scale or 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    qi = jnp.arange(S)[:, None]
+    kj = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), dtype=bool)
+    if causal:
+        mask &= kj <= qi
+    if window is not None:
+        mask &= qi - kj < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        sm_scale: Optional[float] = None,
+                        block_k: int = 512) -> jnp.ndarray:
+    """Streaming-softmax attention in jnp — O(S·block_k) memory.
+
+    The memory-oracle for the Pallas flash kernel and the CPU/jit path
+    used inside the LM models for long sequences.
+    """
+    B, H, S, D = q.shape
+    Dv = v.shape[-1]
+    Sk = k.shape[2]
+    sm_scale = sm_scale or 1.0 / math.sqrt(D)
+    block_k = min(block_k, Sk)
+    nk = math.ceil(Sk / block_k)
+    pad = nk * block_k - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(B, H, nk, block_k, D)
+    vb = v.reshape(B, H, nk, block_k, Dv)
+    qf = q.astype(jnp.float32)
+    qi = jnp.arange(S)[:, None]
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, j = blk
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf,
+                       kc.astype(jnp.float32)) * sm_scale
+        kj = j * block_k + jnp.arange(block_k)[None, :]
+        mask = kj < Sk
+        if causal:
+            mask &= kj <= qi
+        if window is not None:
+            mask &= qi - kj < window
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, S), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((B, H, S), dtype=jnp.float32)
+    a0 = jnp.zeros((B, H, S, Dv), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kb.transpose(2, 0, 1, 3, 4), vb.transpose(2, 0, 1, 3, 4),
+         jnp.arange(nk)))
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def _flash_fwd_lse(q, k, v, causal, window, sm_scale, block_k):
+    """Forward streaming softmax returning (o, lse).  Shapes as
+    flash_attention_ref with H == Hkv."""
+    B, H, S, D = q.shape
+    Dv = v.shape[-1]
+    Sk = k.shape[2]
+    block_k = min(block_k, Sk)
+    nk = math.ceil(Sk / block_k)
+    pad = nk * block_k - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = k.reshape(B, H, nk, block_k, D)
+    vb = v.reshape(B, H, nk, block_k, Dv)
+    qf = q.astype(jnp.float32)
+    qi = jnp.arange(S)[:, None]
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kc, vc, j = blk
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf,
+                       kc.astype(jnp.float32)) * sm_scale
+        kj = j * block_k + jnp.arange(block_k)[None, :]
+        mask = kj < Sk
+        if causal:
+            mask &= kj <= qi
+        if window is not None:
+            mask &= qi - kj < window
+        s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vc.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, H, S), -jnp.inf, dtype=jnp.float32)
+    l0 = jnp.zeros((B, H, S), dtype=jnp.float32)
+    a0 = jnp.zeros((B, H, S, Dv), dtype=jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (kb.transpose(2, 0, 1, 3, 4), vb.transpose(2, 0, 1, 3, 4),
+         jnp.arange(nk)))
+    l = jnp.maximum(l, 1e-30)
+    o = (acc / l[..., None]).astype(q.dtype)
+    lse = m + jnp.log(l)
+    return o, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention_fused(q, k, v, causal=True, window=None,
+                          sm_scale=None, block_k=512):
+    """Flash attention with a *fused backward*: residuals are only
+    (q, k, v, o, lse) — O(S·D) — and the backward recomputes each score
+    block (the standard FlashAttention-2 recipe).  Without this, autodiff
+    of the forward scan stacks O(S²) per-block residuals, which the
+    dry-run roofline exposes as a ~10x HBM-traffic bug (§Perf)."""
+    sm = sm_scale or 1.0 / math.sqrt(q.shape[-1])
+    o, _ = _flash_fwd_lse(q, k, v, causal, window, sm, block_k)
+    return o
+
+
+def _faf_fwd(q, k, v, causal, window, sm_scale, block_k):
+    sm = sm_scale or 1.0 / math.sqrt(q.shape[-1])
+    o, lse = _flash_fwd_lse(q, k, v, causal, window, sm, block_k)
+    return o, (q, k, v, o, lse)
+
+
+def _faf_bwd(causal, window, sm_scale, block_k, res, do):
+    q, k, v, o, lse = res
+    B, H, S, D = q.shape
+    Dv = v.shape[-1]
+    Sk = k.shape[2]
+    sm = sm_scale or 1.0 / math.sqrt(D)
+    bk = min(block_k, Sk)
+    nk = math.ceil(Sk / bk)
+    pad = nk * bk - Sk
+    kp, vp = k, v
+    if pad:
+        kp = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    kb = kp.reshape(B, H, nk, bk, D).transpose(2, 0, 1, 3, 4)
+    vb = vp.reshape(B, H, nk, bk, Dv).transpose(2, 0, 1, 3, 4)
+    qf = q.astype(jnp.float32)
+    dof = do.astype(jnp.float32)
+    delta = jnp.sum(dof * o.astype(jnp.float32), axis=-1)     # (B,H,S)
+    qi = jnp.arange(S)[:, None]
+
+    def step(dq, blk):
+        kc, vc, j = blk
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf,
+                       kc.astype(jnp.float32)) * sm
+        kj = j * bk + jnp.arange(bk)[None, :]
+        mask = kj < Sk
+        if causal:
+            mask &= kj <= qi
+        if window is not None:
+            mask &= qi - kj < window
+        p = jnp.where(mask, jnp.exp(s - lse[..., None]), 0.0)
+        dv_j = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+        dp = jnp.einsum("bhqd,bhkd->bhqk", dof,
+                        vc.astype(jnp.float32))
+        ds = p * (dp - delta[..., None]) * sm
+        dq = dq + jnp.einsum("bhqk,bhkd->bhqd", ds,
+                             kc.astype(jnp.float32))
+        dk_j = jnp.einsum("bhqk,bhqd->bhkd", ds, qf)
+        return dq, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, H, S, D), jnp.float32)
+    dq, (dk_b, dv_b) = jax.lax.scan(step, dq0,
+                                    (kb, vb, jnp.arange(nk)))
+    dk = dk_b.transpose(1, 2, 0, 3, 4).reshape(B, H, nk * bk, D)[:, :, :Sk]
+    dv = dv_b.transpose(1, 2, 0, 3, 4).reshape(B, H, nk * bk,
+                                               Dv)[:, :, :Sk]
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention_fused.defvjp(_faf_fwd, _faf_bwd)
+
+
+def flash_decode_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     kv_len: Optional[jnp.ndarray] = None,
+                     sm_scale: Optional[float] = None,
+                     return_lse: bool = False):
+    """Single-token decode attention.  q (B,H,D); k/v (B,H,S,D).
+
+    `kv_len` (B,) masks the valid prefix of the cache.  With
+    ``return_lse`` the (B,H) log-sum-exp is returned for cross-shard
+    combination (long-context KV sharded over devices).
+    """
+    B, H, S, D = k.shape
+    sm_scale = sm_scale or 1.0 / math.sqrt(D)
+    s = jnp.einsum("bhd,bhkd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * sm_scale
+    if kv_len is not None:
+        mask = jnp.arange(S)[None, None, :] < kv_len[:, None, None]
+        s = jnp.where(mask, s, -1e30)
+    m = s.max(axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bhk,bhkd->bhd", p, v.astype(jnp.float32))
+    o = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    if return_lse:
+        lse = m[..., 0] + jnp.log(jnp.maximum(l, 1e-30))
+        return o, lse
+    return o
+
+
+def combine_decode_shards(outs: jnp.ndarray, lses: jnp.ndarray
+                          ) -> jnp.ndarray:
+    """Merge per-shard decode partials.  outs (N,B,H,D), lses (N,B,H)."""
+    m = lses.max(axis=0)
+    w = jnp.exp(lses - m)                      # (N,B,H)
+    denom = w.sum(axis=0)
+    o = (outs.astype(jnp.float32) * w[..., None]).sum(axis=0)
+    return (o / jnp.maximum(denom, 1e-30)[..., None]).astype(outs.dtype)
+
+
+# --------------------------------------------------------------------------
+# Mamba2 SSD (state-space duality) chunked scan
+# --------------------------------------------------------------------------
+
+
+def ssd_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                 Bm: jnp.ndarray, Cm: jnp.ndarray,
+                 chunk: int = 64,
+                 init_state: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD forward (Mamba2, arXiv:2405.21060 §6).
+
+    x  (B, S, H, P)   per-head inputs
+    dt (B, S, H)      softplus-activated step sizes (>0)
+    A  (H,)           negative decay rates
+    Bm (B, S, N)      input projection (single group)
+    Cm (B, S, N)      output projection
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    nc = math.ceil(S / chunk)
+    pad = nc * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    L = chunk
+    xc = x.reshape(Bsz, nc, L, H, P)
+    dtc = dt.reshape(Bsz, nc, L, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, L, N).astype(jnp.float32)
+    Cc = Cm.reshape(Bsz, nc, L, N).astype(jnp.float32)
+
+    da = dtc * A.astype(jnp.float32)[None, None, None, :]   # (B,nc,L,H)
+    seg = jnp.cumsum(da, axis=2)                            # inclusive
+    # intra-chunk: y[t] = sum_{s<=t} C[t]·B[s] exp(seg[t]-seg[s]) dt[s] x[s]
+    cb = jnp.einsum("bcln,bcmn->bclm", Cc, Bc)              # (B,nc,L,L)
+    decay = seg[:, :, :, None, :] - seg[:, :, None, :, :]   # (B,nc,L,L,H)
+    tri = jnp.tril(jnp.ones((L, L), dtype=bool))
+    decay = jnp.where(tri[None, None, :, :, None], decay, -jnp.inf)
+    gate = jnp.exp(decay)                                   # (B,nc,L,L,H)
+    y_in = jnp.einsum("bclm,bclmh,bcmh,bcmhp->bclhp",
+                      cb, gate, dtc, xc.astype(jnp.float32))
+    # chunk state contribution: sum_s exp(seg[L-1]-seg[s]) dt[s] B[s]⊗x[s]
+    tail = jnp.exp(seg[:, :, -1:, :] - seg)                 # (B,nc,L,H)
+    contrib = jnp.einsum("bclh,bclh,bcln,bclhp->bchpn",
+                         tail, dtc, Bc, xc.astype(jnp.float32))
+    total = jnp.exp(seg[:, :, -1, :])                       # (B,nc,H)
+
+    def scan_state(s_prev, inp):
+        contrib_c, total_c = inp
+        s_new = s_prev * total_c[..., None, None] + contrib_c
+        return s_new, s_prev
+
+    s0 = (init_state.astype(jnp.float32) if init_state is not None
+          else jnp.zeros((Bsz, H, P, N), dtype=jnp.float32))
+    s_final, s_prevs = jax.lax.scan(
+        scan_state, s0,
+        (contrib.transpose(1, 0, 2, 3, 4), total.transpose(1, 0, 2)))
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)              # (B,nc,H,P,N)
+    # inter-chunk: y[t] += C[t] · (exp(seg[t]) * S_prev)
+    y_out = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                       Cc, jnp.exp(seg), s_prevs)
+    y = (y_in + y_out).reshape(Bsz, nc * L, H, P)[:, :S]
+    return y.astype(x.dtype), s_final.astype(x.dtype)
+
+
+def ssd_step_ref(state: jnp.ndarray, x: jnp.ndarray, dt: jnp.ndarray,
+                 A: jnp.ndarray, Bm: jnp.ndarray, Cm: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Single-token SSD recurrence (decode).  state (B,H,P,N);
+    x (B,H,P); dt (B,H); Bm/Cm (B,N)."""
+    da = jnp.exp(dt.astype(jnp.float32) *
+                 A.astype(jnp.float32)[None, :])            # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(jnp.float32),
+                     Bm.astype(jnp.float32), x.astype(jnp.float32))
+    new = state.astype(jnp.float32) * da[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(jnp.float32), new)
+    return y.astype(x.dtype), new.astype(state.dtype)

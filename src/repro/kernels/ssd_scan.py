@@ -1,0 +1,125 @@
+"""Mamba2 SSD chunk kernel (state-space duality, arXiv:2405.21060 §6).
+
+The SSD algorithm splits the sequence into chunks: within a chunk the
+recurrence is computed as a (masked, decay-weighted) attention-like
+quadratic form — MXU-friendly matmuls — while an O(S/L) recurrence
+carries state across chunks.  This kernel computes the *intra-chunk*
+quadratic part plus each chunk's state contribution and total decay; the
+cheap cross-chunk scan runs in jnp (``ops.ssd_scan``).
+
+The mapping to the paper's architecture: the (L x L) decay-gated score
+block and the (P x N) state contribution live in VMEM for the duration of
+a chunk (output-stationary), while x/dt/B/C chunk operands stream in —
+exactly the operand-bandwidth-vs-accumulator-locality trade the Neutron
+dot-product engine makes with its A-deep accumulator pool.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_chunk_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref,
+                      y_ref, contrib_ref, total_ref, seg_ref, *,
+                      chunk: int):
+    """Grid cell = (batch, chunk, head).  Blocks:
+    x (L,P), dt (L,1), a (1,1), b (L,N), c (L,N) ->
+    y_intra (L,P), contrib (P,N), total (1,1), seg (L,1)."""
+    x = x_ref[0, 0].astype(jnp.float32)           # (L, P)
+    dt = dt_ref[0, 0].astype(jnp.float32)         # (L, 1)
+    A = a_ref[0, 0]                               # scalar decay rate (<0)
+    Bm = b_ref[0, 0].astype(jnp.float32)          # (L, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)          # (L, N)
+
+    da = dt * A                                   # (L, 1)
+    seg = jnp.cumsum(da, axis=0)                  # inclusive cumsum (L, 1)
+    # decay-gated scores: G[t,s] = exp(seg[t]-seg[s]) * (C[t]·B[s]) * dt[s]
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (L, L)
+    decay = seg - seg.reshape(1, chunk)           # seg[t] - seg[s]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    gate = jnp.where(si <= ti, jnp.exp(decay), 0.0)
+    scores = cb * gate * dt.reshape(1, chunk)     # (L, L)
+    y_ref[0, 0] = jax.lax.dot_general(
+        scores, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(y_ref.dtype)
+    # chunk state contribution: sum_s exp(seg[-1]-seg[s]) dt[s] x[s]⊗B[s]
+    tail = jnp.exp(seg[chunk - 1] - seg) * dt     # (L, 1)
+    xw = x * tail                                 # (L, P)
+    contrib_ref[0, 0] = jax.lax.dot_general(
+        xw, Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(contrib_ref.dtype)
+    total_ref[0, 0] = jnp.exp(seg[chunk - 1:chunk]).astype(total_ref.dtype)
+    seg_ref[0, 0] = seg.astype(seg_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunk(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+              Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int = 64,
+              interpret: bool = True
+              ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                         jnp.ndarray]:
+    """Intra-chunk SSD.  x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N).
+    S must be a multiple of `chunk` (ops.py pads).
+
+    Returns (y_intra (B,S,H,P), contrib (B,nc,H,P,N), total (B,nc,H),
+    seg (B,S,H))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0
+    nc = S // chunk
+    L = chunk
+
+    # layout: (B, nc, H, L, ...) so each grid cell reads one (L, ...) block
+    xr = x.reshape(Bsz, nc, L, H, P).transpose(0, 1, 3, 2, 4)
+    dtr = dt.reshape(Bsz, nc, L, H).transpose(0, 1, 3, 2)[..., None]
+    br = jnp.broadcast_to(Bm.reshape(Bsz, nc, 1, L, N),
+                          (Bsz, nc, H, L, N))
+    cr = jnp.broadcast_to(Cm.reshape(Bsz, nc, 1, L, N),
+                          (Bsz, nc, H, L, N))
+    ar = A.reshape(H, 1).astype(jnp.float32)
+
+    grid = (Bsz * nc, H)
+    kernel = functools.partial(_ssd_chunk_kernel, chunk=L)
+    y, contrib, total, seg = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda bc, h: (bc, h, 0, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda bc, h: (bc, h, 0, 0)),
+            pl.BlockSpec((1, 1), lambda bc, h: (h, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda bc, h: (bc, h, 0, 0)),
+            pl.BlockSpec((1, 1, L, N), lambda bc, h: (bc, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, P), lambda bc, h: (bc, h, 0, 0)),
+            pl.BlockSpec((1, 1, P, N), lambda bc, h: (bc, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1, 1), lambda bc, h: (bc, h, 0, 0)),
+            pl.BlockSpec((1, 1, L, 1), lambda bc, h: (bc, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz * nc, H, L, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz * nc, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz * nc, H, 1, 1), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz * nc, H, L, 1), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(xr.reshape(Bsz * nc, H, L, P), dtr.reshape(Bsz * nc, H, L, 1),
+      ar, br.reshape(Bsz * nc, H, L, N), cr.reshape(Bsz * nc, H, L, N))
+
+    y = y.reshape(Bsz, nc, H, L, P).transpose(0, 1, 3, 2, 4) \
+         .reshape(Bsz, S, H, P)
+    contrib = contrib.reshape(Bsz, nc, H, P, N)
+    total = total.reshape(Bsz, nc, H)
+    seg = seg.reshape(Bsz, nc, H, L).transpose(0, 1, 3, 2) \
+             .reshape(Bsz, S, H)
+    return y, contrib, total, seg

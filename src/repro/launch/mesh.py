@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so
+importing this module never touches jax device state — only the dry-run
+entrypoint forces the 512-device host platform.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(n_data: int, n_model: int, n_pod: int = 1):
+    """Explicit mesh for tests / elastic re-mesh."""
+    if n_pod > 1:
+        return jax.make_mesh((n_pod, n_data, n_model),
+                             ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def single_device_mesh():
+    """1x1 mesh for CPU unit tests (specs resolve, collectives no-op)."""
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,243 @@
+"""Shared neural-net layers: norms, rotary embeddings, MLPs, embeddings.
+
+Functional style: parameters are plain dicts of jnp arrays; every layer is
+``fn(params, x, ...) -> y``.  Initializers take an explicit PRNG key so
+``jax.eval_shape`` can derive abstract parameter trees for the dry-run
+without allocating a single byte.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# --------------------------------------------------------------------------
+# Initializers
+# --------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+
+def rms_norm(w: jnp.ndarray, x: jnp.ndarray, eps: float = 1e-6
+             ) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rms_norm(d: int, dtype) -> jnp.ndarray:
+    return jnp.zeros((d,), dtype)
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings (RoPE + M-RoPE)
+# --------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) * 2
+                            / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 1e4) -> jnp.ndarray:
+    """x (..., S, H, D) or (..., S, D); positions (..., S)."""
+    D = x.shape[-1]
+    freqs = rope_freqs(D, theta)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, D/2)
+    if x.ndim == ang.ndim + 1:                              # head axis
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jnp.ndarray, positions3: jnp.ndarray,
+                sections: Sequence[int], theta: float = 1e4
+                ) -> jnp.ndarray:
+    """Qwen2-VL multimodal RoPE.  x (B, S, H, D); positions3 (3, B, S) —
+    temporal/height/width position ids.  `sections` split D/2 into the
+    three axes' frequency bands."""
+    D = x.shape[-1]
+    half = D // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(D, theta)                            # (half,)
+    # per-frequency axis selector: which of t/h/w drives this band
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                        total_repeat_length=half)           # (half,)
+    pos = positions3.astype(jnp.float32)                    # (3, B, S)
+    ang = jnp.einsum("abs,f->absf", pos, freqs)             # (3,B,S,half)
+    onehot = jax.nn.one_hot(sec_id, 3, dtype=jnp.float32)   # (half, 3)
+    ang = jnp.einsum("absf,fa->bsf", ang, onehot)           # (B,S,half)
+    ang = ang[..., None, :]                                 # head axis
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, f: int, dtype, gated: bool = True) -> Dict:
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], (d, f), dtype),
+         "w_out": dense_init(ks[1], (f, d), dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d, f), dtype)
+    return p
+
+
+def mlp(p: Dict, x: jnp.ndarray, act: str = "silu",
+        gated: bool = True) -> jnp.ndarray:
+    h = x @ p["w_in"]
+    if gated:
+        h = ops.apply_activation(x @ p["w_gate"], act) * h
+    else:
+        h = ops.apply_activation(h, act)
+    return h @ p["w_out"]
+
+
+# --------------------------------------------------------------------------
+# Embedding / LM head
+# --------------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return embed_init(key, (vocab, d), dtype)
+
+
+def embed(table: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_logits(head: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """head (d, V) or the tied embedding table (V, d)."""
+    if head.shape[0] < head.shape[1]:        # (d, V)
+        return h @ head
+    return h @ head.T
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Stable sharded-safe CE.  logits (..., V); labels (...,)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+# --------------------------------------------------------------------------
+# Fused LM-head + cross-entropy (chunked over tokens, custom VJP)
+# --------------------------------------------------------------------------
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def fused_ce(h: jnp.ndarray, w: jnp.ndarray, labels: jnp.ndarray,
+             chunk_s: int = 512) -> jnp.ndarray:
+    """mean softmax-CE of (h @ w) vs labels WITHOUT materializing the
+    (B, S, V) float32 logits (+their cotangent): the scan walks the
+    SEQUENCE axis in `chunk_s`-position blocks, keeping the batch axis
+    intact so data-parallel sharding survives — per chip one
+    (B_loc, chunk_s, V_loc) block of logits exists at a time, forward
+    and backward (recomputation).  For 256k-vocab models this removes
+    the dominant HBM-traffic term of the training step.
+    h (B, S, d); w (d, V); labels (B, S) with -1 = ignore."""
+    return _fused_ce_fwd(h, w, labels, chunk_s)[0]
+
+
+def _ce_chunks(h, labels, chunk_s):
+    B, S, d = h.shape
+    cs = min(chunk_s, S)
+    nc = max(1, math.ceil(S / cs))
+    pad = nc * cs - S
+    hp = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+    lp = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    # (nc, B, cs, ...) so scan slices along the sequence axis only
+    hc = hp.reshape(B, nc, cs, d).transpose(1, 0, 2, 3)
+    lc = lp.reshape(B, nc, cs).transpose(1, 0, 2)
+    return hc, lc, pad
+
+
+def _fused_ce_fwd(h, w, labels, chunk_s):
+    hc, lc, pad = _ce_chunks(h, labels, chunk_s)
+    n_valid = jnp.maximum((labels >= 0).sum(), 1).astype(jnp.float32)
+
+    def body(acc, xs):
+        hb, lb = xs                       # (B, cs, d), (B, cs)
+        logits = hb.astype(jnp.float32) @ w.astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1)[..., 0]
+        nll = jnp.where(lb >= 0, lse - gold, 0.0)
+        return acc + nll.sum(), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / n_valid, (h, w, labels)
+
+
+def _fused_ce_bwd(chunk_s, res, g):
+    h, w, labels = res
+    hc, lc, pad = _ce_chunks(h, labels, chunk_s)
+    wf = w.astype(jnp.float32)
+    n_valid = jnp.maximum((labels >= 0).sum(), 1).astype(jnp.float32)
+    scale = g / n_valid
+
+    def body(dw, xs):
+        hb, lb = xs
+        B, cs, d = hb.shape
+        logits = hb.astype(jnp.float32) @ wf
+        p = jax.nn.softmax(logits, axis=-1)
+        onehot = jax.nn.one_hot(jnp.maximum(lb, 0), p.shape[-1],
+                                dtype=jnp.float32)
+        dl = (p - onehot) * (lb >= 0)[..., None] * scale
+        dh = dl @ wf.T
+        dw = dw + jnp.einsum("bcd,bcv->dv", hb.astype(jnp.float32), dl)
+        return dw, dh
+
+    dw0 = jnp.zeros(w.shape, jnp.float32)
+    dw, dhc = jax.lax.scan(body, dw0, (hc, lc))
+    dh = dhc.transpose(1, 0, 2, 3).reshape(
+        h.shape[0], -1, h.shape[2])
+    if pad:
+        dh = dh[:, :-pad]
+    return (dh.astype(h.dtype), dw.astype(w.dtype), None)
+
+
+fused_ce.defvjp(lambda h, w, l, c: _fused_ce_fwd(h, w, l, c),
+                _fused_ce_bwd)

@@ -1,0 +1,281 @@
+"""Architecture × shape registry: input specs, step functions, shardings.
+
+This is the single source of truth the dry-run, benchmarks and tests all
+consume:
+
+    get_arch(name)              -> ArchConfig (from repro.configs)
+    SHAPES                      -> the four assigned input-shape cells
+    cells(cfg)                  -> the valid (arch, shape) cells
+    input_specs(cfg, shape)     -> dict of ShapeDtypeStruct model inputs
+    abstract_state(cfg, shape)  -> eval_shape'd state/cache trees
+    build_step(cfg, shape)      -> (step_fn, arg structs, in/out specs)
+
+Decode shapes lower ``serve_step`` (one token against a full cache);
+``long_500k`` exists only for sub-quadratic archs; encoder-only models
+have no decode cells (none assigned); the modality frontends are stubs —
+``input_specs`` emits precomputed frame/patch embeddings as inputs.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from . import lm
+from .config import ArchConfig
+from .sharding import tree_partition_specs
+from .train import TrainState, init_train_state, make_train_step
+
+ARCH_IDS = [
+    "zamba2-2.7b", "whisper-tiny", "granite-moe-1b-a400m",
+    "deepseek-v3-671b", "mamba2-370m", "minitron-4b", "gemma3-27b",
+    "nemotron-4-340b", "granite-20b", "qwen2-vl-2b",
+]
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    mod = importlib.import_module(
+        "repro.configs." + name.replace("-", "_").replace(".", "_"))
+    return mod.CONFIG
+
+
+def cells(cfg: ArchConfig) -> List[str]:
+    """Valid shape cells for this arch (long_500k only sub-quadratic)."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        out.append("long_500k")
+    return out
+
+
+# --------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins, zero allocation)
+# --------------------------------------------------------------------------
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> Dict[str, Any]:
+    ss = SHAPES[shape]
+    B, S = ss.global_batch, ss.seq_len
+    if ss.kind in ("train", "prefill"):
+        batch = {"tokens": _sds((B, S), jnp.int32),
+                 "labels": _sds((B, S), jnp.int32)}
+        if cfg.enc_dec:
+            batch["audio_embed"] = _sds(
+                (B, cfg.n_audio_frames, cfg.d_model), jnp.float32)
+        if cfg.family == "vlm":
+            batch["vision_embed"] = _sds(
+                (B, cfg.n_vision_tokens, cfg.d_model), jnp.float32)
+        return batch
+    # decode: one token + position
+    return {"token": _sds((B,), jnp.int32),
+            "pos": _sds((), jnp.int32)}
+
+
+def decode_aux_specs(cfg: ArchConfig, shape: str) -> Optional[Dict]:
+    if not cfg.enc_dec:
+        return None
+    ss = SHAPES[shape]
+    B = ss.global_batch
+    Hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    Se = cfg.n_audio_frames
+    return {
+        "enc_states": _sds((B, Se, cfg.d_model), jnp.float32),
+        "cross_kv": {
+            "k": _sds((cfg.n_layers, B, Hkv, Se, hd), jnp.bfloat16
+                      if cfg.dtype == "bfloat16" else jnp.float32),
+            "v": _sds((cfg.n_layers, B, Hkv, Se, hd), jnp.bfloat16
+                      if cfg.dtype == "bfloat16" else jnp.float32),
+        },
+    }
+
+
+# --------------------------------------------------------------------------
+# Abstract state trees (params / optimizer / caches) via eval_shape
+# --------------------------------------------------------------------------
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(partial(lm.init_params, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_train_state(cfg: ArchConfig):
+    return jax.eval_shape(partial(init_train_state, cfg),
+                          jax.random.PRNGKey(0))
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(partial(lm.init_cache, cfg, batch, max_len))
+
+
+# --------------------------------------------------------------------------
+# Sharding specs
+# --------------------------------------------------------------------------
+
+
+def batch_spec(kind: str, with_pod: bool) -> Any:
+    data = ("pod", "data") if with_pod else "data"
+    if kind == "decode":
+        return {"token": P(data), "pos": P()}
+    return P(data, None)
+
+
+def state_specs(cfg: ArchConfig, state_like, with_pod: bool = False,
+                n_model: int = 16):
+    fsdp = "data" if cfg.fsdp else None
+    # Q heads are padded to a tp_pad multiple (clean head sharding);
+    # wk/wv stay column-sharded — the activation constraint in
+    # attention() gathers the small kv tensor to replicated when the kv
+    # heads don't divide the model axis (broadcast-operand format).
+    return tree_partition_specs(state_like, model_axis="model",
+                                fsdp_axis=fsdp)
+
+
+def cache_specs(cfg: ArchConfig, cache_like, shape: str,
+                with_pod: bool = False, n_model: int = 16):
+    """KV caches: batch over data (decode_32k) or sequence over data
+    (long_500k, B=1); heads over model only when the nominal kv-head
+    count divides the model axis (else replicated — broadcast operand)."""
+    from .sharding import _path_str, enforce_divisible
+    ss = SHAPES[shape]
+    seq_shard = ss.global_batch < 8          # long-context single stream
+    kv_model = "model" if (cfg.n_kv_heads
+                           and cfg.n_kv_heads % n_model == 0) else None
+
+    def spec_of(path, leaf):
+        ps = _path_str(path)
+        nd = len(leaf.shape)
+        if "conv" in ps:          # SSM conv state (..., B, K-1, C)
+            names = [None] * nd
+            names[nd - 3] = "data"
+            names[nd - 1] = "model"
+            out = P(*names)
+        elif "ssd" in ps:         # SSD state (..., B, H, P, N)
+            names = [None] * nd
+            names[nd - 4] = "data"
+            names[nd - 3] = "model"
+            out = P(*names)
+        elif "latent" in ps:      # MLA latent (..., B, S, w)
+            names = [None] * nd
+            if seq_shard:
+                names[nd - 2] = "data"
+            else:
+                names[nd - 3] = "data"
+            out = P(*names)
+        else:                     # KV (..., B, Hkv, S, hd)
+            names = [None] * nd
+            if seq_shard:
+                names[nd - 2] = "data"
+            else:
+                names[nd - 4] = "data"
+            names[nd - 3] = kv_model
+            if kv_model is None and not seq_shard:
+                # broadcast-operand KV heads: shard the SEQUENCE over
+                # `model` instead — decode attention reduces over S, so
+                # each shard computes a partial softmax (combined via
+                # the log-sum-exp identity by GSPMD); without this the
+                # cache is replicated 16x (nemotron-340b: 467 GB/chip)
+                names[nd - 2] = "model"
+            out = P(*names)
+        return enforce_divisible(out, tuple(leaf.shape))
+
+    return jax.tree_util.tree_map_with_path(spec_of, cache_like)
+
+
+# --------------------------------------------------------------------------
+# Step builders
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class StepBundle:
+    fn: Callable
+    args: Tuple                   # abstract arg structs, in call order
+    in_specs: Tuple
+    out_specs: Any
+    donate: Tuple = ()
+
+
+def build_step(cfg: ArchConfig, shape: str,
+               with_pod: bool = False, n_micro: int = 1,
+               compress: bool = False) -> StepBundle:
+    ss = SHAPES[shape]
+    if ss.kind == "train":
+        from .train import TrainOptions
+        opts = TrainOptions(n_micro=n_micro, compress_grads=compress)
+        step = make_train_step(cfg, opts=opts)
+        state = jax.eval_shape(
+            partial(init_train_state, cfg, opts=opts),
+            jax.random.PRNGKey(0))
+        batch = input_specs(cfg, shape)
+        sspec = state_specs(cfg, state, with_pod)
+        bspec = jax.tree_util.tree_map(
+            lambda _: batch_spec("train", with_pod), batch)
+        mspec = {"loss": P(), "grad_norm": P(), "lr_scale": P(),
+                 "step": P()}
+        return StepBundle(step, (state, batch), (sspec, bspec),
+                          (sspec, mspec), donate=(0,))
+
+    if ss.kind == "prefill":
+
+        def prefill_fn(params, batch):
+            return lm.prefill(cfg, params, batch)
+
+        params = abstract_params(cfg)
+        batch = input_specs(cfg, shape)
+        pspec = state_specs(cfg, params, with_pod)
+        bspec = jax.tree_util.tree_map(
+            lambda _: batch_spec("prefill", with_pod), batch)
+        vocab_ok = cfg.vocab % 16 == 0
+        out = P(("pod", "data") if with_pod else "data",
+                "model" if vocab_ok else None)
+        return StepBundle(prefill_fn, (params, batch), (pspec, bspec),
+                          out)
+
+    # decode
+    aux = decode_aux_specs(cfg, shape)
+
+    def serve_step(params, cache, token, pos, aux_in=None):
+        return lm.decode_step(cfg, params, cache, token, pos, aux=aux_in)
+
+    params = abstract_params(cfg)
+    cache = abstract_cache(cfg, ss.global_batch, ss.seq_len)
+    ins = input_specs(cfg, shape)
+    pspec = state_specs(cfg, params, with_pod)
+    cspec = cache_specs(cfg, cache, shape, with_pod)
+    tok_spec = P("data") if ss.global_batch >= 8 else P()
+    vocab_ok = cfg.vocab % 16 == 0
+    logits_spec = P("data" if ss.global_batch % 16 == 0 else None,
+                    "model" if vocab_ok else None)
+    args = [params, cache, ins["token"], ins["pos"]]
+    in_specs = [pspec, cspec, tok_spec, P()]
+    if aux is not None:
+        args.append(aux)
+        in_specs.append(jax.tree_util.tree_map(
+            lambda _: P(), aux))
+    return StepBundle(serve_step, tuple(args), tuple(in_specs),
+                      (logits_spec, cspec), donate=(1,))

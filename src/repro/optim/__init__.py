@@ -1,0 +1,8 @@
+from .adamw import AdamWConfig, AdamWState, apply_updates, global_norm, \
+    init_state
+from .compression import compress_grads, init_error
+from .schedules import constant, warmup_cosine
+
+__all__ = ["AdamWConfig", "AdamWState", "apply_updates", "global_norm",
+           "init_state", "compress_grads", "init_error", "constant",
+           "warmup_cosine"]

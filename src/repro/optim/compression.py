@@ -1,0 +1,52 @@
+"""Error-feedback int8 gradient compression for the cross-pod axis.
+
+At 2+ pods the gradient all-reduce crosses DCN (much slower than ICI).
+Compressing the cross-pod payload to int8 with per-tensor scales cuts
+those bytes 4x (bf16) while error feedback keeps the optimizer unbiased:
+the quantization residual is carried to the next step — standard
+EF-SGD/EF21-style memory.
+
+Usage inside train_step (per parameter leaf):
+    q, scale, new_err = compress(g + err)
+    g_hat = decompress(q, scale)              # what actually syncs
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_leaf(g: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """g -> (int8 q, scale, residual)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    resid = gf - q.astype(jnp.float32) * scale
+    return q, scale, resid
+
+
+def decompress_leaf(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error(params: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: Any, error: Any) -> Tuple[Any, Any]:
+    """Returns (decompressed grads as synced, new error feedback)."""
+
+    def one(g, e):
+        q, s, r = compress_leaf(g.astype(jnp.float32) + e)
+        return decompress_leaf(q, s).astype(g.dtype), r
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = jax.tree_util.tree_leaves(error)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    gs = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    es = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    return gs, es

@@ -1,0 +1,120 @@
+"""Per-architecture smoke tests: reduced config of the same family runs
+one forward + one train step + a decode step on CPU; output shapes right,
+no NaNs.  Full configs are exercised only via the dry-run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import lm
+from repro.models.registry import ARCH_IDS, get_arch
+from repro.models.train import TrainOptions, init_train_state, \
+    make_train_step
+
+
+def _batch_for(cfg, n=2, S=16, seed=0):
+    rng = np.random.default_rng(seed)
+    tokens = rng.integers(0, cfg.vocab, size=(n, S)).astype(np.int32)
+    batch = {"tokens": tokens, "labels": tokens.copy()}
+    if cfg.enc_dec:
+        batch["audio_embed"] = rng.normal(
+            size=(n, cfg.n_audio_frames, cfg.d_model)).astype(np.float32)
+    if cfg.family == "vlm":
+        batch["vision_embed"] = rng.normal(
+            size=(n, cfg.n_vision_tokens, cfg.d_model)).astype(np.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_forward_smoke(arch):
+    cfg = get_arch(arch).reduced(dtype="float32")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    logits = lm.forward(cfg, params, batch)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert not bool(jnp.isnan(logits.astype(jnp.float32)).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_train_step_smoke(arch):
+    cfg = get_arch(arch).reduced(dtype="float32")
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg))
+    batch = _batch_for(cfg)
+    state, metrics = step(state, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    assert int(metrics["step"]) == 1
+    # params actually changed
+    state2, metrics2 = step(state, batch)
+    assert float(metrics2["loss"]) != loss or \
+        float(metrics2["grad_norm"]) != float(metrics["grad_norm"])
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_decode_matches_forward(arch):
+    cfg = get_arch(arch).reduced(dtype="float32",
+                                 capacity_factor=8.0)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    n, S = 2, 12
+    batch = _batch_for(cfg, n=n, S=S)
+    aux = None
+    if cfg.enc_dec:
+        enc = lm.encode_audio(cfg, params, batch["audio_embed"])
+        aux = {"enc_states": enc,
+               "cross_kv": lm.cross_kv(cfg, params, enc)}
+    if cfg.family == "vlm":
+        aux = {"vision_embed": batch["vision_embed"]}
+    ref_logits = lm.forward(cfg, params, batch)
+    cache = lm.init_cache(cfg, n, S)
+    step = jax.jit(lambda p, c, t, pos: lm.decode_step(cfg, p, c, t, pos,
+                                                       aux=aux))
+    errs = []
+    for t in range(S):
+        lg, cache = step(params, cache, batch["tokens"][:, t],
+                         jnp.int32(t))
+        errs.append(float(jnp.abs(lg - ref_logits[:, t]).max()))
+    assert max(errs) < 5e-3, (arch, errs)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_config_matches_assignment(arch):
+    """The full (non-reduced) configs carry the assigned dimensions."""
+    expected = {
+        "zamba2-2.7b": dict(n_layers=54, d_model=2560, n_heads=32,
+                            n_kv_heads=32, d_ff=10240, vocab=32000,
+                            ssm_state=64),
+        "whisper-tiny": dict(n_layers=4, d_model=384, n_heads=6,
+                             n_kv_heads=6, d_ff=1536, vocab=51865),
+        "granite-moe-1b-a400m": dict(n_layers=24, d_model=1024,
+                                     n_heads=16, n_kv_heads=8,
+                                     vocab=49155, n_experts=32, top_k=8,
+                                     moe_d_ff=512),
+        "deepseek-v3-671b": dict(n_layers=61, d_model=7168, n_heads=128,
+                                 n_kv_heads=128, vocab=129280,
+                                 n_experts=256, top_k=8, moe_d_ff=2048),
+        "mamba2-370m": dict(n_layers=48, d_model=1024, vocab=50280,
+                            ssm_state=128),
+        "minitron-4b": dict(n_layers=32, d_model=3072, n_heads=24,
+                            n_kv_heads=8, d_ff=9216, vocab=256000),
+        "gemma3-27b": dict(n_layers=62, d_model=5376, n_heads=32,
+                           n_kv_heads=16, d_ff=21504, vocab=262144,
+                           local_global_ratio=5),
+        "nemotron-4-340b": dict(n_layers=96, d_model=18432, n_heads=96,
+                                n_kv_heads=8, d_ff=73728, vocab=256000),
+        "granite-20b": dict(n_layers=52, d_model=6144, n_heads=48,
+                            n_kv_heads=1, d_ff=24576, vocab=49152),
+        "qwen2-vl-2b": dict(n_layers=28, d_model=1536, n_heads=12,
+                            n_kv_heads=2, d_ff=8960, vocab=151936,
+                            mrope=True),
+    }
+    cfg = get_arch(arch)
+    for k, v in expected[arch].items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_long_context_cells_only_subquadratic():
+    from repro.models.registry import cells
+    runs_500k = {a for a in ARCH_IDS
+                 if "long_500k" in cells(get_arch(a))}
+    assert runs_500k == {"zamba2-2.7b", "mamba2-370m", "gemma3-27b"}

@@ -1,0 +1,106 @@
+"""Compiler end-to-end: every compiled program must be functionally
+bit-equivalent to the numpy oracle, respect the TCM bank ledger, and the
+CP stack must never be slower than the baseline on the model's own
+latency metric.  Property-based over randomly generated CNN graphs."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (ENPU_A, NEUTRON_2TOPS, CompilerOptions,
+                        compile_graph)
+from repro.core.executor import execute
+from repro.core.ir import GraphBuilder
+
+
+def _random_graph(seed: int):
+    rng = np.random.default_rng(seed)
+    b = GraphBuilder(f"rand{seed}", seed=seed)
+    h = int(rng.integers(12, 40))
+    c = int(rng.choice([3, 4, 8]))
+    x = b.input((h, h, c))
+    skip = None
+    n_ops = int(rng.integers(3, 9))
+    for i in range(n_ops):
+        kind = rng.choice(["conv", "dwconv", "pool", "act", "add"])
+        cur_c = b.g.tensors[x].hwc[2]
+        if kind == "conv":
+            x = b.conv(x, int(rng.choice([8, 16, 24])),
+                       k=int(rng.choice([1, 3])),
+                       s=int(rng.choice([1, 1, 2])),
+                       act=str(rng.choice(["relu", "silu", "none"])))
+        elif kind == "dwconv":
+            x = b.dwconv(x, k=3, s=1, act="relu")
+        elif kind == "pool" and b.g.tensors[x].hwc[0] >= 4:
+            x = b.maxpool(x, k=2)
+        elif kind == "act":
+            x = b.activation(x, "relu6")
+        elif kind == "add" and skip is not None and \
+                b.g.tensors[skip].hwc == b.g.tensors[x].hwc:
+            x = b.add(x, skip)
+        skip = x
+    x = b.global_avgpool(x)
+    x = b.fc(x, int(rng.integers(4, 32)))
+    b.mark_output(x)
+    return b.build(), b
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=12, deadline=None)
+def test_compiled_program_matches_oracle(seed):
+    g, b = _random_graph(seed)
+    res = compile_graph(g, NEUTRON_2TOPS, CompilerOptions())
+    inp = {g.inputs[0].name: np.random.default_rng(seed).normal(
+        size=g.inputs[0].shape).astype(np.float32)}
+    rep = execute(res.program, g, res.tiling, inp, b._weights)
+    assert rep.ok
+    # allocation invariants recorded by the allocator
+    assert res.program.meta["peak_banks"] <= NEUTRON_2TOPS.tcm_banks
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=8, deadline=None)
+def test_baseline_also_correct_and_not_faster(seed):
+    g, b = _random_graph(seed)
+    ours = compile_graph(g, NEUTRON_2TOPS, CompilerOptions())
+    g2, b2 = _random_graph(seed)
+    base = compile_graph(g2, NEUTRON_2TOPS, CompilerOptions.baseline())
+    inp = {g2.inputs[0].name: np.random.default_rng(seed).normal(
+        size=g2.inputs[0].shape).astype(np.float32)}
+    rep = execute(base.program, g2, base.tiling, inp, b2._weights)
+    assert rep.ok
+    # the CP compiler never loses on its own latency model
+    assert ours.program.latency_ms() <= base.program.latency_ms() * 1.001
+
+
+def test_fusion_reduces_offchip_traffic():
+    from repro.frontends.vision import build
+    g, _ = build("mobilenet_v2", res_scale=0.5)
+    fused = compile_graph(g, NEUTRON_2TOPS, CompilerOptions())
+    g2, _ = build("mobilenet_v2", res_scale=0.5)
+    layerwise = compile_graph(g2, NEUTRON_2TOPS,
+                              CompilerOptions.baseline())
+    assert fused.program.latency_ms() < layerwise.program.latency_ms()
+
+
+def test_overlap_never_hurts():
+    from repro.frontends.vision import build
+    g, _ = build("mobilenet_v1", res_scale=0.25)
+    on = compile_graph(g, NEUTRON_2TOPS, CompilerOptions())
+    # same program accounted serially must not be faster
+    assert on.program.latency_cycles(overlap=True) <= \
+        on.program.latency_cycles(overlap=False)
+
+
+def test_format_plan_covers_all_ops():
+    from repro.core.formats import select_formats
+    g, _ = _random_graph(7)
+    plan = select_formats(NEUTRON_2TOPS, g)
+    for op in g.ops:
+        assert plan[op.name] in ("depth", "line")
+
+
+def test_enpu_b_scaling():
+    from repro.core import ENPU_B
+    assert ENPU_B.peak_tops == pytest.approx(2 * ENPU_A.peak_tops)
+    assert ENPU_B.tcm_bytes == 2 * ENPU_A.tcm_bytes
+    assert ENPU_B.ddr_gbps == 2 * ENPU_A.ddr_gbps

@@ -1,0 +1,88 @@
+"""CP solver: correctness vs exhaustive search (property-based)."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cpsolver
+from repro.core.cpsolver import CPModel, MaxTerm, brute_force, solve
+
+
+def _random_model(rng: random.Random, n_vars: int, n_cons: int) -> CPModel:
+    m = CPModel("rand")
+    for i in range(n_vars):
+        m.bool(f"x{i}")
+    for c in range(n_cons):
+        k = rng.randint(1, min(4, n_vars))
+        vs = rng.sample(range(n_vars), k)
+        coefs = [rng.randint(-3, 3) or 1 for _ in vs]
+        rhs = rng.randint(-2, 4)
+        m.add(list(zip(vs, coefs)), "<=", rhs, f"c{c}")
+    obj = [(v, rng.randint(-5, 5)) for v in range(n_vars)
+           if rng.random() < 0.8]
+    m.minimize(obj)
+    return m
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=60, deadline=None)
+def test_solver_matches_brute_force(seed):
+    rng = random.Random(seed)
+    n = rng.randint(2, 10)
+    m = _random_model(rng, n, rng.randint(1, 6))
+    got = solve(m, time_limit_s=5.0)
+    want = brute_force(m)
+    assert got.feasible == want.feasible
+    if want.feasible:
+        assert got.objective == want.objective, (seed, got, want)
+        # returned assignment must itself be feasible
+        vals = [got.values[v] for v in range(m.n_vars)]
+        assert not m.check(vals)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_solver_with_max_terms(seed):
+    rng = random.Random(seed)
+    n = rng.randint(2, 8)
+    m = _random_model(rng, n, rng.randint(0, 3))
+    # add an Eq.(8)-shaped objective: max over two linear expressions
+    k = rng.randint(1, n)
+    vs = rng.sample(range(n), k)
+    mt = MaxTerm([(rng.randint(0, 3),
+                   [(v, rng.randint(0, 4)) for v in vs]),
+                  (rng.randint(0, 3),
+                   [(v, rng.randint(0, 4)) for v in vs])])
+    m.max_terms = [mt]
+    got = solve(m, time_limit_s=5.0)
+    want = brute_force(m)
+    assert got.feasible == want.feasible
+    if want.feasible:
+        assert got.objective == want.objective
+
+
+def test_warm_start_is_used():
+    m = CPModel("ws")
+    a, b = m.bool("a"), m.bool("b")
+    m.add([(a, 1), (b, 1)], ">=", 1)
+    m.minimize([(a, 1), (b, 2)])
+    sol = solve(m, time_limit_s=5.0, warm_start={a: 0, b: 1})
+    assert sol.feasible and sol.objective == 1   # optimal a=1,b=0
+
+
+def test_infeasible_detected():
+    m = CPModel("inf")
+    a = m.bool("a")
+    m.add([(a, 1)], ">=", 1)
+    m.add([(a, 1)], "<=", 0)
+    sol = solve(m, time_limit_s=2.0)
+    assert not sol.feasible
+
+
+def test_fixed_vars_respected():
+    m = CPModel("fix")
+    a, b = m.bool("a"), m.bool("b")
+    m.fix(a, 1)
+    m.minimize([(a, 5), (b, 1)])
+    sol = solve(m, time_limit_s=2.0)
+    assert sol.feasible and sol[a] == 1 and sol[b] == 0

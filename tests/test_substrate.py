@@ -1,0 +1,253 @@
+"""Substrate subsystems: data determinism, checkpoint atomicity/restore,
+fault monitor + elastic re-mesh, gradient compression, microbatching."""
+import os
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import optim
+from repro.checkpoint.manager import CheckpointManager
+from repro.data.pipeline import DataConfig, Pipeline, batch_for_step
+from repro.runtime.fault import (BackupDispatcher, FaultMonitor,
+                                 elastic_data_axis, plan_remesh)
+from repro.runtime.overlap import (accumulate_grads, bucket_tree,
+                                   split_microbatches)
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+
+def test_data_deterministic_per_step():
+    cfg = DataConfig(vocab=100, seq_len=32, global_batch=4)
+    a = batch_for_step(cfg, 7)
+    b = batch_for_step(cfg, 7)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = batch_for_step(cfg, 8)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_data_host_shards_disjoint_and_deterministic():
+    g = DataConfig(vocab=100, seq_len=16, global_batch=8, n_hosts=2,
+                   host_id=0)
+    h1 = DataConfig(vocab=100, seq_len=16, global_batch=8, n_hosts=2,
+                    host_id=1)
+    a0 = batch_for_step(g, 3)
+    a1 = batch_for_step(h1, 3)
+    assert a0["tokens"].shape == (4, 16)
+    assert not np.array_equal(a0["tokens"], a1["tokens"])
+
+
+def test_pipeline_prefetch_resume():
+    cfg = DataConfig(vocab=50, seq_len=8, global_batch=2)
+    p = Pipeline(cfg, start_step=5)
+    b5 = next(p)
+    p.close()
+    np.testing.assert_array_equal(b5["tokens"],
+                                  batch_for_step(cfg, 5)["tokens"])
+
+
+# --------------------------------------------------------------------------
+# checkpointing
+# --------------------------------------------------------------------------
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": rng.normal(size=(4, 8)).astype(np.float32),
+            "b": {"c": rng.normal(size=(3,)).astype(np.float32)}}
+
+
+def test_checkpoint_roundtrip():
+    d = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(d)
+        t = _tree(1)
+        mgr.save(10, t, meta={"loss": 1.5})
+        got, step, meta = mgr.restore(_tree(0))
+        assert step == 10 and meta["loss"] == 1.5
+        np.testing.assert_array_equal(got["a"], t["a"])
+        np.testing.assert_array_equal(got["b"]["c"], t["b"]["c"])
+    finally:
+        shutil.rmtree(d)
+
+
+def test_checkpoint_corruption_falls_back():
+    d = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(d)
+        mgr.save(1, _tree(1))
+        mgr.save(2, _tree(2))
+        # corrupt the latest shard
+        shard = os.path.join(d, "step_00000002", "shard_0.npz")
+        with open(shard, "wb") as f:
+            f.write(b"garbage")
+        got, step, _ = mgr.restore(_tree(0))
+        assert step == 1
+        np.testing.assert_array_equal(got["a"], _tree(1)["a"])
+    finally:
+        shutil.rmtree(d)
+
+
+def test_checkpoint_partial_write_invisible():
+    d = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(d)
+        mgr.save(5, _tree(5))
+        # a tmp dir without manifest must be ignored
+        os.makedirs(os.path.join(d, "step_00000009.tmp0"), exist_ok=True)
+        assert mgr.latest_step() == 5
+    finally:
+        shutil.rmtree(d)
+
+
+def test_checkpoint_async_and_gc():
+    d = tempfile.mkdtemp()
+    try:
+        mgr = CheckpointManager(d, keep=2)
+        for s in (1, 2, 3, 4):
+            mgr.save_async(s, _tree(s))
+            mgr.wait()
+        steps = mgr._valid_steps()
+        assert steps == [3, 4]
+    finally:
+        shutil.rmtree(d)
+
+
+# --------------------------------------------------------------------------
+# fault tolerance
+# --------------------------------------------------------------------------
+
+
+def test_fault_monitor_detects_dead_and_stragglers():
+    mon = FaultMonitor(n_hosts=4, timeout_s=0.05, straggler_ratio=2.0)
+    now = time.monotonic()
+    for h in range(4):
+        mon.beat(h, 0, 0.1 if h != 3 else 1.0)
+    for _ in range(8):
+        for h in range(3):
+            mon.beat(h, 1, 0.1)
+        mon.beat(3, 1, 1.0)
+    assert mon.stragglers() == [3]
+    # host 2 stops beating
+    time.sleep(0.06)
+    for h in (0, 1, 3):
+        mon.beat(h, 2, 0.1)
+    assert mon.dead_hosts() == [2]
+    assert 2 not in mon.healthy_hosts()
+
+
+def test_elastic_remesh_plan():
+    n_data, dropped = elastic_data_axis(n_healthy_chips=208,
+                                        model_axis=16)
+    assert n_data == 8 and dropped == 208 - 8 * 16
+    plan = plan_remesh(global_batch=256, old_data=16, model_axis=16,
+                       n_healthy_chips=208)
+    assert plan.new_shape == (8, 16)
+    assert plan.batch_per_shard_new == 32
+    assert plan.changed
+
+
+def test_backup_dispatch():
+    mon = FaultMonitor(n_hosts=3, straggler_ratio=1.5)
+    for _ in range(8):
+        mon.beat(0, 0, 0.1)
+        mon.beat(1, 0, 0.1)
+        mon.beat(2, 0, 2.0)
+    disp = BackupDispatcher(mon)
+    times = disp.maybe_backup(
+        1, run_shard=lambda h, s: 2.0 if h == 2 else 0.1)
+    assert disp.backups_issued and disp.backups_issued[0][1] == 2
+    assert times[2] == pytest.approx(0.1)   # backup won
+
+
+# --------------------------------------------------------------------------
+# gradient compression
+# --------------------------------------------------------------------------
+
+
+@given(seed=st.integers(0, 100))
+@settings(max_examples=10, deadline=None)
+def test_compression_error_feedback_converges(seed):
+    """sum of decompressed grads + final residual == sum of true grads
+    (error feedback keeps long-run bias at zero)."""
+    rng = np.random.default_rng(seed)
+    g_true = [rng.normal(size=(8, 8)).astype(np.float32)
+              for _ in range(5)]
+    err = optim.init_error({"w": g_true[0]})
+    total_sent = np.zeros((8, 8), np.float32)
+    total_true = np.zeros((8, 8), np.float32)
+    for g in g_true:
+        sent, err = optim.compress_grads({"w": g}, err)
+        total_sent += np.asarray(sent["w"])
+        total_true += g
+    resid = np.asarray(err["w"])
+    np.testing.assert_allclose(total_sent + resid, total_true,
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_compression_int8_range():
+    g = {"w": np.array([[1000.0, -1000.0, 0.5]], np.float32)}
+    err = optim.init_error(g)
+    sent, err2 = optim.compress_grads(g, err)
+    # reconstruction error bounded by one quant step
+    step = 1000.0 / 127
+    assert np.all(np.abs(np.asarray(sent["w"]) - g["w"]) <= step + 1e-5)
+
+
+# --------------------------------------------------------------------------
+# optimizer + microbatching
+# --------------------------------------------------------------------------
+
+
+def test_adamw_reduces_quadratic():
+    cfg = optim.AdamWConfig(lr=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = optim.init_state(cfg, params)
+
+    def loss(p):
+        return (p["w"] ** 2).sum()
+
+    for _ in range(100):
+        g = jax.grad(loss)(params)
+        params, state = optim.apply_updates(cfg, params, g, state)
+    assert float(loss(params)) < 0.3
+
+
+def test_microbatch_accumulation_matches_full_batch():
+    rng = np.random.default_rng(0)
+    W = jnp.asarray(rng.normal(size=(6, 4)).astype(np.float32))
+    X = jnp.asarray(rng.normal(size=(8, 6)).astype(np.float32))
+    Y = jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32))
+
+    def loss(params, batch):
+        pred = batch["x"] @ params
+        return ((pred - batch["y"]) ** 2).mean()
+
+    l1, g1 = jax.value_and_grad(loss)(W, {"x": X, "y": Y})
+    l2, g2 = accumulate_grads(loss, W, {"x": X, "y": Y}, n_micro=4)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+    np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-6)
+
+
+def test_bucket_tree_covers_all_leaves():
+    tree = {"a": np.zeros((1000,), np.float32),
+            "b": np.zeros((300000,), np.float32),
+            "c": np.zeros((10,), np.float32)}
+    buckets = bucket_tree(tree, bucket_bytes=1 << 20)
+    idx = sorted(i for b in buckets for i, _ in b)
+    assert idx == [0, 1, 2]
+
+
+def test_moment_dtype_bf16():
+    cfg = optim.AdamWConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    st_ = optim.init_state(cfg, params)
+    assert st_.m["w"].dtype == jnp.bfloat16

@@ -1,0 +1,64 @@
+"""Vision frontends: MAC/param accounting vs Table IV; functional
+compile+execute equivalence at reduced resolution."""
+import numpy as np
+import pytest
+
+from repro.core import NEUTRON_2TOPS, CompilerOptions, compile_graph
+from repro.core.executor import execute
+from repro.core.ir import reference_execute
+from repro.frontends.vision import VISION_MODELS, build, table4_targets
+
+#: per-model MAC tolerance — most are exact-architecture matches; the
+#: approximated detectors get wider bands (documented in DESIGN.md):
+#: resnet50: He et al. count 3.8G multiply-adds; Table IV lists 2.0 under
+#: a different counting convention — we keep the canonical architecture.
+_TOL = {
+    "resnet50_v1": None,            # checked against 3.87 instead
+    "efficientdet_lite0": 0.35,
+    "mobilenet_v1_ssd": 0.30,
+    "damo_yolo_nl": 0.30,
+    "yolov8n_seg": 0.15,
+    "mobilenet_v2_ssd": 0.25,
+}
+
+
+@pytest.mark.parametrize("name", sorted(VISION_MODELS))
+def test_macs_match_table4(name):
+    g, _ = build(name)
+    gmacs = g.total_macs() / 1e9
+    target, _ = table4_targets(name)
+    if name == "resnet50_v1":
+        assert abs(gmacs - 3.87) / 3.87 < 0.05
+        return
+    tol = _TOL.get(name) or 0.10
+    assert abs(gmacs - target) / target < tol, (gmacs, target)
+
+
+@pytest.mark.parametrize("name", sorted(VISION_MODELS))
+def test_params_match_table4(name):
+    g, _ = build(name)
+    mparams = sum(t.elems for t in g.params) / 1e6
+    _, target = table4_targets(name)
+    tol = 0.30 if name in _TOL else 0.12
+    assert abs(mparams - target) / target < tol, (mparams, target)
+
+
+@pytest.mark.parametrize("name", ["mobilenet_v1", "mobilenet_v2",
+                                  "efficientnet_lite0"])
+def test_vision_compile_execute(name):
+    g, b = build(name, res_scale=0.25)
+    res = compile_graph(g, NEUTRON_2TOPS, CompilerOptions())
+    inp = {g.inputs[0].name: np.random.default_rng(1).normal(
+        size=g.inputs[0].shape).astype(np.float32)}
+    rep = execute(res.program, g, res.tiling, inp, b._weights)
+    assert rep.ok
+
+
+def test_reference_executor_deterministic():
+    g, b = build("mobilenet_v3_min", res_scale=0.25)
+    inp = {g.inputs[0].name: np.random.default_rng(2).normal(
+        size=g.inputs[0].shape).astype(np.float32)}
+    a = reference_execute(g, inp, b._weights)
+    bb = reference_execute(g, inp, b._weights)
+    for t in g.outputs:
+        np.testing.assert_array_equal(a[t.name], bb[t.name])
