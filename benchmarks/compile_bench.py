@@ -1,0 +1,153 @@
+"""Compile-latency benchmark: seed hot path vs overhauled hot path.
+
+For each benchmarked vision-frontend model this times
+
+  * **seed**  — the PR-0 compiler hot path: full-rescan CP engine
+    (``cpsolver.solve_reference``), serial partition solving, no cost
+    memoization, no program cache;
+  * **new**   — the overhauled path: incremental CP engine, concurrent
+    partition windows, memoized cost model (cold program cache);
+  * **cached** — a repeat compile through the content-addressed
+    compiled-program cache (the zero-recompile serving path);
+
+verifies the new program against the pure-numpy ``reference_execute``
+oracle, compares scheduled latency (the Eq. 8 objective), and writes
+``BENCH_compile.json`` with per-model numbers plus the geometric-mean
+compile-time speedup.
+
+    PYTHONPATH=src python -m benchmarks.compile_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import NEUTRON_2TOPS, CompilerOptions, compile_graph
+from repro.core import npu as npu_mod
+from repro.core.executor import execute
+from repro.core.pipeline import program_cache_clear
+from repro.frontends.vision import build
+
+#: (model, res_scale) — ordered small to large; resnet50_v1 is the
+#: largest graph the acceptance target is measured on.
+MODELS: List[Tuple[str, float]] = [
+    ("mobilenet_v1", 0.5),
+    ("mobilenet_v2", 0.5),
+    ("mobilenet_v3_min", 0.5),
+    ("efficientnet_lite0", 0.5),
+    ("resnet50_v1", 0.5),
+]
+
+QUICK_MODELS: List[Tuple[str, float]] = [
+    ("mobilenet_v1", 0.25),
+    ("mobilenet_v2", 0.25),
+]
+
+
+def bench_model(name: str, res_scale: float, exec_check: bool = True
+                ) -> Dict:
+    cfg = NEUTRON_2TOPS
+
+    # --- seed hot path (cost memo off, serial, reference engine) ---
+    g_seed, _ = build(name, res_scale=res_scale)
+    npu_mod.set_cost_memo(False)
+    try:
+        t0 = time.monotonic()
+        seed = compile_graph(g_seed, cfg, CompilerOptions.seed_solver(),
+                             cache=False)
+        seed_s = time.monotonic() - t0
+    finally:
+        npu_mod.set_cost_memo(True)
+
+    # --- overhauled hot path (cold program cache) ---
+    program_cache_clear()
+    g, b = build(name, res_scale=res_scale)
+    t0 = time.monotonic()
+    new = compile_graph(g, cfg)
+    new_s = time.monotonic() - t0
+    assert not new.cache_hit
+
+    # --- repeat compile: content-addressed program-cache hit ---
+    g_again, _ = build(name, res_scale=res_scale)
+    t0 = time.monotonic()
+    hit = compile_graph(g_again, cfg)
+    cached_s = time.monotonic() - t0
+    assert hit.cache_hit and hit.program is new.program
+
+    row = {
+        "model": name,
+        "res_scale": res_scale,
+        "ops": len(g.ops),
+        "sched_steps": len(new.tiling.order),
+        "seed_compile_s": round(seed_s, 4),
+        "new_compile_s": round(new_s, 4),
+        "cached_compile_s": round(cached_s, 6),
+        "compile_speedup": round(seed_s / new_s, 3),
+        "seed_latency_ms": round(seed.program.latency_ms(), 5),
+        "new_latency_ms": round(new.program.latency_ms(), 5),
+        "latency_ratio": round(new.program.latency_ms()
+                               / seed.program.latency_ms(), 5),
+    }
+
+    if exec_check:
+        rng = np.random.default_rng(0)
+        inp = {g.inputs[0].name: rng.normal(
+            size=g.inputs[0].shape).astype(np.float32)}
+        rep = execute(new.program, g, new.tiling, inp, b._weights)
+        row["oracle_ok"] = bool(rep.ok)
+        row["oracle_max_err"] = float(rep.max_err)
+    return row
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="two small models at 0.25 scale (smoke mode)")
+    ap.add_argument("--no-exec-check", action="store_true",
+                    help="skip the executor-vs-oracle verification")
+    ap.add_argument("--out", default="BENCH_compile.json")
+    args = ap.parse_args(argv)
+
+    models = QUICK_MODELS if args.quick else MODELS
+    rows = []
+    for name, scale in models:
+        print(f"[compile_bench] {name} @ x{scale} ...", flush=True)
+        row = bench_model(name, scale,
+                          exec_check=not args.no_exec_check)
+        rows.append(row)
+        print(f"  seed {row['seed_compile_s']:7.2f}s   "
+              f"new {row['new_compile_s']:6.2f}s   "
+              f"cached {row['cached_compile_s']*1e3:7.2f}ms   "
+              f"speedup {row['compile_speedup']:5.2f}x   "
+              f"latency ratio {row['latency_ratio']:.4f}", flush=True)
+
+    geomean = math.exp(sum(math.log(r["compile_speedup"]) for r in rows)
+                       / len(rows))
+    worst_latency = max(r["latency_ratio"] for r in rows)
+    result = {
+        "config": NEUTRON_2TOPS.name,
+        "models": rows,
+        "geomean_compile_speedup": round(geomean, 3),
+        "worst_latency_ratio": round(worst_latency, 5),
+        "all_oracle_ok": all(r.get("oracle_ok", True) for r in rows),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[compile_bench] geomean compile speedup "
+          f"{geomean:.2f}x, worst latency ratio {worst_latency:.4f} "
+          f"-> {args.out}")
+    if not result["all_oracle_ok"]:
+        print("[compile_bench] FAIL: executor diverged from the "
+              "reference oracle", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

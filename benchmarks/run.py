@@ -14,9 +14,25 @@ import sys
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="sub-minute smoke: fast-marked tier-1 tests + "
+                         "compile_bench --quick; skips tables/roofline")
     ap.add_argument("--skip-tables", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
     args = ap.parse_args(argv)
+
+    if args.quick:
+        import subprocess
+        import sys as _sys
+        print("=" * 72)
+        print("QUICK SMOKE (pytest -m fast + compile_bench --quick)")
+        print("=" * 72)
+        rc = subprocess.call(
+            [_sys.executable, "-m", "pytest", "-q", "-m", "fast"])
+        from . import compile_bench
+        rc |= compile_bench.main(["--quick",
+                                  "--out", "BENCH_compile_quick.json"])
+        return rc
 
     if not args.skip_tables:
         from . import paper_tables as pt

@@ -159,8 +159,14 @@ def parse_module(text: str) -> Dict[str, Computation]:
                 tok += ch
         if tok.strip():
             operands.append(tok.strip())
-        operands = [o.lstrip("%").strip() for o in operands
-                    if o.strip().startswith("%")]
+        # operand tokens are "%name" in older XLA dumps and
+        # "f32[4,64]{1,0} %name" (inline types) in newer ones
+        named = []
+        for o in operands:
+            om = re.search(r"%([\w.\-]+)", o)
+            if om:
+                named.append(om.group(1))
+        operands = named
         inst = Instr(name, type_str, opcode, operands, attrs, byts, elems,
                      raw=line)
         cur.instrs.append(inst)

@@ -14,7 +14,8 @@ Public API:
 from .ir import Graph, GraphBuilder, Op, Tensor, reference_execute
 from .npu import (ENPU_A, ENPU_B, NEUTRON_2TOPS, NPUConfig, compute_job_cost,
                   cycles_to_ms, dma_cost, effective_tops)
-from .pipeline import CompileResult, CompilerOptions, compile_graph
+from .pipeline import (CompileResult, CompilerOptions, compile_graph,
+                       program_cache_clear, program_cache_info)
 from .program import NPUProgram
 
 __all__ = [
@@ -22,4 +23,5 @@ __all__ = [
     "NPUConfig", "NEUTRON_2TOPS", "ENPU_A", "ENPU_B",
     "compute_job_cost", "dma_cost", "cycles_to_ms", "effective_tops",
     "CompileResult", "CompilerOptions", "compile_graph", "NPUProgram",
+    "program_cache_clear", "program_cache_info",
 ]

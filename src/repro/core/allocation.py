@@ -82,7 +82,9 @@ def allocate(prog: NPUProgram, cfg: Optional[NPUConfig] = None
         costs extra DDR traffic, which the latency accounting charges."""
         cands = sorted(
             ((key, banks) for key, banks in held.items()
-             if key not in protected),
+             # synthetic staging tiles (l-copy halo buffers) have no DRAM
+             # backing — they cannot round-trip through a push
+             if key not in protected and not key[0].startswith("__")),
             key=lambda kv: -len(kv[1]))
         for key, banks in cands:
             if len(free) >= want:

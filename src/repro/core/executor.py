@@ -14,11 +14,13 @@ This is the repro analogue of running the compiled binary on silicon.
 """
 from __future__ import annotations
 
+import bisect
 import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+from numpy.lib.stride_tricks import sliding_window_view
 
 from .ir import Graph, Op, _apply_act, _conv2d_ref, reference_execute
 from .program import NPUProgram, TileRef
@@ -44,10 +46,18 @@ class ExecutionReport:
 
 
 class _TcmState:
+    """Resident-tile store with indexed gathers.
+
+    Tile lists are produced in ascending [r0, r1) order by the tiler, so
+    the tiles covering a row/channel range form a contiguous slice found
+    by bisection on cached boundary arrays — the replay's hottest path no
+    longer scans every tile of a tensor per gather."""
+
     def __init__(self, g: Graph):
         self.g = g
         self.data: Dict[Tuple[str, int], np.ndarray] = {}
         self.resident: set = set()
+        self._bounds: Dict[str, Tuple[List[int], List[int]]] = {}
 
     def put(self, tl: TileRef, arr: np.ndarray) -> None:
         self.data[tl.key] = arr
@@ -56,6 +66,17 @@ class _TcmState:
     def drop(self, key: Tuple[str, int]) -> None:
         self.resident.discard(key)
         self.data.pop(key, None)
+
+    def _covering(self, tt, a: int, b: int) -> List[TileRef]:
+        """Tiles (ascending) overlapping [a, b) on the tiled axis."""
+        bounds = self._bounds.get(tt.tensor)
+        if bounds is None:
+            bounds = ([t.r0 for t in tt.tiles], [t.r1 for t in tt.tiles])
+            self._bounds[tt.tensor] = bounds
+        starts, ends = bounds
+        i0 = bisect.bisect_right(ends, a)
+        i1 = bisect.bisect_left(starts, b)
+        return tt.tiles[i0:i1]
 
     def gather_rows(self, tiling: TilingResult, tensor: str,
                     a: int, b: int) -> np.ndarray:
@@ -68,11 +89,12 @@ class _TcmState:
                 if tl.key not in self.resident:
                     raise ExecutionError(f"{tl} not resident")
                 parts.append(self.data[tl.key])
-            full = np.concatenate(parts, axis=-1)
+            full = np.concatenate(parts, axis=-1) if len(parts) > 1 \
+                else parts[0]
             return full[a:b] if len(shape) == 3 else full
         parts = []
         covered = a
-        for tl in sorted(tt.covering(a, b), key=lambda t: t.r0):
+        for tl in self._covering(tt, a, b):
             if tl.key not in self.resident:
                 raise ExecutionError(f"{tl} not resident")
             arr = self.data[tl.key]
@@ -91,8 +113,12 @@ class _TcmState:
     def gather_param(self, tiling: TilingResult, tensor: str,
                      c0: int, c1: int) -> np.ndarray:
         tt = tiling.tiles[tensor]
+        if tt.axis != "chan":
+            tiles = list(tt.tiles)
+        else:
+            tiles = self._covering(tt, c0, c1)
         parts = []
-        for tl in sorted(tt.covering_chan(c0, c1), key=lambda t: t.r0):
+        for tl in tiles:
             if tl.key not in self.resident:
                 raise ExecutionError(f"param {tl} not resident")
             arr = self.data[tl.key]
@@ -184,13 +210,9 @@ def _run_step(g: Graph, tiling: TilingResult, tcm: _TcmState, op: Op,
         top, bot = max(0, -u0), max(0, u1 - ih)
         xp = np.pad(win, ((top, bot), (pl, pr), (0, 0)),
                     constant_values=-np.inf)
-        Hp, Wp, C = xp.shape
-        oh = (Hp - kk) // s + 1
-        ow = (Wp - kk) // s + 1
-        y = np.full((oh, ow, C), -np.inf, dtype=np.float32)
-        for i in range(kk):
-            for j in range(kk):
-                y = np.maximum(y, xp[i:i + oh * s:s, j:j + ow * s:s, :])
+        # batched window reduction (one strided view, no Python loop)
+        wins = sliding_window_view(xp, (kk, kk), axis=(0, 1))
+        y = wins[::s, ::s].max(axis=(-2, -1))
     elif k == "avgpool":
         x = g.act_inputs(op)[0]
         ih = x.shape[0]
@@ -206,14 +228,9 @@ def _run_step(g: Graph, tiling: TilingResult, tcm: _TcmState, op: Op,
             win = rows_of(x, lo, hi)
             top, bot = max(0, -u0), max(0, u1 - ih)
             xp = np.pad(win, ((top, bot), (pl, pr), (0, 0)))
-            Hp, Wp, C = xp.shape
-            oh = (Hp - kk) // s + 1
-            ow = (Wp - kk) // s + 1
-            y = np.zeros((oh, ow, C), dtype=np.float32)
-            for i in range(kk):
-                for j in range(kk):
-                    y += xp[i:i + oh * s:s, j:j + ow * s:s, :]
-            y = y / (kk * kk)
+            wins = sliding_window_view(xp, (kk, kk), axis=(0, 1))
+            y = wins[::s, ::s].sum(axis=(-2, -1), dtype=np.float32) \
+                / (kk * kk)
     elif k == "resize":
         f = a["factor"]
         lo, hi = rr0 // f, (rr1 + f - 1) // f

@@ -220,6 +220,28 @@ class Graph:
             "param_bytes": self.total_param_bytes(),
         }
 
+    def fingerprint(self) -> str:
+        """Canonical content hash of the graph *structure* — everything
+        the compiler reads (tensor shapes/kinds/dtypes, op topology and
+        attributes), nothing it doesn't (weight values).  Two graphs with
+        equal fingerprints compile to identical programs under identical
+        (NPUConfig, CompilerOptions), which is what keys the
+        compiled-program cache in pipeline.py."""
+        import hashlib
+        import json
+        payload = {
+            "name": self.name,
+            "tensors": [
+                [t.name, list(t.shape), t.kind, t.dtype, t.producer,
+                 list(t.consumers), t.scale]
+                for t in sorted(self.tensors.values(),
+                                key=lambda t: t.name)],
+            "ops": [[op.name, op.kind, list(op.inputs), list(op.outputs),
+                     op.attrs] for op in self.ops],
+        }
+        blob = json.dumps(payload, sort_keys=True, default=list)
+        return hashlib.sha256(blob.encode()).hexdigest()
+
     def __repr__(self) -> str:  # pragma: no cover
         s = self.stats()
         return (f"Graph({self.name}: {s['ops']} ops, {s['gmacs']:.2f} GMACs,"

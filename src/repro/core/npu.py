@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
+from functools import lru_cache
 from typing import Dict, Optional, Tuple
 
 from .ir import Graph, Op
@@ -156,12 +157,70 @@ def _dot_engine_cycles(cfg: NPUConfig, out_pixels: int, out_c: int,
     return cycles, bound
 
 
+_COST_MEMO_ENABLED = True
+_JOB_COST_CACHE: Dict[Tuple, JobCost] = {}
+_JOB_COST_CACHE_MAX = 1 << 16
+
+
+def set_cost_memo(enabled: bool) -> None:
+    """Toggle the compute/DMA cost memo (benchmarks time both modes)."""
+    global _COST_MEMO_ENABLED
+    _COST_MEMO_ENABLED = bool(enabled)
+    if not enabled:
+        cost_cache_clear()
+
+
+def cost_cache_clear() -> None:
+    _JOB_COST_CACHE.clear()
+    _dma_cost_cached.cache_clear()
+
+
+def _freeze(v):
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    return v
+
+
+def _job_cost_key(cfg: NPUConfig, g: Graph, op: Op, out_h: int, fmt: str,
+                  engines: Optional[int], out_c: Optional[int]) -> Tuple:
+    """Everything compute_job_cost reads, as a hashable key — the cost of
+    a job depends only on op kind/attrs and operand shapes, never on
+    tensor names, so repeated tiles, budget-ladder retries and repeated
+    model compiles all hit the same entries."""
+    return (cfg, op.kind, _freeze(op.attrs),
+            g.tensors[op.output].shape,
+            tuple((t.shape, t.bytes) for t in g.param_inputs(op)),
+            tuple((t.shape, t.bytes) for t in g.act_inputs(op)),
+            out_h, fmt, engines, out_c)
+
+
 def compute_job_cost(cfg: NPUConfig, g: Graph, op: Op,
                      out_h: int, fmt: str, engines: Optional[int] = None,
                      out_c: Optional[int] = None) -> JobCost:
     """Cost of computing `out_h` output lines (restricted to `out_c`
     output channels when the op is channel-partitioned) of `op` in format
-    `fmt` ("depth" or "line", paper §IV-A) on `engines` cores."""
+    `fmt` ("depth" or "line", paper §IV-A) on `engines` cores.
+
+    Results are memoized (callers treat JobCost as read-only): the tiling
+    and scheduling passes re-evaluate identical (op, tile, format) jobs
+    thousands of times inside their CP loops."""
+    if _COST_MEMO_ENABLED:
+        key = _job_cost_key(cfg, g, op, out_h, fmt, engines, out_c)
+        hit = _JOB_COST_CACHE.get(key)
+        if hit is not None:
+            return hit
+        jc = _compute_job_cost(cfg, g, op, out_h, fmt, engines, out_c)
+        if len(_JOB_COST_CACHE) < _JOB_COST_CACHE_MAX:
+            _JOB_COST_CACHE[key] = jc
+        return jc
+    return _compute_job_cost(cfg, g, op, out_h, fmt, engines, out_c)
+
+
+def _compute_job_cost(cfg: NPUConfig, g: Graph, op: Op,
+                      out_h: int, fmt: str, engines: Optional[int] = None,
+                      out_c: Optional[int] = None) -> JobCost:
     engines = engines or cfg.cores
     k = op.kind
     out = g.tensors[op.output]
@@ -256,11 +315,20 @@ def compute_job_cost(cfg: NPUConfig, g: Graph, op: Op,
 # --------------------------------------------------------------------------
 
 
+@lru_cache(maxsize=1 << 16)
+def _dma_cost_cached(cfg: NPUConfig, nbytes: int, kind: str) -> int:
+    rate = cfg.ddr_bytes_per_cycle if kind == "ddr" \
+        else cfg.tcm_bytes_per_cycle
+    return int(cfg.dma_setup_cycles + math.ceil(nbytes / rate))
+
+
 def dma_cost(cfg: NPUConfig, nbytes: int, kind: str = "ddr") -> int:
     """Cycles for one DMA job.  kind: ddr (DDR<->TCM) or tcm (TCM<->TCM,
     used for line-format expansion copies, paper §IV-A)."""
     if nbytes <= 0:
         return 0
+    if _COST_MEMO_ENABLED:
+        return _dma_cost_cached(cfg, nbytes, kind)
     rate = cfg.ddr_bytes_per_cycle if kind == "ddr" \
         else cfg.tcm_bytes_per_cycle
     return int(cfg.dma_setup_cycles + math.ceil(nbytes / rate))

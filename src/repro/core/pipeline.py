@@ -11,13 +11,26 @@ evaluates:
     Used for the Table III speedup comparisons.
   * ``partition=False``   — monolithic CP (Table II row 1).
   * ``fusion=False``      — no layer fusion (Fig. 6 "without").
+  * ``seed_solver()``     — the original (PR-0) compiler hot path:
+    full-rescan CP engine, serial partition solving, no cost memo.  The
+    perf baseline timed by ``benchmarks/compile_bench.py``.
+
+Repeated serving compiles of the same model hit the content-addressed
+**compiled-program cache**: the key is (canonical ``Graph`` structure
+hash, ``NPUConfig``, compile options), so a cache hit returns the
+previously compiled ``NPUProgram`` without re-running any pass, and any
+change to the graph topology, hardware config or options misses.
+Programs are treated as immutable once allocated.
 """
 from __future__ import annotations
 
+import threading
 import time
-from dataclasses import dataclass, field, replace
-from typing import Dict, Optional
+from collections import OrderedDict
+from dataclasses import dataclass, field, fields, replace
+from typing import Dict, Optional, Tuple
 
+from . import cpsolver
 from .allocation import Allocation, AllocationError, allocate
 from .formats import FORMATS, FormatPlan, select_formats
 from .ir import Graph
@@ -35,15 +48,34 @@ class CompilerOptions:
     overlap: bool = True              # DAE overlap (§IV-B)
     partition: bool = True            # partition the CP problems
     partition_steps: int = 12
-    cp_time_limit_s: float = 1.0      # per subproblem
+    # the incremental engine converges far faster than the seed engine,
+    # so the default per-subproblem deadline is tighter; seed_solver()
+    # keeps the historical 1.0 s
+    cp_time_limit_s: float = 0.6      # per subproblem
     monolithic_time_limit_s: float = 20.0
     dm_penalty: int = 16
+    cp_stall_s: Optional[float] = None  # CP early exit: stall wall-time
+    cp_stall_nodes: Optional[int] = \
+        cpsolver.DEFAULT_STALL_NODES      # …or stall search nodes
+    parallel_cp: bool = True          # solve partitions on a process pool
+    cp_engine: str = "incremental"    # cpsolver.ENGINES key
 
     @staticmethod
     def baseline() -> "CompilerOptions":
         """The reference embedded-NPU compiler behaviour (§V eNPU-A/B)."""
         return CompilerOptions(formats=("depth",), fusion=False,
                                overlap=False, naive_tiling=True)
+
+    @staticmethod
+    def seed_solver() -> "CompilerOptions":
+        """The pre-overhaul compiler hot path (same search quality knobs,
+        original full-rescan engine, serial partitions, no stall exit)."""
+        return CompilerOptions(cp_engine="reference", parallel_cp=False,
+                               cp_stall_s=None, cp_stall_nodes=None,
+                               cp_time_limit_s=1.0)
+
+    def cache_key(self) -> Tuple:
+        return tuple(getattr(self, f.name) for f in fields(self))
 
 
 @dataclass
@@ -54,6 +86,8 @@ class CompileResult:
     allocation: Allocation
     compile_s: float
     phase_s: Dict[str, float] = field(default_factory=dict)
+    cache_hit: bool = False
+    cache_key: Optional[str] = None
 
     def stats(self) -> Dict[str, float]:
         s = self.program.stats()
@@ -62,12 +96,60 @@ class CompileResult:
         return s
 
 
+# --------------------------------------------------------------------------
+# Compiled-program cache
+# --------------------------------------------------------------------------
+
+_CACHE_LOCK = threading.Lock()
+_PROGRAM_CACHE: "OrderedDict[Tuple, CompileResult]" = OrderedDict()
+_PROGRAM_CACHE_MAX = 64
+
+
+def program_cache_clear() -> None:
+    with _CACHE_LOCK:
+        _PROGRAM_CACHE.clear()
+
+
+def program_cache_info() -> Dict[str, int]:
+    with _CACHE_LOCK:
+        return {"entries": len(_PROGRAM_CACHE), "max": _PROGRAM_CACHE_MAX}
+
+
+def _cache_get(key: Tuple) -> Optional[CompileResult]:
+    with _CACHE_LOCK:
+        res = _PROGRAM_CACHE.get(key)
+        if res is not None:
+            _PROGRAM_CACHE.move_to_end(key)
+        return res
+
+
+def _cache_put(key: Tuple, res: CompileResult) -> None:
+    with _CACHE_LOCK:
+        _PROGRAM_CACHE[key] = res
+        _PROGRAM_CACHE.move_to_end(key)
+        while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_MAX:
+            _PROGRAM_CACHE.popitem(last=False)
+
+
 def compile_graph(g: Graph, cfg: NPUConfig,
-                  opts: Optional[CompilerOptions] = None) -> CompileResult:
+                  opts: Optional[CompilerOptions] = None,
+                  cache: bool = True) -> CompileResult:
     opts = opts or CompilerOptions()
-    phase: Dict[str, float] = {}
     t0 = time.monotonic()
 
+    key = fp = None
+    if cache:
+        fp = g.fingerprint()
+        key = (fp, cfg, opts.cache_key())
+        hit = _cache_get(key)
+        if hit is not None:
+            # same shared (immutable) program/tiling/allocation objects;
+            # fresh timing envelope for this call
+            return replace(hit, compile_s=time.monotonic() - t0,
+                           phase_s=dict(hit.phase_s, cache_hit=0.0),
+                           cache_hit=True)
+
+    phase: Dict[str, float] = {}
     t = time.monotonic()
     plan = select_formats(cfg, g, allowed=opts.formats)
     phase["formats"] = time.monotonic() - t
@@ -78,6 +160,10 @@ def compile_graph(g: Graph, cfg: NPUConfig,
         partition_steps=opts.partition_steps,
         cp_time_limit_s=(opts.cp_time_limit_s if opts.partition
                          else opts.monolithic_time_limit_s),
+        cp_stall_s=opts.cp_stall_s,
+        cp_stall_nodes=opts.cp_stall_nodes,
+        parallel_cp=opts.parallel_cp,
+        cp_engine=opts.cp_engine,
         dm_penalty=opts.dm_penalty,
     )
     # tile-budget ladder: a working set that over-subscribes the TCM at
@@ -92,7 +178,11 @@ def compile_graph(g: Graph, cfg: NPUConfig,
         tiling = plan_tiling(cfg, g, plan, fusion=opts.fusion,
                              cp_time_limit_s=opts.cp_time_limit_s,
                              budget_frac=frac,
-                             naive=opts.naive_tiling)
+                             naive=opts.naive_tiling,
+                             cp_stall_s=opts.cp_stall_s,
+                             cp_stall_nodes=opts.cp_stall_nodes,
+                             parallel_cp=opts.parallel_cp,
+                             cp_engine=opts.cp_engine)
         for so in (sched_opt,
                    replace(sched_opt, cp_time_limit_s=0.0)):
             try:
@@ -110,5 +200,9 @@ def compile_graph(g: Graph, cfg: NPUConfig,
         raise last_err
     phase["schedule_allocate"] = time.monotonic() - t
 
-    return CompileResult(prog, plan, tiling, alloc,
-                         time.monotonic() - t0, phase)
+    res = CompileResult(prog, plan, tiling, alloc,
+                        time.monotonic() - t0, phase,
+                        cache_hit=False, cache_key=fp)
+    if cache and key is not None:
+        _cache_put(key, res)
+    return res

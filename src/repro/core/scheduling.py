@@ -44,6 +44,11 @@ class SchedOptions:
     partition_steps: int = 12
     fetch_window: int = 4             # how early a fetch may move
     cp_time_limit_s: float = 1.0      # per partition
+    cp_stall_s: Optional[float] = None   # early-exit: incumbent stall (s)
+    cp_stall_nodes: Optional[int] = \
+        cpsolver.DEFAULT_STALL_NODES      # …or stall (search nodes)
+    parallel_cp: bool = True          # solve partition windows concurrently
+    cp_engine: str = "incremental"    # cpsolver.ENGINES key
     tcm_frac: float = 1.0             # usable fraction of TCM banks
     dm_penalty: int = 16              # delta of Eq. (8)
 
@@ -285,6 +290,9 @@ def _greedy_schedule(cfg: NPUConfig, g: Graph, steps: List[_Step],
                 "lcopy", dummy, s.copy_bytes,
                 dma_cost(cfg, s.copy_bytes, kind="tcm"),
                 now - 1, release=max(0, now - 2), deadline=now - 1))
+            # the staging buffer dies with its compute — without this the
+            # allocator holds its banks for the rest of the program
+            death.append((dummy.key, now))
         # outputs occupy banks from the compute tick
         reap(now)
         for tl in s.out_tiles:
@@ -324,14 +332,36 @@ def _greedy_schedule(cfg: NPUConfig, g: Graph, steps: List[_Step],
 # --------------------------------------------------------------------------
 
 
-def _retime_window(cfg: NPUConfig, steps: List[_Step],
-                   jobs: List[_DmaDecision], a: int, b: int,
-                   l_c: Dict[int, int], opt: SchedOptions) -> None:
-    """Re-time jobs whose greedy tick is in [a, b) to minimize Eq. (8)
-    over that window.  Mutates job.tick in place."""
+@dataclass
+class _WindowCP:
+    """One partition window's CP: model + var map + warm start.
+
+    Windows partition the jobs by greedy tick and re-time strictly within
+    [a, b), so they share no variables — building them all first and
+    solving the batch concurrently (cpsolver.solve_many) is equivalent to
+    the sequential sweep."""
+
+    window_jobs: List[_DmaDecision]
+    model: CPModel
+    x: Dict[Tuple[int, int], int]
+    warm: Dict[int, int]
+
+    def apply(self, sol: cpsolver.Solution) -> None:
+        if sol.feasible:
+            for (ji, t), v in self.x.items():
+                if sol[v]:
+                    self.window_jobs[ji].tick = t
+
+
+def _build_window_cp(cfg: NPUConfig, steps: List[_Step],
+                     jobs: List[_DmaDecision], a: int, b: int,
+                     l_c: Dict[int, int], opt: SchedOptions
+                     ) -> Optional[_WindowCP]:
+    """Build the CP that re-times jobs whose greedy tick is in [a, b) to
+    minimize Eq. (8) over that window."""
     window_jobs = [j for j in jobs if a <= j.tick < b]
     if not window_jobs:
-        return
+        return None
     m = CPModel(f"sched[{a}:{b})")
     x: Dict[Tuple[int, int], int] = {}
     for ji, j in enumerate(window_jobs):
@@ -379,12 +409,29 @@ def _retime_window(cfg: NPUConfig, steps: List[_Step],
     ws = {}
     for (ji, t), v in x.items():
         ws[v] = 1 if window_jobs[ji].tick == t else 0
-    # ensure warm start legal (greedy tick inside var range)
-    sol = cpsolver.solve(m, time_limit_s=opt.cp_time_limit_s, warm_start=ws)
-    if sol.feasible:
-        for (ji, t), v in x.items():
-            if sol[v]:
-                window_jobs[ji].tick = t
+    # warm start legal by construction (greedy tick inside var range)
+    return _WindowCP(window_jobs, m, x, ws)
+
+
+def _retime_windows(cfg: NPUConfig, steps: List[_Step],
+                    jobs: List[_DmaDecision],
+                    windows: List[Tuple[int, int]],
+                    l_c: Dict[int, int], opt: SchedOptions) -> None:
+    """Build every window CP, solve the batch (concurrently when the
+    windows are independent), and apply the chosen ticks in place."""
+    cps = [w for w in (_build_window_cp(cfg, steps, jobs, a, b, l_c, opt)
+                       for a, b in windows) if w is not None]
+    if not cps:
+        return
+    tasks = [cpsolver.SolveTask(w.model, time_limit_s=opt.cp_time_limit_s,
+                                warm_start=w.warm,
+                                stall_limit_s=opt.cp_stall_s,
+                                stall_limit_nodes=opt.cp_stall_nodes,
+                                engine=opt.cp_engine)
+             for w in cps]
+    sols = cpsolver.solve_many(tasks, parallel=opt.parallel_cp)
+    for w, sol in zip(cps, sols):
+        w.apply(sol)
 
 
 # --------------------------------------------------------------------------
@@ -404,11 +451,11 @@ def schedule(cfg: NPUConfig, g: Graph, plan: FormatPlan,
     if opt.overlap and opt.cp_time_limit_s > 0:
         if opt.partition:
             P = opt.partition_steps
-            for a in range(0, T + 2, P):
-                _retime_window(cfg, steps, jobs, a, min(a + P, T + 2),
-                               l_c, opt)
+            windows = [(a, min(a + P, T + 2))
+                       for a in range(0, T + 2, P)]
         else:
-            _retime_window(cfg, steps, jobs, 0, T + 2, l_c, opt)
+            windows = [(0, T + 2)]
+        _retime_windows(cfg, steps, jobs, windows, l_c, opt)
 
     ticks = [Tick(i) for i in range(T + 2)]
     for s in steps:

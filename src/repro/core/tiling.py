@@ -319,13 +319,49 @@ def _greedy_order(g: Graph, region: List[Op],
 # --------------------------------------------------------------------------
 
 
-def _fusion_cp(cfg: NPUConfig, g: Graph, region: List[Op],
-               opts: Dict[str, Tuple[int, int, str]],
-               time_limit_s: float) -> Tuple[Dict[str, int],
-                                             List[ComputeStep], float]:
-    """Choose LS (tiles-per-tensor) and tile order for one region by CP.
+@dataclass
+class _FusionCP:
+    """One region's fusion CP: model + var maps + greedy fallback.
 
-    Returns (chosen n_tiles per tensor, ordered steps, objective)."""
+    Regions share no CP variables, so the models of every fusion-eligible
+    region are built first and the batch is solved concurrently
+    (cpsolver.solve_many) before the solutions are read back in region
+    order."""
+
+    region: List[Op]
+    cand: Dict[str, List[List[TileRef]]]
+    LS: Dict[Tuple[str, int], int]
+    comp: Dict[Tuple[str, int, int, int], int]
+    model: CPModel
+    warm: Dict[int, int]
+    greedy: List[ComputeStep]
+
+    def extract(self, g: Graph, sol: cpsolver.Solution
+                ) -> Tuple[Dict[str, int], List[ComputeStep], float]:
+        if not sol.feasible:  # fall back to the greedy warm start
+            chosen = {onm: len(self.cand[onm][0]) for onm in self.cand}
+            return chosen, self.greedy, float("inf")
+        chosen: Dict[str, int] = {}
+        for oname, variants in self.cand.items():
+            for k in range(len(variants)):
+                if sol[self.LS[(oname, k)]]:
+                    chosen[oname] = len(variants[k])
+        steps: List[Tuple[int, ComputeStep]] = []
+        for (opn, k, j, t), v in self.comp.items():
+            if sol[v]:
+                oname = g.op(opn).outputs[0]
+                if sol[self.LS[(oname, k)]]:
+                    tl = self.cand[oname][k][j]
+                    steps.append((t, ComputeStep(opn, tl.r0, tl.r1,
+                                                 tl.axis)))
+        steps.sort(key=lambda x: x[0])
+        return chosen, [s for _, s in steps], sol.objective
+
+
+def _build_fusion_cp(cfg: NPUConfig, g: Graph, region: List[Op],
+                     opts: Dict[str, Tuple[int, int, str]]) -> _FusionCP:
+    """Build the CP choosing LS (tiles-per-tensor) and tile order for one
+    region."""
     region_ops = {op.name for op in region}
     bank = cfg.bank_bytes
 
@@ -448,25 +484,7 @@ def _fusion_cp(cfg: NPUConfig, g: Graph, region: List[Op],
             for t in range(t0, last + 1):
                 ws[state[(oname, 0, j, t)]] = 1
 
-    sol = cpsolver.solve(m, time_limit_s=time_limit_s, warm_start=ws)
-    if not sol.feasible:  # fall back to the greedy warm start
-        chosen = {oname: len(cand[oname][0]) for oname in cand}
-        return chosen, greedy, float("inf")
-
-    chosen: Dict[str, int] = {}
-    for oname, variants in cand.items():
-        for k in range(len(variants)):
-            if sol[LS[(oname, k)]]:
-                chosen[oname] = len(variants[k])
-    steps: List[Tuple[int, ComputeStep]] = []
-    for (opn, k, j, t), v in comp.items():
-        if sol[v]:
-            oname = g.op(opn).outputs[0]
-            if sol[LS[(oname, k)]]:
-                tl = cand[oname][k][j]
-                steps.append((t, ComputeStep(opn, tl.r0, tl.r1, tl.axis)))
-    steps.sort(key=lambda x: x[0])
-    return chosen, [s for _, s in steps], sol.objective
+    return _FusionCP(region, cand, LS, comp, m, ws, greedy)
 
 
 # --------------------------------------------------------------------------
@@ -478,23 +496,48 @@ def plan_tiling(cfg: NPUConfig, g: Graph, plan: FormatPlan,
                 fusion: bool = True, cp_time_limit_s: float = 1.0,
                 max_cp_tiles: int = 36,
                 budget_frac: float = 0.5,
-                naive: bool = False) -> TilingResult:
+                naive: bool = False,
+                cp_stall_s: Optional[float] = None,
+                cp_stall_nodes: Optional[int] =
+                cpsolver.DEFAULT_STALL_NODES,
+                parallel_cp: bool = True,
+                cp_engine: str = "incremental") -> TilingResult:
     opts = _tile_options(cfg, g, budget_frac=budget_frac, naive=naive)
     bank = cfg.bank_bytes
     regions = _regions(cfg, g, opts)
 
     n_tiles: Dict[str, int] = {nm: o[0] for nm, o in opts.items()}
 
-    order: List[ComputeStep] = []
-    objective = 0.0
-    cp_regions = 0
-    for region in regions:
+    # build the fusion CP of every eligible region up front, solve the
+    # independent batch concurrently, then read solutions back in order
+    cps: Dict[int, _FusionCP] = {}
+    for ri, region in enumerate(regions):
         big = len(region) > 1 and fusion
         est_tiles = sum(max(opts[o][0], opts[o][1])
                         for op in region for o in op.outputs[:1])
         if big and est_tiles <= max_cp_tiles:
-            chosen, steps, obj = _fusion_cp(cfg, g, region, opts,
-                                            cp_time_limit_s)
+            cps[ri] = _build_fusion_cp(cfg, g, region, opts)
+    sols: Dict[int, cpsolver.Solution] = {}
+    if cps:
+        keys = list(cps)
+        tasks = [cpsolver.SolveTask(cps[ri].model,
+                                    time_limit_s=cp_time_limit_s,
+                                    warm_start=cps[ri].warm,
+                                    stall_limit_s=cp_stall_s,
+                                    stall_limit_nodes=cp_stall_nodes,
+                                    engine=cp_engine)
+                 for ri in keys]
+        for ri, sol in zip(keys, cpsolver.solve_many(
+                tasks, parallel=parallel_cp)):
+            sols[ri] = sol
+
+    order: List[ComputeStep] = []
+    objective = 0.0
+    cp_regions = 0
+    for ri, region in enumerate(regions):
+        big = len(region) > 1 and fusion
+        if ri in cps:
+            chosen, steps, obj = cps[ri].extract(g, sols[ri])
             n_tiles.update(chosen)
             order.extend(steps)
             if obj != float("inf"):

@@ -1,0 +1,12 @@
+"""Pallas-TPU API compatibility shims.
+
+``pltpu.CompilerParams`` is the current spelling; older jax releases
+ship the same dataclass as ``pltpu.TPUCompilerParams``.  Import
+``CompilerParams`` from here so the kernels build against both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -36,7 +36,7 @@ from repro.analysis import roofline as rl
 from repro.analysis.hlo import analyze_hlo
 from repro.models.registry import (ARCH_IDS, SHAPES, build_step, cells,
                                    get_arch)
-from .mesh import make_production_mesh
+from .mesh import make_production_mesh, named_shardings, use_mesh
 
 
 def run_cell(arch: str, shape: str, multi_pod: bool = False,
@@ -55,11 +55,11 @@ def run_cell(arch: str, shape: str, multi_pod: bool = False,
 
     t0 = time.monotonic()
     bundle = build_step(cfg, shape, with_pod=multi_pod)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         jitted = jax.jit(
             bundle.fn,
-            in_shardings=bundle.in_specs,
-            out_shardings=bundle.out_specs,
+            in_shardings=named_shardings(mesh, bundle.in_specs),
+            out_shardings=named_shardings(mesh, bundle.out_specs),
             donate_argnums=bundle.donate or (),
         )
         lowered = jitted.lower(*bundle.args)

@@ -11,6 +11,40 @@ from typing import Optional, Tuple
 import jax
 
 
+def use_mesh(mesh):
+    """Context manager activating `mesh` across jax versions.
+
+    ``jax.set_mesh`` only exists in newer jax; on older releases the
+    Mesh object itself is the context manager that installs the
+    resource environment.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
+def named_shardings(mesh, tree):
+    """Convert a pytree of PartitionSpec / None into NamedShardings.
+
+    Older ``jax.jit`` rejects bare PartitionSpecs (and None subtree
+    markers) in in/out_shardings; NamedSharding works on every version.
+    None maps to the replicated sharding.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def conv(s):
+        if s is None:
+            return NamedSharding(mesh, PartitionSpec())
+        if isinstance(s, PartitionSpec):
+            return NamedSharding(mesh, s)
+        return s
+
+    return jax.tree_util.tree_map(
+        conv, tree,
+        is_leaf=lambda x: x is None or isinstance(x, PartitionSpec))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 (512 chips, 2 pods)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)

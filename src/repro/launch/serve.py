@@ -23,7 +23,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.registry import get_arch
-from .mesh import make_mesh
+from .mesh import make_mesh, use_mesh
 
 
 def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
@@ -50,7 +50,7 @@ def serve(arch: str, batch: int = 4, prompt_len: int = 32, gen: int = 16,
             size=(batch, cfg.n_vision_tokens,
                   cfg.d_model)).astype(np.float32)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = lm.init_params(cfg, jax.random.PRNGKey(seed))
         if cfg.enc_dec:
             enc = lm.encode_audio(cfg, params, extra["audio_embed"])

@@ -30,7 +30,7 @@ from repro.models.registry import get_arch, state_specs
 from repro.models.train import (TrainOptions, init_train_state,
                                 make_train_step)
 from repro.runtime.fault import FaultMonitor
-from .mesh import make_mesh
+from .mesh import make_mesh, named_shardings, use_mesh
 
 
 def train_loop(arch: str, steps: int = 30, smoke: bool = True,
@@ -59,7 +59,7 @@ def train_loop(arch: str, steps: int = 30, smoke: bool = True,
     ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
     start_step = 0
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         state = init_train_state(cfg, jax.random.PRNGKey(seed), opts=opts)
         if ckpt is not None and ckpt.latest_step() is not None:
             state, start_step, meta = ckpt.restore(state)
@@ -70,9 +70,11 @@ def train_loop(arch: str, steps: int = 30, smoke: bool = True,
             pipe.close()
             pipe = Pipeline(dcfg, start_step=start_step)
 
-        sspec = state_specs(cfg, state, n_model=n_model)
-        jitted = jax.jit(step_fn, in_shardings=(sspec, None),
-                         out_shardings=(sspec, None),
+        sspec = named_shardings(mesh, state_specs(cfg, state,
+                                                  n_model=n_model))
+        repl = named_shardings(mesh, None)
+        jitted = jax.jit(step_fn, in_shardings=(sspec, repl),
+                         out_shardings=(sspec, repl),
                          donate_argnums=(0,))
         losses = []
         for i in range(start_step, steps):

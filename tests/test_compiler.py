@@ -4,6 +4,8 @@ CP stack must never be slower than the baseline on the model's own
 latency metric.  Property-based over randomly generated CNN graphs."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip, don't error
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ENPU_A, NEUTRON_2TOPS, CompilerOptions,

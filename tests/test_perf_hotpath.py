@@ -1,0 +1,215 @@
+"""Compiler hot-path regressions (no optional deps, all `fast`):
+
+  * the incremental CP engine reaches the same optimum as the seed
+    (reference) engine on fixed models, with and without MaxTerms;
+  * solve_many returns the same solutions parallel and serial;
+  * the compiled-program cache hits on identical (graph, config,
+    options) and misses when any key component changes;
+  * the memoized cost model matches the unmemoized one;
+  * the parallel/incremental compiler still produces oracle-exact
+    programs with scheduled latency no worse than the seed engine's.
+"""
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import NEUTRON_2TOPS, CompilerOptions, compile_graph
+from repro.core import npu as npu_mod
+from repro.core.cpsolver import (CPModel, MaxTerm, SolveTask, brute_force,
+                                 solve, solve_many, solve_reference)
+from repro.core.executor import execute
+from repro.core.ir import GraphBuilder
+from repro.core.npu import NPUConfig, compute_job_cost, dma_cost
+from repro.core.pipeline import program_cache_clear
+
+pytestmark = pytest.mark.fast
+
+
+# --------------------------------------------------------------------------
+# Solver engine parity
+# --------------------------------------------------------------------------
+
+
+def _random_model(seed: int, with_max_terms: bool = False) -> CPModel:
+    rng = random.Random(seed)
+    n = rng.randint(2, 12)
+    m = CPModel(f"fixed{seed}")
+    for i in range(n):
+        m.bool(f"x{i}")
+    for c in range(rng.randint(1, 7)):
+        k = rng.randint(1, min(4, n))
+        vs = rng.sample(range(n), k)
+        coefs = [rng.randint(-3, 3) or 1 for _ in vs]
+        m.add(list(zip(vs, coefs)), "<=", rng.randint(-2, 4), f"c{c}")
+    obj = [(v, rng.randint(-5, 5)) for v in range(n) if rng.random() < 0.8]
+    m.minimize(obj)
+    if with_max_terms:
+        k = rng.randint(1, n)
+        vs = rng.sample(range(n), k)
+        m.max_terms = [MaxTerm([
+            (rng.randint(0, 3), [(v, rng.randint(0, 4)) for v in vs]),
+            (rng.randint(0, 3), [(v, rng.randint(0, 4)) for v in vs])])]
+    return m
+
+
+@pytest.mark.parametrize("seed", list(range(0, 40)))
+def test_incremental_matches_seed_solver(seed):
+    m = _random_model(seed, with_max_terms=(seed % 2 == 0))
+    got = solve(m, time_limit_s=10.0)
+    ref = solve_reference(m, time_limit_s=10.0)
+    assert got.feasible == ref.feasible
+    if ref.feasible:
+        assert got.optimal and ref.optimal
+        assert got.objective == ref.objective
+        vals = [got.values[v] for v in range(m.n_vars)]
+        assert not m.check(vals)
+
+
+@pytest.mark.parametrize("seed", [3, 11, 27])
+def test_incremental_matches_brute_force(seed):
+    m = _random_model(seed, with_max_terms=True)
+    got = solve(m, time_limit_s=10.0)
+    want = brute_force(m)
+    assert got.feasible == want.feasible
+    if want.feasible:
+        assert got.objective == want.objective
+
+
+def test_incremental_respects_warm_start_and_fixed():
+    m = CPModel("ws")
+    a, b = m.bool("a"), m.bool("b")
+    m.add([(a, 1), (b, 1)], ">=", 1)
+    m.minimize([(a, 1), (b, 2)])
+    sol = solve(m, time_limit_s=5.0, warm_start={a: 0, b: 1})
+    assert sol.feasible and sol.objective == 1
+    m2 = CPModel("fix")
+    c, d = m2.bool("c"), m2.bool("d")
+    m2.fix(c, 1)
+    m2.minimize([(c, 5), (d, 1)])
+    s2 = solve(m2, time_limit_s=5.0)
+    assert s2.feasible and s2[c] == 1 and s2[d] == 0
+
+
+def test_solve_many_parallel_matches_serial():
+    tasks = [SolveTask(_random_model(s), time_limit_s=10.0)
+             for s in range(8)]
+    par = solve_many(tasks, parallel=True)
+    ser = solve_many(tasks, parallel=False)
+    for p, s in zip(par, ser):
+        assert p.feasible == s.feasible
+        if s.feasible:
+            assert p.objective == s.objective
+
+
+# --------------------------------------------------------------------------
+# Cost-model memoization
+# --------------------------------------------------------------------------
+
+
+def _tiny_graph(seed: int = 0):
+    b = GraphBuilder("tiny", seed=seed)  # name is part of the fingerprint
+    x = b.input((16, 16, 8))
+    x = b.conv(x, 16, k=3, act="relu")
+    x = b.dwconv(x, k=3, act="relu")
+    x = b.maxpool(x, k=2)
+    x = b.conv(x, 24, k=1, act="relu6")
+    x = b.global_avgpool(x)
+    x = b.fc(x, 10)
+    b.mark_output(x)
+    return b.build(), b
+
+
+def test_cost_memo_matches_uncached():
+    g, _ = _tiny_graph()
+    cfg = NEUTRON_2TOPS
+    try:
+        for op in g.ops:
+            npu_mod.set_cost_memo(True)
+            H = g.tensors[op.output].shape[0] \
+                if len(g.tensors[op.output].shape) == 3 else 1
+            memo1 = compute_job_cost(cfg, g, op, H, "depth")
+            memo2 = compute_job_cost(cfg, g, op, H, "depth")
+            assert memo2 is memo1          # second call is a cache hit
+            npu_mod.set_cost_memo(False)
+            cold = compute_job_cost(cfg, g, op, H, "depth")
+            assert (memo1.cycles, memo1.macs, memo1.bound) == \
+                (cold.cycles, cold.macs, cold.bound)
+        npu_mod.set_cost_memo(True)
+        assert dma_cost(cfg, 12345) == cfg.dma_setup_cycles + \
+            int(np.ceil(12345 / cfg.ddr_bytes_per_cycle))
+    finally:
+        npu_mod.set_cost_memo(True)
+
+
+# --------------------------------------------------------------------------
+# Compiled-program cache
+# --------------------------------------------------------------------------
+
+
+def test_program_cache_hits_and_keys():
+    program_cache_clear()
+    g, _ = _tiny_graph()
+    a = compile_graph(g, NEUTRON_2TOPS, CompilerOptions())
+    assert not a.cache_hit
+    g2, _ = _tiny_graph()          # same structure, fresh objects
+    b = compile_graph(g2, NEUTRON_2TOPS, CompilerOptions())
+    assert b.cache_hit
+    assert b.program is a.program  # identical cached NPUProgram
+    assert b.cache_key == a.cache_key
+    # a different NPUConfig must miss
+    from dataclasses import replace
+    other_cfg = replace(NEUTRON_2TOPS, tcm_banks=16,
+                        tcm_bytes=NEUTRON_2TOPS.tcm_bytes // 2)
+    c = compile_graph(g2, other_cfg, CompilerOptions())
+    assert not c.cache_hit
+    assert c.program is not a.program
+    # different compile options must miss too
+    d = compile_graph(g2, NEUTRON_2TOPS, CompilerOptions(fusion=False))
+    assert not d.cache_hit
+    # a structurally different graph must miss
+    g3, _ = _tiny_graph(seed=1)    # same topology, same names -> same fp
+    b3 = GraphBuilder("other", seed=0)
+    x = b3.input((16, 16, 8))
+    x = b3.conv(x, 16, k=3, act="relu")
+    b3.mark_output(x)
+    e = compile_graph(b3.build(), NEUTRON_2TOPS, CompilerOptions())
+    assert not e.cache_hit
+    assert g3.fingerprint() == g.fingerprint()
+
+
+def test_program_cache_can_be_bypassed():
+    program_cache_clear()
+    g, _ = _tiny_graph()
+    a = compile_graph(g, NEUTRON_2TOPS, CompilerOptions(), cache=False)
+    b = compile_graph(g, NEUTRON_2TOPS, CompilerOptions(), cache=False)
+    assert not a.cache_hit and not b.cache_hit
+    assert a.program is not b.program
+
+
+# --------------------------------------------------------------------------
+# End-to-end: overhauled hot path stays oracle-exact and no slower on the
+# model's own latency metric than the seed engine
+# --------------------------------------------------------------------------
+
+
+def test_overhauled_compiler_oracle_exact_and_latency_no_worse():
+    g, b = _tiny_graph()
+    new = compile_graph(g, NEUTRON_2TOPS, CompilerOptions(), cache=False)
+    g2, b2 = _tiny_graph()
+    npu_mod.set_cost_memo(False)
+    try:
+        seed = compile_graph(g2, NEUTRON_2TOPS,
+                             CompilerOptions.seed_solver(), cache=False)
+    finally:
+        npu_mod.set_cost_memo(True)
+    inp = {g.inputs[0].name: np.random.default_rng(0).normal(
+        size=g.inputs[0].shape).astype(np.float32)}
+    rep = execute(new.program, g, new.tiling, inp, b._weights)
+    assert rep.ok
+    rep2 = execute(seed.program, g2, seed.tiling, inp, b2._weights)
+    assert rep2.ok
+    for name in rep.outputs:
+        np.testing.assert_array_equal(rep.outputs[name],
+                                      rep2.outputs[name])
+    assert new.program.latency_ms() <= seed.program.latency_ms() * 1.001

@@ -89,9 +89,11 @@ def test_hlo_analyzer_collectives():
         return jax.lax.with_sharding_constraint(
             x.sum(axis=0, keepdims=True), P(None, None))
 
-    with jax.set_mesh(mesh):
-        c = jax.jit(f, in_shardings=P("d", None),
-                    out_shardings=P(None, None)).lower(
+    from repro.launch.mesh import named_shardings, use_mesh
+    with use_mesh(mesh):
+        c = jax.jit(f, in_shardings=named_shardings(mesh, P("d", None)),
+                    out_shardings=named_shardings(
+                        mesh, P(None, None))).lower(
             jax.ShapeDtypeStruct((8, 128), jnp.float32)).compile()
     cost = analyze_hlo(c.as_text())
     if jax.device_count() > 1:
