@@ -1,0 +1,181 @@
+"""Quantization benchmark: int8/int4 PTQ vs float32 at identical silicon.
+
+For each benchmarked vision model this
+
+  * compiles the float32 graph and the int8-PTQ graph (and an int4-weight
+    variant) at the same ``NPUConfig`` and compares scheduled latency
+    (the Eq. 8 objective) — the paper's MAC arrays, TCM and DMA are sized
+    for quantized tensors, so int8 should win well past the 1.5x
+    acceptance bar;
+  * replays the quantized program on the banked-TCM simulator
+    (``QuantSemantics``) and checks it against the quantized functional
+    oracle (exact to one output quantization step) and the float32
+    oracle (within the calibrated tolerance);
+  * reports accuracy deltas: worst-output error vs the float oracle in
+    units of the calibrated tolerance, plus top-1 argmax agreement for
+    the classifier heads.
+
+Writes ``BENCH_quant.json``.
+
+    PYTHONPATH=src python -m benchmarks.quant_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro import quant
+from repro.core import NEUTRON_2TOPS, CompilerOptions, compile_graph
+from repro.core.executor import execute
+from repro.core.ir import reference_execute
+from repro.frontends.vision import build
+
+MODELS: List[Tuple[str, float]] = [
+    ("mobilenet_v1", 0.5),
+    ("mobilenet_v2", 0.5),
+    ("mobilenet_v3_min", 0.5),
+    ("efficientnet_lite0", 0.5),
+    ("resnet50_v1", 0.5),
+]
+
+QUICK_MODELS: List[Tuple[str, float]] = [
+    ("mobilenet_v1", 0.25),
+    ("mobilenet_v2", 0.25),
+]
+
+
+def bench_model(name: str, res_scale: float, samples: int = 2,
+                exec_check: bool = True) -> Dict:
+    cfg = NEUTRON_2TOPS
+
+    # --- float32 baseline ---
+    g_f, b_f = build(name, res_scale=res_scale)
+    res_f = compile_graph(g_f, cfg, CompilerOptions(precision="float32"),
+                          cache=False)
+    float_ms = res_f.program.latency_ms()
+
+    # --- int8 PTQ (calibrate once; the table is shared with int4) ---
+    g_q, b_q = build(name, res_scale=res_scale)
+    rng_cal = np.random.default_rng(0)
+    cal = [{g_q.inputs[0].name: rng_cal.normal(
+        size=g_q.inputs[0].shape).astype(np.float32)}
+        for _ in range(max(1, samples))]
+    calib = quant.calibrate(g_q, b_q._weights, cal)
+    qm = quant.quantize_graph(g_q, b_q._weights, calib)
+    quant.measure_quant_error(qm, cal)
+    res_q = compile_graph(g_q, cfg, CompilerOptions(precision="int8"),
+                          cache=False)
+    int8_ms = res_q.program.latency_ms()
+
+    # --- int4 weights (same activation qparams, nibble-packed weights;
+    #     tensor names match across build() clones so the calibration
+    #     table is reusable without re-running the float reference) ---
+    g_4, b_4 = build(name, res_scale=res_scale)
+    qm4 = quant.quantize_graph(g_4, b_4._weights, calib,
+                               weight_dtype="int4")
+    res_q4 = compile_graph(g_4, cfg, cache=False)
+    int4_ms = res_q4.program.latency_ms()
+
+    row = {
+        "model": name,
+        "res_scale": res_scale,
+        "ops": len(g_q.ops),
+        "float_ms": round(float_ms, 5),
+        "int8_ms": round(int8_ms, 5),
+        "int4w_ms": round(int4_ms, 5),
+        "speedup_int8": round(float_ms / int8_ms, 3),
+        "speedup_int4w": round(float_ms / int4_ms, 3),
+        "float_ddr_mb": round(res_f.program.ddr_bytes() / 1e6, 3),
+        "int8_ddr_mb": round(res_q.program.ddr_bytes() / 1e6, 3),
+    }
+
+    if exec_check:
+        # held-out input: the calibration draws came from rng seed 0,
+        # so the accuracy check must not reuse that stream
+        rng = np.random.default_rng(1234)
+        inp = {g_q.inputs[0].name: rng.normal(
+            size=g_q.inputs[0].shape).astype(np.float32)}
+        sem = quant.QuantSemantics(qm)
+        rep = execute(res_q.program, g_q, res_q.tiling, inp,
+                      qm.weights_f, semantics=sem)
+        row["replay_vs_qoracle_ok"] = bool(rep.ok)
+        row["replay_vs_qoracle_err"] = float(rep.max_err)
+
+        # accuracy vs the float oracle, in calibrated-tolerance units
+        ref = reference_execute(g_q, inp, qm.weights_f)
+        qref = quant.quantized_reference_execute(qm, inp)
+        worst = 0.0
+        argmax_match = None
+        within = True
+        for t in g_q.outputs:
+            got = quant.dequantize(qref[t.name], qm.qp(t.name))
+            err = float(np.max(np.abs(got - ref[t.name])))
+            tol = sem.float_tolerance(t.name)
+            worst = max(worst, err / tol)
+            within = within and err <= tol
+            if t.shape == (1, 1, t.shape[-1]):  # classifier logits
+                argmax_match = bool(np.argmax(got) == np.argmax(ref[t.name]))
+        row["float_oracle_within_tol"] = bool(within)
+        row["float_oracle_worst_tol_frac"] = round(worst, 4)
+        if argmax_match is not None:
+            row["top1_argmax_match"] = argmax_match
+    return row
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="two small models at 0.25 scale (smoke mode)")
+    ap.add_argument("--no-exec-check", action="store_true")
+    ap.add_argument("--samples", type=int, default=2,
+                    help="calibration sample count")
+    ap.add_argument("--out", default="BENCH_quant.json")
+    args = ap.parse_args(argv)
+
+    models = QUICK_MODELS if args.quick else MODELS
+    rows = []
+    for name, scale in models:
+        print(f"[quant_bench] {name} @ x{scale} ...", flush=True)
+        row = bench_model(name, scale, samples=args.samples,
+                          exec_check=not args.no_exec_check)
+        rows.append(row)
+        print(f"  float {row['float_ms']:9.3f} ms   "
+              f"int8 {row['int8_ms']:8.3f} ms ({row['speedup_int8']:5.2f}x)"
+              f"   int4w {row['int4w_ms']:8.3f} ms "
+              f"({row['speedup_int4w']:5.2f}x)   "
+              f"parity {row.get('replay_vs_qoracle_ok', '-')}", flush=True)
+
+    geomean = math.exp(sum(math.log(r["speedup_int8"]) for r in rows)
+                       / len(rows))
+    min_speedup = min(r["speedup_int8"] for r in rows)
+    result = {
+        "config": NEUTRON_2TOPS.name,
+        "models": rows,
+        "geomean_speedup_int8": round(geomean, 3),
+        "min_speedup_int8": round(min_speedup, 3),
+        "meets_1p5x_target": bool(min_speedup >= 1.5),
+        "all_parity_ok": all(r.get("replay_vs_qoracle_ok", True)
+                             for r in rows),
+        "all_within_calibrated_tol": all(
+            r.get("float_oracle_within_tol", True) for r in rows),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[quant_bench] geomean int8 speedup {geomean:.2f}x "
+          f"(min {min_speedup:.2f}x, target >= 1.5x) -> {args.out}")
+    ok = (result["meets_1p5x_target"] and result["all_parity_ok"]
+          and result["all_within_calibrated_tol"])
+    if not ok:
+        print("[quant_bench] FAIL: target or parity not met",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

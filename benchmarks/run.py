@@ -19,19 +19,24 @@ def main(argv=None):
                          "compile_bench --quick; skips tables/roofline")
     ap.add_argument("--skip-tables", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
+    ap.add_argument("--skip-quant", action="store_true")
     args = ap.parse_args(argv)
 
     if args.quick:
         import subprocess
         import sys as _sys
         print("=" * 72)
-        print("QUICK SMOKE (pytest -m fast + compile_bench --quick)")
+        print("QUICK SMOKE (pytest -m fast + compile_bench --quick "
+              "+ quant_bench --quick)")
         print("=" * 72)
         rc = subprocess.call(
             [_sys.executable, "-m", "pytest", "-q", "-m", "fast"])
         from . import compile_bench
         rc |= compile_bench.main(["--quick",
                                   "--out", "BENCH_compile_quick.json"])
+        from . import quant_bench
+        rc |= quant_bench.main(["--quick",
+                                "--out", "BENCH_quant_quick.json"])
         return rc
 
     if not args.skip_tables:
@@ -55,13 +60,24 @@ def main(argv=None):
         print("[§VI] GenAI GEMM speedup")
         pt.bench_genai()
 
+    rc = 0
+    if not args.skip_quant:
+        print("=" * 72)
+        print("QUANTIZATION (int8/int4 PTQ vs float32, BENCH_quant.json)")
+        print("=" * 72)
+        from . import quant_bench
+        # --fast smoke must not clobber the canonical full-run artifact
+        rc = quant_bench.main(["--quick", "--out",
+                               "BENCH_quant_quick.json"]
+                              if args.fast else [])
+
     if not args.skip_roofline:
         print("=" * 72)
         print("ROOFLINE (from cached dry-run artifacts)")
         print("=" * 72)
         from . import roofline as rf
         rf.main()
-    return 0
+    return rc
 
 
 if __name__ == "__main__":

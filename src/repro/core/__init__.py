@@ -11,7 +11,8 @@ Public API:
     executor      — functional banked-TCM simulator (validation)
     pipeline      — compile_graph() driver
 """
-from .ir import Graph, GraphBuilder, Op, Tensor, reference_execute
+from .ir import (Graph, GraphBuilder, Op, QParams, Tensor, graph_precision,
+                 reference_execute)
 from .npu import (ENPU_A, ENPU_B, NEUTRON_2TOPS, NPUConfig, compute_job_cost,
                   cycles_to_ms, dma_cost, effective_tops)
 from .pipeline import (CompileResult, CompilerOptions, compile_graph,
@@ -19,7 +20,8 @@ from .pipeline import (CompileResult, CompilerOptions, compile_graph,
 from .program import NPUProgram
 
 __all__ = [
-    "Graph", "GraphBuilder", "Op", "Tensor", "reference_execute",
+    "Graph", "GraphBuilder", "Op", "QParams", "Tensor", "graph_precision",
+    "reference_execute",
     "NPUConfig", "NEUTRON_2TOPS", "ENPU_A", "ENPU_B",
     "compute_job_cost", "dma_cost", "cycles_to_ms", "effective_tops",
     "CompileResult", "CompilerOptions", "compile_graph", "NPUProgram",

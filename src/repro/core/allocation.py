@@ -27,6 +27,7 @@ genuine overflow raises :class:`AllocationError`.
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -59,16 +60,46 @@ def allocate(prog: NPUProgram, cfg: Optional[NPUConfig] = None
     alloc = Allocation()
     dead_after = prog.meta.get("dead_after_tick", {})
 
-    # Pre-scan: last tick each tile is used by a compute or push job —
-    # lets the fix-up advance pushes safely.
+    # Pre-scan (one pass per program): last tick each tile is used by a
+    # compute or push job, the sorted compute-input use ticks per tile,
+    # and the sorted ticks holding a scheduled push per tile.  The
+    # force_spill/acquire fix-ups below consult these indexes instead of
+    # rescanning prog.ticks[tick+1:] per repair — the rescan was
+    # quadratic on programs with many repair spills.
     last_use: Dict[Tuple[str, int], int] = {}
+    use_ticks: Dict[Tuple[str, int], List[int]] = {}
+    push_locs: Dict[Tuple[str, int], List[int]] = {}
     for t in prog.ticks:
         if t.compute:
-            for tl in t.compute.in_tiles + t.compute.out_tiles:
+            for tl in t.compute.in_tiles:
+                last_use[tl.key] = t.index
+                use_ticks.setdefault(tl.key, []).append(t.index)
+            for tl in t.compute.out_tiles:
                 last_use[tl.key] = t.index
         for j in t.dma:
             if j.kind == "push":
                 last_use.setdefault(j.tile.key, t.index)
+                push_locs.setdefault(j.tile.key, []).append(t.index)
+
+    def pop_push_loc(key: Tuple[str, int], after: int,
+                     before: int) -> Optional[int]:
+        """First tick in (after, before) holding a push of `key`; removed
+        from the index (the caller moves the job)."""
+        locs = push_locs.get(key)
+        if not locs:
+            return None
+        i = bisect.bisect_right(locs, after)
+        if i < len(locs) and locs[i] < before:
+            return locs.pop(i)
+        return None
+
+    def move_push(key: Tuple[str, int], src: int, dst: Tick) -> bool:
+        for j in prog.ticks[src].dma:
+            if j.kind == "push" and j.tile.key == key:
+                prog.ticks[src].dma.remove(j)
+                dst.dma.append(j)
+                return True
+        return False  # pragma: no cover — index out of sync
 
     from .npu import dma_cost
     from .program import DmaJob
@@ -92,28 +123,20 @@ def allocate(prog: NPUProgram, cfg: Optional[NPUConfig] = None
             tile = alloc.tiles.get(key)
             if tile is None:
                 continue
-            # next compute use of this tile (if any)
+            # next compute use of this tile (if any), via the use index
             next_use: Optional[int] = None
-            for t2 in prog.ticks[tick.index + 1:]:
-                if t2.compute and key in {tl.key for tl
-                                          in t2.compute.in_tiles}:
-                    next_use = t2.index
-                    break
+            us = use_ticks.get(key)
+            if us:
+                i = bisect.bisect_right(us, tick.index)
+                if i < len(us):
+                    next_use = us[i]
             # a scheduled push BEFORE the next use would now target a
             # non-resident tile — move it to this tick instead of adding
             # a duplicate
-            moved = False
             horizon = next_use if next_use is not None \
                 else len(prog.ticks)
-            for t2 in prog.ticks[tick.index + 1:horizon]:
-                for j in list(t2.dma):
-                    if j.kind == "push" and j.tile.key == key:
-                        t2.dma.remove(j)
-                        tick.dma.append(j)
-                        moved = True
-                        break
-                if moved:
-                    break
+            loc = pop_push_loc(key, tick.index, horizon)
+            moved = loc is not None and move_push(key, loc, tick)
             if not moved:
                 tick.dma.append(DmaJob("push", tile, tile.nbytes,
                                        dma_cost(cfg, tile.nbytes)))
@@ -137,17 +160,9 @@ def allocate(prog: NPUProgram, cfg: Optional[NPUConfig] = None
                     continue  # needed later — cannot advance its push
                 # tile resident but never used again: if a push job exists
                 # in a later tick, advance it here and free the banks
-                moved = False
-                for t2 in prog.ticks[tick.index + 1:]:
-                    for j in list(t2.dma):
-                        if j.kind == "push" and j.tile.key == key:
-                            t2.dma.remove(j)
-                            tick.dma.append(j)
-                            release(key)
-                            moved = True
-                            break
-                    if moved:
-                        break
+                loc = pop_push_loc(key, tick.index, len(prog.ticks))
+                if loc is not None and move_push(key, loc, tick):
+                    release(key)
         if len(free) < tl.banks:
             force_spill(tick, tl.banks)
         if len(free) < tl.banks:

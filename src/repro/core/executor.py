@@ -135,6 +135,21 @@ class _TcmState:
 # --------------------------------------------------------------------------
 
 
+def gather_window(tcm: _TcmState, tiling: TilingResult, x, rr0: int,
+                  rr1: int, kh: int, s: int, pt: int
+                  ) -> Tuple[np.ndarray, int, int]:
+    """Gather the input rows a kh-tall stride-s windowed op (conv/pool)
+    needs to produce output rows [rr0, rr1), clipped to the valid input
+    range.  Returns (window, top_pad, bottom_pad) — the receptive-field
+    math shared by the float and quantized replay paths."""
+    ih = x.shape[0]
+    u0 = rr0 * s - pt
+    u1 = (rr1 - 1) * s - pt + kh
+    lo, hi = max(0, u0), min(ih, u1)
+    win = tcm.gather_rows(tiling, x.name, lo, hi)
+    return win, max(0, -u0), max(0, u1 - ih)
+
+
 def _run_step(g: Graph, tiling: TilingResult, tcm: _TcmState, op: Op,
               r0: int, r1: int, axis: str) -> Dict[str, np.ndarray]:
     a = op.attrs
@@ -155,15 +170,10 @@ def _run_step(g: Graph, tiling: TilingResult, tcm: _TcmState, op: Op,
 
     if k in ("conv", "dwconv"):
         x = g.act_inputs(op)[0]
-        ih = x.shape[0]
         kh = a["k"][0]
         s = a["stride"]
         pt, pb, pl, pr = a["pad"]
-        u0 = rr0 * s - pt
-        u1 = (rr1 - 1) * s - pt + kh
-        lo, hi = max(0, u0), min(ih, u1)
-        win = rows_of(x, lo, hi)
-        top, bot = max(0, -u0), max(0, u1 - ih)
+        win, top, bot = gather_window(tcm, tiling, x, rr0, rr1, kh, s, pt)
         w = tcm.gather_param(tiling, op.inputs[1], c0, c1)
         if k == "dwconv" and axis == "chan":
             win = win[:, :, c0:c1]
@@ -200,14 +210,9 @@ def _run_step(g: Graph, tiling: TilingResult, tcm: _TcmState, op: Op,
         y = _apply_act(rows_of(g.act_inputs(op)[0], rr0, rr1), a["act"])
     elif k == "maxpool":
         x = g.act_inputs(op)[0]
-        ih = x.shape[0]
         kk, s = a["k"], a["stride"]
         pt, pb, pl, pr = a["pad"]
-        u0 = rr0 * s - pt
-        u1 = (rr1 - 1) * s - pt + kk
-        lo, hi = max(0, u0), min(ih, u1)
-        win = rows_of(x, lo, hi)
-        top, bot = max(0, -u0), max(0, u1 - ih)
+        win, top, bot = gather_window(tcm, tiling, x, rr0, rr1, kk, s, pt)
         xp = np.pad(win, ((top, bot), (pl, pr), (0, 0)),
                     constant_values=-np.inf)
         # batched window reduction (one strided view, no Python loop)
@@ -222,11 +227,8 @@ def _run_step(g: Graph, tiling: TilingResult, tcm: _TcmState, op: Op,
         else:
             kk, s = a["k"], a["stride"]
             pt, pb, pl, pr = a["pad"]
-            u0 = rr0 * s - pt
-            u1 = (rr1 - 1) * s - pt + kk
-            lo, hi = max(0, u0), min(ih, u1)
-            win = rows_of(x, lo, hi)
-            top, bot = max(0, -u0), max(0, u1 - ih)
+            win, top, bot = gather_window(tcm, tiling, x, rr0, rr1,
+                                          kk, s, pt)
             xp = np.pad(win, ((top, bot), (pl, pr), (0, 0)))
             wins = sliding_window_view(xp, (kk, kk), axis=(0, 1))
             y = wins[::s, ::s].sum(axis=(-2, -1), dtype=np.float32) \
@@ -250,6 +252,56 @@ def _run_step(g: Graph, tiling: TilingResult, tcm: _TcmState, op: Op,
 
 
 # --------------------------------------------------------------------------
+# Execution semantics — float32 replay vs quantized replay
+# --------------------------------------------------------------------------
+
+
+class ExecSemantics:
+    """Value semantics of one program replay.
+
+    The replay loop (DMA residency, bank ledger, tile gathers) is
+    precision-agnostic; this object decides what the *bytes* mean: how
+    DRAM is initialized, how one compute step is evaluated on a row
+    window, what the functional oracle is, and how outputs are compared
+    against it.  The default instance is the float32 path; the int8/int4
+    quantized path lives in :mod:`repro.quant.executor`."""
+
+    name = "float32"
+
+    def dram_init(self, g: Graph, inputs: Dict[str, np.ndarray],
+                  weights: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        dram: Dict[str, np.ndarray] = {}
+        for t in g.tensors.values():
+            if t.kind == "input":
+                dram[t.name] = np.asarray(inputs[t.name], dtype=np.float32)
+            elif t.is_param:
+                dram[t.name] = np.asarray(weights[t.name], dtype=np.float32)
+        return dram
+
+    def run_step(self, g: Graph, tiling: TilingResult, tcm: "_TcmState",
+                 op: Op, r0: int, r1: int, axis: str
+                 ) -> Dict[str, np.ndarray]:
+        return _run_step(g, tiling, tcm, op, r0, r1, axis)
+
+    def reference(self, g: Graph, inputs: Dict[str, np.ndarray],
+                  weights: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        return reference_execute(g, inputs, weights)
+
+    def decode(self, tensor: str, arr: np.ndarray) -> np.ndarray:
+        """Model-output DRAM bytes -> comparable float values."""
+        return arr
+
+    def tolerance(self, tensor: str, want: np.ndarray,
+                  atol: float) -> float:
+        """Max |got - want| accepted for one output tensor."""
+        scale = float(np.max(np.abs(want)) + 1e-6) if want.size else 1.0
+        return atol * max(1.0, scale)
+
+
+FLOAT_SEMANTICS = ExecSemantics()
+
+
+# --------------------------------------------------------------------------
 # Program replay
 # --------------------------------------------------------------------------
 
@@ -257,14 +309,11 @@ def _run_step(g: Graph, tiling: TilingResult, tcm: _TcmState, op: Op,
 def execute(prog: NPUProgram, g: Graph, tiling: TilingResult,
             inputs: Dict[str, np.ndarray],
             weights: Dict[str, np.ndarray],
-            check: bool = True, atol: float = 1e-4) -> ExecutionReport:
-    dram: Dict[str, np.ndarray] = {}
+            check: bool = True, atol: float = 1e-4,
+            semantics: Optional[ExecSemantics] = None) -> ExecutionReport:
+    sem = semantics or FLOAT_SEMANTICS
     written: Dict[str, np.ndarray] = {}
-    for t in g.tensors.values():
-        if t.kind == "input":
-            dram[t.name] = np.asarray(inputs[t.name], dtype=np.float32)
-        elif t.is_param:
-            dram[t.name] = np.asarray(weights[t.name], dtype=np.float32)
+    dram = sem.dram_init(g, inputs, weights)
 
     tcm = _TcmState(g)
     dead_after = prog.meta.get("dead_after_tick", {})
@@ -293,17 +342,31 @@ def execute(prog: NPUProgram, g: Graph, tiling: TilingResult,
         if tick.compute:
             cj = tick.compute
             op = g.op(cj.op_name)
-            # derive the step range from the out tiles
-            axis = cj.out_tiles[0].axis
-            r0 = min(tl.r0 for tl in cj.out_tiles
-                     if tl.tensor == op.outputs[0])
-            r1 = max(tl.r1 for tl in cj.out_tiles
-                     if tl.tensor == op.outputs[0])
-            results = _run_step(g, tiling, tcm, op, r0, r1, axis)
+            if cj.r0 is not None:
+                r0, r1, axis = cj.r0, cj.r1, cj.axis
+            else:  # legacy program: derive the range from the out tiles
+                axis = cj.out_tiles[0].axis
+                r0 = min(tl.r0 for tl in cj.out_tiles
+                         if tl.tensor == op.outputs[0])
+                r1 = max(tl.r1 for tl in cj.out_tiles
+                         if tl.tensor == op.outputs[0])
+            results = sem.run_step(g, tiling, tcm, op, r0, r1, axis)
             for tl in cj.out_tiles:
                 y = results[tl.tensor]
                 if axis == "chan":
-                    tcm.put(tl, y[..., tl.r0 - r0: tl.r1 - r0])
+                    if tl.r0 < r0 or tl.r1 > r1:
+                        # channel-split step writing a slice of a wider
+                        # (bank-granular) output tile: read-modify-write
+                        buf = tcm.data.get(tl.key)
+                        if buf is None:
+                            shape = y.shape[:-1] + (tl.r1 - tl.r0,)
+                            buf = np.zeros(shape, dtype=y.dtype)
+                        lo, hi = max(r0, tl.r0), min(r1, tl.r1)
+                        buf[..., lo - tl.r0: hi - tl.r0] = \
+                            y[..., lo - r0: hi - r0]
+                        tcm.put(tl, buf)
+                    else:
+                        tcm.put(tl, y[..., tl.r0 - r0: tl.r1 - r0])
                 else:
                     tcm.put(tl, y[tl.r0 - r0: tl.r1 - r0])
         for j in tick.dma:
@@ -312,10 +375,10 @@ def execute(prog: NPUProgram, g: Graph, tiling: TilingResult,
                 if j.tile.key not in tcm.resident:
                     raise ExecutionError(
                         f"tick {tick.index}: push of non-resident {j.tile}")
-                if t.name not in dram:
-                    dram[t.name] = np.zeros(t.shape, dtype=np.float32)
-                    written[t.name] = np.zeros(t.shape, dtype=bool)
                 arr = tcm.data[j.tile.key]
+                if t.name not in dram:
+                    dram[t.name] = np.zeros(t.shape, dtype=arr.dtype)
+                    written[t.name] = np.zeros(t.shape, dtype=bool)
                 if t.is_param:
                     dram[t.name][j.tile.r0:j.tile.r1] = arr
                 elif j.tile.axis == "chan":
@@ -334,20 +397,20 @@ def execute(prog: NPUProgram, g: Graph, tiling: TilingResult,
     max_err = 0.0
     outputs: Dict[str, np.ndarray] = {}
     if check:
-        ref = reference_execute(g, inputs, weights)
+        ref = sem.reference(g, inputs, weights)
         for t in g.outputs:
             if t.name not in dram:
                 raise ExecutionError(f"output {t.name} never pushed to DRAM")
             if t.name in written and not written[t.name].all():
                 raise ExecutionError(f"output {t.name} partially written")
-            got = dram[t.name]
-            want = ref[t.name]
+            got = sem.decode(t.name, dram[t.name])
+            want = ref[t.name]  # reference() returns decoded float values
             err = float(np.max(np.abs(got - want))) if got.size else 0.0
-            scale = float(np.max(np.abs(want)) + 1e-6)
-            if err > atol * max(1.0, scale):
+            tol = sem.tolerance(t.name, want, atol)
+            if err > tol:
                 raise ExecutionError(
-                    f"output {t.name} mismatch: max|err|={err:.3e} "
-                    f"(scale {scale:.3e})")
+                    f"output {t.name} mismatch ({sem.name}): "
+                    f"max|err|={err:.3e} (tol {tol:.3e})")
             max_err = max(max_err, err)
             outputs[t.name] = got
     else:

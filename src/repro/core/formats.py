@@ -26,7 +26,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Tuple
 
 from .ir import Graph, Op
-from .npu import NPUConfig, compute_job_cost, dma_cost
+from .npu import NPUConfig, compute_job_cost, dma_cost, elem_bytes
 
 FORMATS = ("depth", "line")
 
@@ -57,7 +57,7 @@ def lcopy_bytes(g: Graph, op: Op, out_rows: int) -> int:
         if len(t.shape) != 3:
             continue
         _, w, c = t.shape
-        total += h * w * c
+        total += math.ceil(h * w * c * elem_bytes(t.dtype))
     return total * 1  # one copy per internal engine boundary, amortized
 
 

@@ -12,9 +12,15 @@ IR: a static, batch-1, HWC-layout dataflow graph with
 
 Activations use (H, W, C) layout; parameters use (outC, fH, fW, inC) — the
 exact layouts of paper Algorithm 1.  Batch is always 1 (edge inference).
-All tensors are nominally INT8 (1 byte/element) for memory accounting; the
-reference executor computes in float32 and the quantization is a
-scale-per-tensor affine model, matching the paper's INT8 deployment.
+
+Tensors carry an explicit ``dtype`` (float32 by default) plus optional
+affine quantization parameters (:class:`QParams`).  A freshly built graph
+is float32 end to end; the PTQ pass in :mod:`repro.quant` annotates it
+with int8/int4 dtypes and qparams, which changes every byte-accounted
+quantity downstream (tile sizes, DMA volume, TCM occupancy) and the MAC
+throughput of the cost model — the paper's INT8 deployment.  Both dtype
+and qparams are part of :meth:`Graph.fingerprint`, so quantized and float
+variants of a model never alias in the compiled-program cache.
 """
 from __future__ import annotations
 
@@ -29,6 +35,46 @@ import numpy as np
 # --------------------------------------------------------------------------
 
 ACT_KINDS = ("input", "activation", "output")
+
+#: storage bytes per element; int4 is nibble-packed (2 values/byte).
+DTYPE_BYTES = {"int4": 0.5, "int8": 1.0, "int16": 2.0,
+               "int32": 4.0, "float32": 4.0}
+
+
+@dataclass
+class QParams:
+    """Affine quantization parameters: ``float = scale * (q - zero_point)``.
+
+    ``scale``/``zero_point`` are scalars for per-tensor quantization or
+    1-D arrays for per-channel quantization along ``axis`` (axis 0 ==
+    outC for conv/fc weights).  ``bits`` is the integer width of the
+    stored values (8 for int8, 4 for nibble-packed int4, 32 for the
+    int32 bias convention).  Attached to :class:`Tensor` by the PTQ pass
+    in :mod:`repro.quant`; participates in :meth:`Graph.fingerprint`.
+    """
+
+    scale: np.ndarray
+    zero_point: np.ndarray
+    bits: int = 8
+    axis: Optional[int] = None
+
+    @property
+    def per_channel(self) -> bool:
+        return self.axis is not None
+
+    @property
+    def qmin(self) -> int:
+        return -(1 << (self.bits - 1))
+
+    @property
+    def qmax(self) -> int:
+        return (1 << (self.bits - 1)) - 1
+
+    def payload(self) -> list:
+        """Canonical JSON-serializable form for graph fingerprinting."""
+        return [self.bits, self.axis,
+                [float(s) for s in np.atleast_1d(self.scale)],
+                [int(z) for z in np.atleast_1d(self.zero_point)]]
 
 
 @dataclass
@@ -46,10 +92,11 @@ class Tensor:
     name: str
     shape: Tuple[int, ...]
     kind: str = "activation"
-    dtype: str = "int8"
+    dtype: str = "float32"
     producer: Optional[str] = None          # op name, None for inputs/params
     consumers: List[str] = field(default_factory=list)
-    scale: float = 1.0                      # affine quant scale (float ref)
+    scale: float = 1.0                      # legacy scalar scale (float ref)
+    qparams: Optional[QParams] = None       # set by the PTQ pass
 
     @property
     def elems(self) -> int:
@@ -57,8 +104,7 @@ class Tensor:
 
     @property
     def bytes(self) -> int:
-        per = {"int8": 1, "int16": 2, "int32": 4, "float32": 4}[self.dtype]
-        return self.elems * per
+        return int(math.ceil(self.elems * DTYPE_BYTES[self.dtype]))
 
     @property
     def is_param(self) -> bool:
@@ -233,7 +279,8 @@ class Graph:
             "name": self.name,
             "tensors": [
                 [t.name, list(t.shape), t.kind, t.dtype, t.producer,
-                 list(t.consumers), t.scale]
+                 list(t.consumers), t.scale,
+                 t.qparams.payload() if t.qparams is not None else None]
                 for t in sorted(self.tensors.values(),
                                 key=lambda t: t.name)],
             "ops": [[op.name, op.kind, list(op.inputs), list(op.outputs),
@@ -246,6 +293,16 @@ class Graph:
         s = self.stats()
         return (f"Graph({self.name}: {s['ops']} ops, {s['gmacs']:.2f} GMACs,"
                 f" {s['params_m']:.1f}M params)")
+
+
+def graph_precision(g: Graph) -> str:
+    """Activation precision of a graph: 'float32', 'int8', or 'mixed'."""
+    dts = {t.dtype for t in g.tensors.values() if not t.is_param}
+    if dts == {"int8"}:
+        return "int8"
+    if dts == {"float32"}:
+        return "float32"
+    return "mixed"
 
 
 # --------------------------------------------------------------------------

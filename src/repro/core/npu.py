@@ -30,7 +30,23 @@ from dataclasses import dataclass, field, replace
 from functools import lru_cache
 from typing import Dict, Optional, Tuple
 
-from .ir import Graph, Op
+from .ir import DTYPE_BYTES, Graph, Op
+
+
+def elem_bytes(dtype: str) -> float:
+    """Storage bytes per element (int4 is nibble-packed: 0.5)."""
+    return DTYPE_BYTES.get(dtype, 4.0)
+
+
+def mac_rate(dtype: str) -> float:
+    """MAC-array throughput multiplier vs the native int8 rate.
+
+    The Neutron dot-product units are sized for 8-bit operands (paper
+    §III-B): int8/int4 operands run the N-wide vector at full rate, while
+    16/32-bit operands halve the effective vector length (two byte lanes
+    per element pair) — i.e. quantized layers get the paper's 2x MAC
+    throughput over a float32 fallback at identical silicon."""
+    return 1.0 if dtype in ("int4", "int8") else 0.5
 
 
 @dataclass(frozen=True)
@@ -111,15 +127,22 @@ class JobCost:
 
 def _dot_engine_cycles(cfg: NPUConfig, out_pixels: int, out_c: int,
                        dot_len: int, engines: int,
-                       weights_stationary: bool) -> Tuple[int, str]:
+                       weights_stationary: bool,
+                       act_eb: float = 1.0, w_eb: float = 1.0,
+                       rate: float = 1.0) -> Tuple[int, str]:
     """Cycles for one core-group to produce `out_pixels x out_c` results,
     each a dot product of length `dot_len`, spread over `engines` cores.
 
     Within a core: M units each produce one output-channel result per
     pass; A accumulators keep A pixels in flight.  The paper's bandwidth
-    argument: the shared operand (ifmap in depth parallelism) needs N
-    bytes/cycle; the non-shared one (weights) is either stationary in W_C
-    or streamed with A-fold reuse.
+    argument: the shared operand (ifmap in depth parallelism) needs
+    N * act_eb bytes/cycle; the non-shared one (weights) is either
+    stationary in W_C or streamed with A-fold reuse.
+
+    ``act_eb``/``w_eb`` are bytes/element of the streamed activation and
+    weight operands; ``rate`` is the MAC-array throughput multiplier
+    (:func:`mac_rate`) — int8 runs the full N-wide vector per cycle,
+    float32 half of it.
     """
     if engines <= 0:
         engines = 1
@@ -128,15 +151,15 @@ def _dot_engine_cycles(cfg: NPUConfig, out_pixels: int, out_c: int,
     if oc_per_engine == 0 or out_pixels == 0 or dot_len == 0:
         return 0, "compute"
     oc_passes = math.ceil(oc_per_engine / cfg.M)
-    dot_cycles = math.ceil(dot_len / cfg.N)
+    dot_cycles = math.ceil(dot_len / (cfg.N * rate))
     compute = out_pixels * oc_passes * dot_cycles
 
-    # --- operand (shared, e.g. ifmap) bandwidth: N bytes/cycle needed,
-    #     one 128-bit bus provides bus_bytes per cycle.
-    operand_rate = min(1.0, cfg.bus_bytes / cfg.N)
+    # --- operand (shared, e.g. ifmap) bandwidth: N*act_eb bytes/cycle
+    #     needed, one 128-bit bus provides bus_bytes per cycle.
+    operand_rate = min(1.0, cfg.bus_bytes / (cfg.N * act_eb))
     # --- weight bandwidth: stationary weights stream once per W_C refill;
     #     otherwise every pass re-reads them with A-fold pixel reuse.
-    w_bytes_total = out_c * dot_len  # int8
+    w_bytes_total = math.ceil(out_c * dot_len * w_eb)
     if weights_stationary and w_bytes_total <= cfg.Wc_bytes * engines:
         w_stream_cycles = math.ceil(w_bytes_total / (cfg.bus_bytes * engines))
         weight_limited = 0
@@ -190,9 +213,9 @@ def _job_cost_key(cfg: NPUConfig, g: Graph, op: Op, out_h: int, fmt: str,
     tensor names, so repeated tiles, budget-ladder retries and repeated
     model compiles all hit the same entries."""
     return (cfg, op.kind, _freeze(op.attrs),
-            g.tensors[op.output].shape,
-            tuple((t.shape, t.bytes) for t in g.param_inputs(op)),
-            tuple((t.shape, t.bytes) for t in g.act_inputs(op)),
+            g.tensors[op.output].shape, g.tensors[op.output].dtype,
+            tuple((t.shape, t.dtype) for t in g.param_inputs(op)),
+            tuple((t.shape, t.dtype) for t in g.act_inputs(op)),
             out_h, fmt, engines, out_c)
 
 
@@ -237,49 +260,67 @@ def _compute_job_cost(cfg: NPUConfig, g: Graph, op: Op,
         C = out_c
     a = op.attrs
 
-    w_bytes = math.ceil(sum(t.bytes for t in g.param_inputs(op)) * c_frac)
-    in_bytes = sum(t.bytes for t in g.act_inputs(op))
+    # precision: bytes/element of each operand class + MAC-array rate
+    # (the paper's MAC arrays are int8-native; see mac_rate()).
+    acts = g.act_inputs(op)
+    params = g.param_inputs(op)
+    act_eb = elem_bytes(acts[0].dtype if acts else out.dtype)
+    w_eb = elem_bytes(params[0].dtype) if params else act_eb
+    out_eb = elem_bytes(out.dtype)
+    rate = min(mac_rate(acts[0].dtype) if acts else 1.0,
+               mac_rate(params[0].dtype) if params else 1.0)
+
+    w_bytes = math.ceil(sum(t.bytes for t in params) * c_frac)
+    in_bytes = sum(t.bytes for t in acts)
     in_bytes = math.ceil(in_bytes * out_h / max(H, 1))
-    out_bytes = out_h * W * C
+    out_bytes = math.ceil(out_h * W * C * out_eb)
 
     if k in ("conv", "fc"):
-        wt = g.param_inputs(op)[0]
+        wt = params[0]
         oc, fh, fw, ic = wt.shape
         dot_len = fh * fw * ic
         pixels = out_h * W
         if fmt == "depth":
             # split outC over engines; ifmap broadcast-shared
             cyc, bound = _dot_engine_cycles(cfg, pixels, C, dot_len,
-                                            engines, weights_stationary=True)
+                                            engines, weights_stationary=True,
+                                            act_eb=act_eb, w_eb=w_eb,
+                                            rate=rate)
         else:
             # line: split lines over engines; weights broadcast-shared
             pix_e = math.ceil(out_h / engines) * W
             cyc, bound = _dot_engine_cycles(cfg, pix_e, C, dot_len, 1,
-                                            weights_stationary=True)
+                                            weights_stationary=True,
+                                            act_eb=act_eb, w_eb=w_eb,
+                                            rate=rate)
         macs = pixels * C * dot_len
     elif k == "dwconv":
-        wt = g.param_inputs(op)[0]
+        wt = params[0]
         _, fh, fw, _ = wt.shape
         dot_len = fh * fw
         pixels = out_h * W
         if fmt == "depth":
             cyc, bound = _dot_engine_cycles(cfg, pixels,
                                             math.ceil(C / 1), dot_len,
-                                            engines, True)
+                                            engines, True,
+                                            act_eb=act_eb, w_eb=w_eb,
+                                            rate=rate)
             # depthwise cannot share the ifmap across channels: each unit
             # needs its own channel stream -> M-fold operand bandwidth.
-            cyc = max(cyc, math.ceil(pixels * C * dot_len
+            cyc = max(cyc, math.ceil(pixels * C * dot_len * act_eb
                                      / (cfg.bus_bytes * engines)))
             bound = "operand-bw" if cyc > pixels else bound
         else:
             pix_e = math.ceil(out_h / engines) * W
-            cyc, bound = _dot_engine_cycles(cfg, pix_e, C, dot_len, 1, True)
+            cyc, bound = _dot_engine_cycles(cfg, pix_e, C, dot_len, 1, True,
+                                            act_eb=act_eb, w_eb=w_eb,
+                                            rate=rate)
         macs = pixels * C * dot_len
     elif k in ("add", "mul", "scalar", "act", "concat", "split", "pad"):
         # element-wise / data-movement ops: TCM-bandwidth bound, fused
         # through the vector path (paired depthwise, paper §IV-A).
         elems = out_h * W * C * (2 if k in ("add", "mul") else 1)
-        cyc = math.ceil(elems / (cfg.bus_bytes * engines))
+        cyc = math.ceil(elems * act_eb / (cfg.bus_bytes * engines))
         macs = out_h * W * C
         bound = "operand-bw"
     elif k in ("maxpool", "avgpool"):
@@ -289,11 +330,12 @@ def _compute_job_cost(cfg: NPUConfig, g: Graph, op: Op,
             ih = g.act_inputs(op)[0].shape[0]
             iw = g.act_inputs(op)[0].shape[1]
             elems = ih * iw * C
-        cyc = math.ceil(elems / (cfg.bus_bytes * engines))
+        cyc = math.ceil(elems * act_eb / (cfg.bus_bytes * engines))
         macs = elems
         bound = "operand-bw"
     elif k == "resize":
-        cyc = math.ceil(out_h * W * C / (cfg.bus_bytes * engines))
+        cyc = math.ceil(out_h * W * C * out_eb
+                        / (cfg.bus_bytes * engines))
         macs = 0
         bound = "output-bw"
     elif k in ("format", "reshape"):

@@ -33,7 +33,7 @@ from typing import Dict, Optional, Tuple
 from . import cpsolver
 from .allocation import Allocation, AllocationError, allocate
 from .formats import FORMATS, FormatPlan, select_formats
-from .ir import Graph
+from .ir import Graph, graph_precision
 from .npu import NPUConfig
 from .program import NPUProgram
 from .scheduling import SchedOptions, schedule
@@ -59,6 +59,11 @@ class CompilerOptions:
         cpsolver.DEFAULT_STALL_NODES      # …or stall search nodes
     parallel_cp: bool = True          # solve partitions on a process pool
     cp_engine: str = "incremental"    # cpsolver.ENGINES key
+    # requested execution precision.  "auto" compiles whatever the graph
+    # is annotated with; "float32"/"int8" assert the graph matches (a
+    # quantized request must have gone through repro.quant.quantize_graph
+    # — the compiler never quantizes implicitly).  Part of the cache key.
+    precision: str = "auto"
 
     @staticmethod
     def baseline() -> "CompilerOptions":
@@ -136,6 +141,14 @@ def compile_graph(g: Graph, cfg: NPUConfig,
                   cache: bool = True) -> CompileResult:
     opts = opts or CompilerOptions()
     t0 = time.monotonic()
+
+    if opts.precision != "auto":
+        got = graph_precision(g)
+        if got != opts.precision:
+            raise ValueError(
+                f"CompilerOptions(precision={opts.precision!r}) but graph "
+                f"{g.name!r} is annotated {got!r} — run "
+                f"repro.quant.quantize_graph (or cast_graph) first")
 
     key = fp = None
     if cache:

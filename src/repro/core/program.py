@@ -52,6 +52,13 @@ class ComputeJob:
     fmt: str                          # "depth" | "line"
     cycles: int
     macs: int = 0
+    # step range on the tiled axis.  Channel-split steps follow *weight*
+    # chunks and may write only a channel slice of a wider (bank-
+    # granular) output tile, so the range cannot be derived from
+    # out_tiles.  None (legacy) -> derive from out_tiles.
+    r0: Optional[int] = None
+    r1: Optional[int] = None
+    axis: Optional[str] = None
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"Compute({self.op_name}->{self.out_tiles}, {self.fmt})"

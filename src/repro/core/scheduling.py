@@ -69,6 +69,9 @@ class _Step:
     cycles: int
     macs: int
     copy_bytes: int                   # l-copy / format-switch volume
+    r0: int = 0                       # step range on the tiled axis
+    r1: int = 0
+    axis: str = "rows"
 
 
 def _expand_steps(cfg: NPUConfig, g: Graph, plan: FormatPlan,
@@ -115,7 +118,8 @@ def _expand_steps(cfg: NPUConfig, g: Graph, plan: FormatPlan,
                 a, b = in_row_range(op, st.r0, st.r1, ih)
                 cb += math.ceil(x.bytes * max(0, b - a) / max(ih, 1))
         steps.append(_Step(k, op, outs, in_act, in_par, fmt,
-                           jc.cycles, jc.macs, cb))
+                           jc.cycles, jc.macs, cb,
+                           r0=st.r0, r1=st.r1, axis=st.axis))
     return steps
 
 
@@ -175,6 +179,8 @@ def _greedy_schedule(cfg: NPUConfig, g: Graph, steps: List[_Step],
         i = bisect.bisect_left(us, t)
         return us[i] if i < len(us) else 10 ** 9
 
+    import heapq
+
     resident: Dict[Tuple[str, int], TileRef] = {}
     used_banks = 0
     # banks already subtracted from no tile but embargoed until free_tick
@@ -182,6 +188,14 @@ def _greedy_schedule(cfg: NPUConfig, g: Graph, steps: List[_Step],
     decisions: List[_DmaDecision] = []
     death: List[Tuple[Tuple[str, int], int]] = []   # (key, tick) events
     spilled: Dict[Tuple[str, int], int] = {}   # key -> push tick
+    # Belady eviction heap: max-heap on next-use (stored as -next_use).
+    # Entries go stale when a tile is evicted/retired (lazy deletion) or
+    # when time advances past a use.  A stale-small priority would BURY
+    # a far-next-use tile below nearer ones, so a fresh entry is pushed
+    # every time one of a resident tile's uses passes (the only event
+    # that changes next_use); pops then see an accurate maximum, and
+    # leftover stale duplicates are corrected or skipped on pop.
+    evict_heap: List[Tuple[int, Tuple[str, int]]] = []
 
     def avail(at_tick: int) -> int:
         """Free banks usable by an acquisition at `at_tick`."""
@@ -198,20 +212,25 @@ def _greedy_schedule(cfg: NPUConfig, g: Graph, steps: List[_Step],
         `at_tick`.  Tiles used at this very tick (in `needed`) are
         untouchable (Eq. 3); everything else is evictable — dead tiles
         are dropped, live tiles are SPILLED (push now, re-fetch before
-        their next use) in Belady order (farthest next use first)."""
+        their next use) in Belady order (farthest next use first),
+        served from a lazy max-heap keyed on next-use instead of a
+        per-shortfall sort over all residents (O(log n) per pop)."""
         nonlocal used_banks
-        cands = sorted(
-            (tl for key, tl in resident.items()
-             if key not in needed
-             # a tile still being produced at/after `at_tick` cannot be
-             # pushed out yet — its banks are not reclaimable here
-             and produce_tick.get(key, -1) < at_tick),
-            key=lambda tl: -next_use(tl.key, at_tick))
-        for tl in cands:
-            if avail(at_tick) >= want:
-                return
-            key = tl.key
+        skipped: List[Tuple[int, Tuple[str, int]]] = []
+        while evict_heap and avail(at_tick) < want:
+            negnu, key = heapq.heappop(evict_heap)
+            tl = resident.get(key)
+            if tl is None:
+                continue                   # stale: evicted/retired earlier
             nu = next_use(key, at_tick)
+            if -negnu != nu:               # priority aged — fix and retry
+                heapq.heappush(evict_heap, (-nu, key))
+                continue
+            if key in needed or produce_tick.get(key, -1) >= at_tick:
+                # untouchable this call (in use now, or still being
+                # produced) — park the entry and restore it afterwards
+                skipped.append((negnu, key))
+                continue
             needs_later = nu < 10 ** 9
             is_param_or_input = g.tensors[tl.tensor].kind in (
                 "input",) or g.tensors[tl.tensor].is_param
@@ -229,6 +248,8 @@ def _greedy_schedule(cfg: NPUConfig, g: Graph, steps: List[_Step],
             del resident[key]
             used_banks -= tl.banks   # push frees within its tick
             death.append((key, at_tick))
+        for entry in skipped:
+            heapq.heappush(evict_heap, entry)
 
     def make_resident(tl: TileRef, at_tick: int, compute_tick: int,
                       needed: Set[Tuple[str, int]],
@@ -268,6 +289,8 @@ def _greedy_schedule(cfg: NPUConfig, g: Graph, steps: List[_Step],
                 deadline=compute_tick - 1))
         resident[tl.key] = tl
         used_banks += tl.banks
+        heapq.heappush(evict_heap,
+                       (-next_use(tl.key, at_tick), tl.key))
 
     prev_needed: Set[Tuple[str, int]] = set()
     for s in steps:
@@ -297,6 +320,12 @@ def _greedy_schedule(cfg: NPUConfig, g: Graph, steps: List[_Step],
         reap(now)
         for tl in s.out_tiles:
             make_resident(tl, now, now, needed, via=None)
+        # this step consumed its inputs: their next_use advanced — push
+        # refreshed heap entries so far-use tiles keep accurate priority
+        for tl in s.in_act + s.in_par:
+            if tl.key in resident:
+                heapq.heappush(evict_heap,
+                               (-next_use(tl.key, now + 1), tl.key))
         # retire tiles whose last use was this tick (banks free at now+1)
         for key in list(resident):
             if last_use.get(key, produce_tick.get(key, 0)) <= now \
@@ -461,7 +490,7 @@ def schedule(cfg: NPUConfig, g: Graph, plan: FormatPlan,
     for s in steps:
         ticks[s.idx + 1].compute = ComputeJob(
             s.op.name, s.out_tiles, s.in_act + s.in_par, s.fmt,
-            s.cycles, s.macs)
+            s.cycles, s.macs, r0=s.r0, r1=s.r1, axis=s.axis)
     for j in jobs:
         t = min(max(j.tick, 0), T + 1)
         ticks[t].dma.append(DmaJob(j.kind, j.tile, j.nbytes, j.cycles))

@@ -175,7 +175,14 @@ def _param_bytes(g: Graph, op: Op) -> int:
 
 
 def _chan_split(cfg: NPUConfig, g: Graph, op: Op) -> int:
-    """#channel sub-problems for a huge-parameter op (0 = not needed)."""
+    """#channel sub-problems for a huge-parameter op (0 = not needed).
+
+    The compute steps of a channel-split op follow its *weight* chunks
+    (so only one chunk streams through TCM at a time); its output is
+    tiled separately at whole-bank granularity (see _tile_options) and
+    written channel-slice by channel-slice into resident tiles — output
+    co-residency therefore costs the tensor's true footprint, not one
+    bank per weight chunk."""
     pb = _param_bytes(g, op)
     if op.kind in ("conv", "fc") and pb > cfg.tcm_bytes // 4:
         return min(int(math.ceil(pb / (cfg.tcm_bytes / 8))),
@@ -206,7 +213,12 @@ def _tile_options(cfg: NPUConfig, g: Graph, budget_frac: float = 0.5,
         if prod is not None:
             cs = _chan_split(cfg, g, g.op(prod))
             if cs:
-                opts[t.name] = (cs, cs, "chan")
+                # bank-clamped: each output chunk fills >= 1 bank, so a
+                # consumer gathering the whole tensor holds its true
+                # byte footprint, not one bank per weight chunk
+                n_out = max(1, min(cs, math.ceil(t.bytes
+                                                 / cfg.bank_bytes)))
+                opts[t.name] = (n_out, n_out, "chan")
                 continue
         H = t.shape[0] if len(t.shape) == 3 else 1
         if naive:
@@ -553,7 +565,18 @@ def plan_tiling(cfg: NPUConfig, g: Graph, plan: FormatPlan,
             else:
                 for op in region:
                     out0 = g.tensors[op.outputs[0]]
-                    for tl in tiles_now[out0.name].tiles:
+                    otiles = tiles_now[out0.name]
+                    if otiles.axis == "chan" and g.param_inputs(op):
+                        # channel-split op: one step per *weight* chunk
+                        # (weights stream set-by-set, paper §III-B);
+                        # each step writes its channel slice into the
+                        # covering (bank-granular) output tile
+                        wt = g.param_inputs(op)[0]
+                        for tl in tiles_now[wt.name].tiles:
+                            order.append(ComputeStep(op.name, tl.r0,
+                                                     tl.r1, "chan"))
+                        continue
+                    for tl in otiles.tiles:
                         order.append(ComputeStep(op.name, tl.r0, tl.r1,
                                                  tl.axis))
 

@@ -1,0 +1,38 @@
+"""Integer quantization subsystem (int8/int4 PTQ for the NPU compiler).
+
+Workflow:
+
+    g, b = vision.build("mobilenet_v2")
+    calib = quant.calibrate(g, b._weights, samples)      # observe ranges
+    qm = quant.quantize_graph(g, b._weights, calib)      # annotate IR
+    res = compile_graph(qm.graph, cfg)                   # precision-aware
+    execute(res.program, qm.graph, res.tiling, inp,
+            qm.weights_f, semantics=quant.QuantSemantics(qm))
+
+Modules:
+    observers  — min-max / percentile / per-channel range observers
+    qparams    — affine quantize/dequantize + int4 nibble packing
+    ptq        — calibration driver, the PTQ graph pass, integer kernels,
+                 quantized functional reference
+    executor   — QuantSemantics: integer program-replay semantics
+"""
+from repro.core.ir import QParams, graph_precision
+
+from .executor import QuantSemantics
+from .observers import (MinMaxObserver, PerChannelMinMaxObserver,
+                        PercentileObserver, make_observer)
+from .ptq import (QuantizedModel, calibrate, cast_graph,
+                  measure_quant_error, quantize_graph,
+                  quantized_reference_execute)
+from .qparams import (dequantize, pack_int4, qparams_from_range,
+                      qparams_per_channel, quantize, unpack_int4)
+
+__all__ = [
+    "QParams", "QuantizedModel", "QuantSemantics",
+    "MinMaxObserver", "PercentileObserver", "PerChannelMinMaxObserver",
+    "make_observer", "calibrate", "quantize_graph", "cast_graph",
+    "measure_quant_error", "quantized_reference_execute",
+    "graph_precision",
+    "quantize", "dequantize", "qparams_from_range", "qparams_per_channel",
+    "pack_int4", "unpack_int4",
+]

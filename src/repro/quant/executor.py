@@ -1,0 +1,220 @@
+"""Quantized program replay — int8/int4 execution semantics.
+
+Plugs into :func:`repro.core.executor.execute` via the
+:class:`~repro.core.executor.ExecSemantics` hook: the replay loop (DMA
+residency, bank ledger, tile gathers) is unchanged, but DRAM holds the
+*stored integer values* (int8 activations, int8/unpacked-int4 weights,
+int32 biases), each compute step runs the integer kernels of
+:mod:`repro.quant.ptq` on its row/channel window, and model outputs are
+checked two ways:
+
+  * **exactness** against :func:`quantized_reference_execute` — the tile
+    decomposition must reproduce the quantized oracle to within one
+    output quantization step (int accumulation is exact; the float
+    rescale epilogue is elementwise, so a one-step tolerance only covers
+    rounding-boundary flips);
+  * **accuracy** against the float32 oracle — callers compare the
+    dequantized outputs within the *calibrated tolerance*
+    (:meth:`QuantSemantics.float_tolerance`), which is the quantization
+    granularity the chosen qparams imply, not an arbitrary epsilon.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.executor import ExecSemantics, _TcmState, gather_window
+from repro.core.ir import Graph, Op, _apply_act
+from repro.core.tiling import TilingResult, in_row_range
+
+from .ptq import (QuantizedModel, q_avgpool, q_conv, q_fc,
+                  q_global_avgpool, q_maxpool, quantized_reference_execute)
+from .qparams import dequantize, quantize
+
+
+class QuantSemantics(ExecSemantics):
+    """Integer execution semantics for a :class:`QuantizedModel`."""
+
+    name = "int8"
+
+    def __init__(self, qm: QuantizedModel, atol_steps: float = 1.5,
+                 float_atol_steps: float = 4.0):
+        self.qm = qm
+        self.atol_steps = atol_steps          # vs the quantized oracle
+        # vs the float oracle: int4 weights carry 16x the quantization
+        # granularity of int8, so the calibrated band widens accordingly
+        if qm.weight_dtype == "int4":
+            float_atol_steps *= 16.0
+        self.float_atol_steps = float_atol_steps
+        self._qref: Optional[Dict[str, np.ndarray]] = None
+
+    # -- replay hooks -------------------------------------------------------
+    def dram_init(self, g: Graph, inputs, weights) -> Dict[str, np.ndarray]:
+        dram: Dict[str, np.ndarray] = {}
+        for t in g.tensors.values():
+            if t.kind == "input":
+                dram[t.name] = quantize(
+                    np.asarray(inputs[t.name], np.float32), self.qm.qp(t.name))
+            elif t.is_param:
+                dram[t.name] = self.qm.qweights[t.name]
+        return dram
+
+    def run_step(self, g: Graph, tiling: TilingResult, tcm: _TcmState,
+                 op: Op, r0: int, r1: int, axis: str
+                 ) -> Dict[str, np.ndarray]:
+        return _run_qstep(self.qm, g, tiling, tcm, op, r0, r1, axis)
+
+    def reference(self, g: Graph, inputs, weights) -> Dict[str, np.ndarray]:
+        self._qref = quantized_reference_execute(self.qm, inputs)
+        return {t.name: dequantize(self._qref[t.name], self.qm.qp(t.name))
+                for t in g.outputs}
+
+    def decode(self, tensor: str, arr: np.ndarray) -> np.ndarray:
+        return dequantize(arr, self.qm.qp(tensor))
+
+    def tolerance(self, tensor: str, want, atol: float) -> float:
+        return self.atol_steps * self._scale(tensor) + 1e-7
+
+    # -- calibrated tolerance vs the float oracle ---------------------------
+    def _scale(self, tensor: str) -> float:
+        return float(np.max(np.atleast_1d(self.qm.qp(tensor).scale)))
+
+    def float_tolerance(self, tensor: str) -> float:
+        """Accepted |dequantized - float oracle| for one model output.
+
+        Calibrated: 2x the worst error this PTQ exhibited on its own
+        calibration set (measure_quant_error) when available — the
+        honest depth-aware bound — with a floor of a few steps of the
+        output quantization grid (requant rounding)."""
+        floor = self.float_atol_steps * self._scale(tensor) + 1e-6
+        cal = self.qm.calib_error.get(tensor)
+        if cal is not None and cal > 0:
+            return max(floor, 2.0 * cal)
+        return floor
+
+
+# --------------------------------------------------------------------------
+# Per-step integer computation (mirrors core executor._run_step)
+# --------------------------------------------------------------------------
+
+
+def _run_qstep(qm: QuantizedModel, g: Graph, tiling: TilingResult,
+               tcm: _TcmState, op: Op, r0: int, r1: int, axis: str
+               ) -> Dict[str, np.ndarray]:
+    a = op.attrs
+    k = op.kind
+    out0 = g.tensors[op.outputs[0]]
+    H = out0.shape[0] if len(out0.shape) == 3 else 1
+
+    if axis == "chan":
+        c0, c1 = r0, r1
+        rr0, rr1 = 0, H
+    else:
+        c0 = 0
+        c1 = out0.shape[-1]
+        rr0, rr1 = r0, r1
+
+    def rows_of(x, lo, hi):
+        return tcm.gather_rows(tiling, x.name, lo, hi)
+
+    def deq(x, arr):
+        return dequantize(arr, qm.qp(x.name))
+
+    out_qp = qm.qp(op.outputs[0])
+
+    if k in ("conv", "dwconv"):
+        x = g.act_inputs(op)[0]
+        kh = a["k"][0]
+        s = a["stride"]
+        pt, pb, pl, pr = a["pad"]
+        win, top, bot = gather_window(tcm, tiling, x, rr0, rr1, kh, s, pt)
+        w_q = tcm.gather_param(tiling, op.inputs[1], c0, c1)
+        w_qp = qm.qp(op.inputs[1])
+        if w_qp.per_channel and axis == "chan":
+            w_qp = _slice_qp(w_qp, c0, c1)
+        if k == "dwconv" and axis == "chan":
+            win = win[:, :, c0:c1]
+        bias_q = None
+        if len(op.inputs) > 2:
+            bias_q = tcm.gather_param(tiling, op.inputs[2], c0, c1)
+        y = q_conv(win, qm.qp(x.name), w_q, w_qp, bias_q, s,
+                   (top, bot, pl, pr), k == "dwconv",
+                   a.get("act", "none"), out_qp)
+    elif k == "fc":
+        x = g.act_inputs(op)[0]
+        xin = rows_of(x, 0, x.shape[0] if len(x.shape) == 3 else 1)
+        w_q = tcm.gather_param(tiling, op.inputs[1], c0, c1)[:, 0, 0, :]
+        w_qp = qm.qp(op.inputs[1])
+        if w_qp.per_channel and axis == "chan":
+            w_qp = _slice_qp(w_qp, c0, c1)
+        bias_q = None
+        if len(op.inputs) > 2:
+            bias_q = tcm.gather_param(tiling, op.inputs[2], c0, c1)
+        y = q_fc(xin, qm.qp(x.name), w_q, w_qp, bias_q,
+                 a.get("act", "none"), out_qp).reshape(1, 1, -1)
+    elif k == "add":
+        xs = []
+        for x in g.act_inputs(op):
+            ih = x.shape[0] if len(x.shape) == 3 else 1
+            lo, hi = in_row_range(op, rr0, rr1, ih)
+            xs.append(deq(x, rows_of(x, lo, hi)))
+        y = quantize(_apply_act(xs[0] + xs[1], a.get("act", "none")),
+                     out_qp)
+    elif k == "mul":
+        xs = []
+        for x in g.act_inputs(op):
+            ih = x.shape[0] if len(x.shape) == 3 else 1
+            lo, hi = in_row_range(op, rr0, rr1, ih)
+            xs.append(deq(x, rows_of(x, lo, hi)))
+        y = quantize(xs[0] * xs[1], out_qp)
+    elif k == "scalar":
+        x = g.act_inputs(op)[0]
+        xv = deq(x, rows_of(x, rr0, rr1))
+        v = a["value"]
+        y = quantize({"add": xv + v, "mul": xv * v,
+                      "div": xv / v}[a["op"]], out_qp)
+    elif k == "act":
+        x = g.act_inputs(op)[0]
+        y = quantize(_apply_act(deq(x, rows_of(x, rr0, rr1)), a["act"]),
+                     out_qp)
+    elif k in ("maxpool", "avgpool"):
+        x = g.act_inputs(op)[0]
+        ih = x.shape[0]
+        if k == "avgpool" and a["k"] == 0:
+            win = rows_of(x, 0, ih)
+            y = q_global_avgpool(win, qm.qp(x.name), out_qp)
+        else:
+            kk, s = a["k"], a["stride"]
+            pt, pb, pl, pr = a["pad"]
+            win, top, bot = gather_window(tcm, tiling, x, rr0, rr1,
+                                          kk, s, pt)
+            fn = q_maxpool if k == "maxpool" else q_avgpool
+            y = fn(win, kk, s, (top, bot, pl, pr), qm.qp(x.name), out_qp)
+    elif k == "resize":
+        f = a["factor"]
+        lo, hi = rr0 // f, (rr1 + f - 1) // f
+        x = g.act_inputs(op)[0]
+        win = rows_of(x, lo, hi)
+        rep = np.repeat(np.repeat(win, f, axis=0), f, axis=1)
+        rep = rep[rr0 - lo * f: rr1 - lo * f]
+        y = quantize(deq(x, rep), out_qp)
+    elif k == "concat":
+        xs = [deq(x, rows_of(x, rr0, rr1)) for x in g.act_inputs(op)]
+        y = quantize(np.concatenate(xs, axis=2), out_qp)
+    elif k == "split":
+        x = g.act_inputs(op)[0]
+        xin = deq(x, rows_of(x, rr0, rr1))
+        parts = np.split(xin, a["sections"], axis=2)
+        return {o: quantize(p, qm.qp(o))
+                for o, p in zip(op.outputs, parts)}
+    else:  # pragma: no cover
+        raise NotImplementedError(k)
+    return {op.outputs[0]: y}
+
+
+def _slice_qp(qp, c0: int, c1: int):
+    from repro.core.ir import QParams
+    return QParams(np.atleast_1d(qp.scale)[c0:c1],
+                   np.atleast_1d(qp.zero_point)[c0:c1],
+                   bits=qp.bits, axis=qp.axis)

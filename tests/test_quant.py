@@ -1,0 +1,270 @@
+"""Quantization subsystem: PTQ parity with the float oracle, quantized
+program replay vs the quantized functional oracle, qparams round-trip
+through the graph fingerprint / program cache, int4 pack/unpack, and the
+precision-aware cost model."""
+import numpy as np
+import pytest
+
+from repro import quant
+from repro.core import (NEUTRON_2TOPS, CompilerOptions, compile_graph,
+                        graph_precision)
+from repro.core.executor import execute
+from repro.core.ir import GraphBuilder, reference_execute
+from repro.core.npu import compute_job_cost, elem_bytes, mac_rate
+from repro.core.pipeline import program_cache_clear
+
+
+def _tiny_graph(seed: int = 0):
+    b = GraphBuilder("qtiny", seed=seed)
+    x = b.input((16, 16, 8))
+    x = b.conv(x, 16, k=3, act="relu")
+    x = b.dwconv(x, k=3, act="relu6")
+    x = b.maxpool(x, k=2)
+    x = b.conv(x, 24, k=1, act="silu")
+    sk = x
+    x = b.conv(x, 24, k=3, act="relu")
+    x = b.add(x, sk)
+    x = b.global_avgpool(x)
+    x = b.fc(x, 10)
+    b.mark_output(x)
+    return b.build(), b
+
+
+def _samples(g, n=3, seed=0):
+    rng = np.random.default_rng(seed)
+    t = g.inputs[0]
+    return [{t.name: rng.normal(size=t.shape).astype(np.float32)}
+            for _ in range(n)]
+
+
+def _quantized_tiny(weight_dtype="int8", method="minmax"):
+    g, b = _tiny_graph()
+    cal = _samples(g)
+    calib = quant.calibrate(g, b._weights, cal, method=method)
+    qm = quant.quantize_graph(g, b._weights, calib,
+                              weight_dtype=weight_dtype)
+    quant.measure_quant_error(qm, cal)
+    return g, b, qm, cal
+
+
+# --------------------------------------------------------------------------
+# fast smoke: PTQ -> compile -> replay parity (tier-1 sub-minute subset)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_quant_smoke_compile_replay_parity():
+    g, b, qm, cal = _quantized_tiny()
+    assert graph_precision(g) == "int8"
+    res = compile_graph(g, NEUTRON_2TOPS, CompilerOptions(precision="int8"),
+                        cache=False)
+    sem = quant.QuantSemantics(qm)
+    rep = execute(res.program, g, res.tiling, cal[0], qm.weights_f,
+                  semantics=sem)
+    assert rep.ok  # replay matches the quantized oracle (1-step tol)
+    # and the dequantized outputs sit within the calibrated tolerance of
+    # the float oracle
+    ref = reference_execute(g, cal[0], qm.weights_f)
+    for t in g.outputs:
+        err = float(np.max(np.abs(rep.outputs[t.name] - ref[t.name])))
+        assert err <= sem.float_tolerance(t.name), (t.name, err)
+
+
+@pytest.mark.fast
+def test_quant_speedup_on_own_latency_model():
+    g, b, qm, _ = _quantized_tiny()
+    gf, bf = _tiny_graph()
+    q = compile_graph(g, NEUTRON_2TOPS, cache=False)
+    f = compile_graph(gf, NEUTRON_2TOPS, cache=False)
+    assert q.program.latency_ms() < f.program.latency_ms()
+
+
+# --------------------------------------------------------------------------
+# fingerprint / program-cache round trip
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_qparams_round_trip_fingerprint_and_cache():
+    program_cache_clear()
+    gf, bf = _tiny_graph()
+    fp_float = gf.fingerprint()
+    a = compile_graph(gf, NEUTRON_2TOPS)
+    assert not a.cache_hit
+
+    g, b, qm, _ = _quantized_tiny()
+    assert g.fingerprint() != fp_float  # dtype+qparams enter the hash
+    q1 = compile_graph(g, NEUTRON_2TOPS)
+    assert not q1.cache_hit, "quantized graph must MISS the float entry"
+    assert q1.program is not a.program
+
+    g2, b2, qm2, _ = _quantized_tiny()  # identical PTQ -> identical fp
+    assert g2.fingerprint() == g.fingerprint()
+    q2 = compile_graph(g2, NEUTRON_2TOPS)
+    assert q2.cache_hit and q2.program is q1.program
+
+    # different calibration method -> different qparams -> miss
+    g3, b3, qm3, _ = _quantized_tiny(method="percentile")
+    q3 = compile_graph(g3, NEUTRON_2TOPS)
+    assert not q3.cache_hit
+
+
+@pytest.mark.fast
+def test_precision_option_guard():
+    gf, _ = _tiny_graph()
+    with pytest.raises(ValueError):
+        compile_graph(gf, NEUTRON_2TOPS, CompilerOptions(precision="int8"))
+    compile_graph(gf, NEUTRON_2TOPS,
+                  CompilerOptions(precision="float32"), cache=False)
+    g, b, qm, _ = _quantized_tiny()
+    with pytest.raises(ValueError):
+        compile_graph(g, NEUTRON_2TOPS,
+                      CompilerOptions(precision="float32"))
+
+
+# --------------------------------------------------------------------------
+# int4 packing
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_int4_pack_unpack_fixed_vectors():
+    q = np.array([-8, -1, 0, 7, 3, -4, 5], dtype=np.int8)
+    p = quant.pack_int4(q)
+    assert p.dtype == np.uint8 and p.size == 4  # 7 values -> 4 bytes
+    back = quant.unpack_int4(p, q.size)
+    np.testing.assert_array_equal(back, q)
+    with pytest.raises(ValueError):
+        quant.pack_int4(np.array([8], dtype=np.int8))
+
+
+def test_int4_pack_unpack_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @given(data=st.lists(st.integers(-8, 7), min_size=0, max_size=257))
+    @settings(max_examples=50, deadline=None)
+    def roundtrip(data):
+        q = np.array(data, dtype=np.int8)
+        back = quant.unpack_int4(quant.pack_int4(q), q.size)
+        np.testing.assert_array_equal(back, q)
+        assert quant.pack_int4(q).size == (q.size + 1) // 2
+
+    roundtrip()
+
+
+@pytest.mark.fast
+def test_int4_weights_end_to_end():
+    g, b, qm, cal = _quantized_tiny(weight_dtype="int4")
+    for t in g.tensors.values():
+        if t.is_param and len(t.shape) == 4:
+            assert t.dtype == "int4"
+            assert t.bytes == -(-t.elems // 2)  # ceil(elems/2) packed
+    res = compile_graph(g, NEUTRON_2TOPS, cache=False)
+    rep = execute(res.program, g, res.tiling, cal[0], qm.weights_f,
+                  semantics=quant.QuantSemantics(qm))
+    assert rep.ok
+
+
+# --------------------------------------------------------------------------
+# precision-aware cost model
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_cost_model_precision_aware():
+    assert elem_bytes("int8") == 1.0 and elem_bytes("float32") == 4.0
+    assert elem_bytes("int4") == 0.5
+    assert mac_rate("int8") == 1.0 and mac_rate("float32") == 0.5
+
+    gf, _ = _tiny_graph()
+    g, b, qm, _ = _quantized_tiny()
+    cfg = NEUTRON_2TOPS
+    for opf, opq in zip(gf.ops, g.ops):
+        assert opf.kind == opq.kind
+        H = gf.tensors[opf.output].shape[0] \
+            if len(gf.tensors[opf.output].shape) == 3 else 1
+        cf = compute_job_cost(cfg, gf, opf, H, "depth")
+        cq = compute_job_cost(cfg, g, opq, H, "depth")
+        assert cq.cycles <= cf.cycles, opf.kind
+        assert cq.out_bytes <= cf.out_bytes
+        if opf.kind in ("conv", "dwconv", "fc"):
+            # int8 weights cut traffic ~4x (bias stays int32/4B)
+            assert cq.w_bytes <= cf.w_bytes // 2
+
+    # element-size-correct tiles: int8 tensors occupy 4x fewer bytes
+    for name, tf in gf.tensors.items():
+        assert g.tensors[name].bytes * 4 >= tf.bytes
+
+
+# --------------------------------------------------------------------------
+# benchmark vision graphs: quantized-vs-float executor parity
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["mobilenet_v1", "mobilenet_v2"])
+def test_vision_quantized_parity(name):
+    from repro.frontends.vision import build_quantized
+    g, b, qm = build_quantized(name, res_scale=0.25, samples=2)
+    res = compile_graph(g, NEUTRON_2TOPS, CompilerOptions(precision="int8"),
+                        cache=False)
+    rng = np.random.default_rng(7)
+    inp = {g.inputs[0].name: rng.normal(
+        size=g.inputs[0].shape).astype(np.float32)}
+    sem = quant.QuantSemantics(qm)
+    rep = execute(res.program, g, res.tiling, inp, qm.weights_f,
+                  semantics=sem)
+    assert rep.ok
+    ref = reference_execute(g, inp, qm.weights_f)
+    for t in g.outputs:
+        err = float(np.max(np.abs(rep.outputs[t.name] - ref[t.name])))
+        assert err <= sem.float_tolerance(t.name), (t.name, err)
+
+
+def test_vision_quantized_latency_speedup():
+    from repro.frontends.vision import build, build_quantized
+    name = "mobilenet_v2"
+    gf, _ = build(name, res_scale=0.25)
+    f = compile_graph(gf, NEUTRON_2TOPS, cache=False)
+    g, b, qm = build_quantized(name, res_scale=0.25, samples=2)
+    q = compile_graph(g, NEUTRON_2TOPS, cache=False)
+    # the acceptance bar: >= 1.5x on the scheduled-latency model
+    assert f.program.latency_ms() / q.program.latency_ms() >= 1.5
+
+
+# --------------------------------------------------------------------------
+# calibration / observers
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_observers():
+    mm = quant.MinMaxObserver()
+    mm.update(np.array([-1.0, 2.0]))
+    mm.update(np.array([0.5, 3.0]))
+    assert mm.range() == (-1.0, 3.0)
+
+    pc = quant.PercentileObserver(99.0)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=10000)
+    x[0] = 1e6  # outlier must be clipped
+    pc.update(x)
+    lo, hi = pc.range()
+    assert hi < 100.0 and lo < 0 < hi
+
+    ch = quant.PerChannelMinMaxObserver(axis=0)
+    ch.update(np.array([[1.0, -2.0], [3.0, 4.0]]))
+    lo, hi = ch.range()
+    np.testing.assert_array_equal(lo, [-2.0, 3.0])
+    np.testing.assert_array_equal(hi, [1.0, 4.0])
+
+
+@pytest.mark.fast
+def test_quantize_dequantize_roundtrip():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(5, 5, 4)).astype(np.float32)
+    qp = quant.qparams_from_range(float(x.min()), float(x.max()))
+    q = quant.quantize(x, qp)
+    assert q.dtype == np.int8
+    err = np.max(np.abs(quant.dequantize(q, qp) - x))
+    assert err <= float(np.atleast_1d(qp.scale)[0]) * 0.5 + 1e-7
