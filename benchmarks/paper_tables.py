@@ -30,9 +30,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+import repro.api as api
 from repro.core import (ENPU_A, ENPU_B, NEUTRON_2TOPS, CompileResult,
-                        CompilerOptions, compile_graph, cycles_to_ms,
-                        effective_tops)
+                        CompilerOptions, cycles_to_ms, effective_tops)
 from repro.frontends.vision import VISION_MODELS, build, table4_targets
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..",
@@ -59,7 +59,7 @@ def _compile(name: str, res_scale: float, cfg, opts: CompilerOptions
     t0 = time.monotonic()
     # cache=False: these tables *measure* compile time — a program-cache
     # hit on a repeated run would report the lookup, not the compile
-    res = compile_graph(g, cfg, opts, cache=False)
+    res = api.compile(g, cfg, opts, cache=False).result
     return res, time.monotonic() - t0
 
 
@@ -179,14 +179,14 @@ def bench_fig6(model: str = "mobilenet_v2", verbose: bool = True) -> Dict:
     from repro.quant import cast_graph
     g, _ = build(model)
     cast_graph(g)
-    with_f = compile_graph(g, NEUTRON_2TOPS, CompilerOptions())
+    with_f = api.compile(g, NEUTRON_2TOPS, CompilerOptions())
     g2, _ = build(model)
     cast_graph(g2)
     # "without" = the paper's comparison point: naive tile bounds and
     # layer-by-layer order (no fusion), DAE overlap unchanged
-    no_f = compile_graph(g2, NEUTRON_2TOPS,
-                         CompilerOptions(fusion=False, overlap=True,
-                                         naive_tiling=True))
+    no_f = api.compile(g2, NEUTRON_2TOPS,
+                       CompilerOptions(fusion=False, overlap=True,
+                                       naive_tiling=True))
     tl_f = with_f.program.memory_timeline()
     tl_n = no_f.program.memory_timeline()
     sf, sn = with_f.program.stats(), no_f.program.stats()
@@ -237,7 +237,7 @@ def bench_genai(verbose: bool = True) -> Dict:
     g = b.build()
     from repro.quant import cast_graph
     cast_graph(g)                     # int8 GEMMs on both sides (§VI)
-    res = compile_graph(g, NEUTRON_2TOPS, CompilerOptions())
+    res = api.compile(g, NEUTRON_2TOPS, CompilerOptions())
     npu_ms = res.program.stats()["latency_ms"]
     macs = g.total_macs()
     a55_macs_per_s = 4 * 16 * 1.8e9 * 0.6

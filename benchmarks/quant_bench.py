@@ -2,15 +2,15 @@
 
 For each benchmarked vision model this
 
-  * compiles the float32 graph and the int8-PTQ graph (and an int4-weight
-    variant) at the same ``NPUConfig`` and compares scheduled latency
-    (the Eq. 8 objective) — the paper's MAC arrays, TCM and DMA are sized
-    for quantized tensors, so int8 should win well past the 1.5x
-    acceptance bar;
+  * compiles the float32 model and the int8-PTQ model (and an int4-weight
+    variant) through the public ``repro.api`` surface at the same
+    ``NPUConfig`` and compares scheduled latency (the Eq. 8 objective) —
+    the paper's MAC arrays, TCM and DMA are sized for quantized tensors,
+    so int8 should win well past the 1.5x acceptance bar;
   * replays the quantized program on the banked-TCM simulator
-    (``QuantSemantics``) and checks it against the quantized functional
-    oracle (exact to one output quantization step) and the float32
-    oracle (within the calibrated tolerance);
+    (``CompiledModel.verify``) and checks it against the quantized
+    functional oracle (exact to one output quantization step) and the
+    float32 oracle (within the calibrated tolerance);
   * reports accuracy deltas: worst-output error vs the float oracle in
     units of the calibrated tolerance, plus top-1 argmax agreement for
     the classifier heads.
@@ -29,11 +29,10 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+import repro.api as api
 from repro import quant
-from repro.core import NEUTRON_2TOPS, CompilerOptions, compile_graph
-from repro.core.executor import execute
+from repro.core import NEUTRON_2TOPS
 from repro.core.ir import reference_execute
-from repro.frontends.vision import build
 
 MODELS: List[Tuple[str, float]] = [
     ("mobilenet_v1", 0.5),
@@ -53,56 +52,42 @@ def bench_model(name: str, res_scale: float, samples: int = 2,
                 exec_check: bool = True) -> Dict:
     cfg = NEUTRON_2TOPS
 
-    # --- float32 baseline ---
-    g_f, b_f = build(name, res_scale=res_scale)
-    res_f = compile_graph(g_f, cfg, CompilerOptions(precision="float32"),
-                          cache=False)
-    float_ms = res_f.program.latency_ms()
-
-    # --- int8 PTQ (calibrate once; the table is shared with int4) ---
-    g_q, b_q = build(name, res_scale=res_scale)
-    rng_cal = np.random.default_rng(0)
-    cal = [{g_q.inputs[0].name: rng_cal.normal(
-        size=g_q.inputs[0].shape).astype(np.float32)}
-        for _ in range(max(1, samples))]
-    calib = quant.calibrate(g_q, b_q._weights, cal)
-    qm = quant.quantize_graph(g_q, b_q._weights, calib)
-    quant.measure_quant_error(qm, cal)
-    res_q = compile_graph(g_q, cfg, CompilerOptions(precision="int8"),
-                          cache=False)
-    int8_ms = res_q.program.latency_ms()
-
-    # --- int4 weights (same activation qparams, nibble-packed weights;
-    #     tensor names match across build() clones so the calibration
-    #     table is reusable without re-running the float reference) ---
-    g_4, b_4 = build(name, res_scale=res_scale)
-    qm4 = quant.quantize_graph(g_4, b_4._weights, calib,
-                               weight_dtype="int4")
-    res_q4 = compile_graph(g_4, cfg, cache=False)
-    int4_ms = res_q4.program.latency_ms()
+    # float32 baseline / int8 PTQ / int4-weight variant — precision (and
+    # the PTQ flow for the quantized builds) is resolved inside compile;
+    # the int4 variant reuses the int8 run's calibration table (tensor
+    # names match across build() clones), skipping a second float sweep
+    m_f = api.compile(name, cfg, precision="float32",
+                      res_scale=res_scale, cache=False)
+    m_q = api.compile(name, cfg, precision="int8", res_scale=res_scale,
+                      calib_samples=samples, cache=False)
+    m_4 = api.compile(name, cfg, precision="int8", res_scale=res_scale,
+                      calib_samples=samples, weight_dtype="int4",
+                      calibration=m_q.calibration, cache=False)
+    float_ms = m_f.program.latency_ms()
+    int8_ms = m_q.program.latency_ms()
+    int4_ms = m_4.program.latency_ms()
 
     row = {
         "model": name,
         "res_scale": res_scale,
-        "ops": len(g_q.ops),
+        "ops": len(m_q.graph.ops),
         "float_ms": round(float_ms, 5),
         "int8_ms": round(int8_ms, 5),
         "int4w_ms": round(int4_ms, 5),
         "speedup_int8": round(float_ms / int8_ms, 3),
         "speedup_int4w": round(float_ms / int4_ms, 3),
-        "float_ddr_mb": round(res_f.program.ddr_bytes() / 1e6, 3),
-        "int8_ddr_mb": round(res_q.program.ddr_bytes() / 1e6, 3),
+        "float_ddr_mb": round(m_f.program.ddr_bytes() / 1e6, 3),
+        "int8_ddr_mb": round(m_q.program.ddr_bytes() / 1e6, 3),
     }
 
     if exec_check:
         # held-out input: the calibration draws came from rng seed 0,
         # so the accuracy check must not reuse that stream
+        g_q, qm, sem = m_q.graph, m_q.qm, m_q.semantics
         rng = np.random.default_rng(1234)
         inp = {g_q.inputs[0].name: rng.normal(
             size=g_q.inputs[0].shape).astype(np.float32)}
-        sem = quant.QuantSemantics(qm)
-        rep = execute(res_q.program, g_q, res_q.tiling, inp,
-                      qm.weights_f, semantics=sem)
+        rep = m_q.verify(inp)
         row["replay_vs_qoracle_ok"] = bool(rep.ok)
         row["replay_vs_qoracle_err"] = float(rep.max_err)
 

@@ -20,7 +20,26 @@ def main(argv=None):
     ap.add_argument("--skip-tables", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--skip-quant", action="store_true")
+    ap.add_argument("--cache-dir", default=None,
+                    help="enable the on-disk program-cache tier at this "
+                         "directory (CI keys its cache on it; a warm dir "
+                         "turns every repeat compile into an artifact "
+                         "load)")
     args = ap.parse_args(argv)
+
+    if args.cache_dir:
+        from repro.core import program_cache_configure
+        program_cache_configure(disk_dir=args.cache_dir)
+
+    def _cache_summary():
+        if not args.cache_dir:
+            return
+        from repro.core import program_cache_info
+        info = program_cache_info()
+        print(f"[program-cache] disk tier at {info['disk_dir']}: "
+              f"{info['disk_entries']} artifacts, "
+              f"{info['disk_hits']} hits / {info['disk_misses']} misses "
+              f"/ {info['disk_rejects']} rejects this run")
 
     if args.quick:
         import subprocess
@@ -37,6 +56,21 @@ def main(argv=None):
         from . import quant_bench
         rc |= quant_bench.main(["--quick",
                                 "--out", "BENCH_quant_quick.json"])
+        if args.cache_dir:
+            # exercise the disk tier with real programs: cold CI solves
+            # and writes artifacts; a restored cache dir serves them in
+            # milliseconds (the cross-process warm-start path)
+            import time as _time
+            import repro.api as api_mod
+            from repro.core import program_cache_clear
+            program_cache_clear(stats=False)   # force past the LRU tier
+            for name in ("mobilenet_v1", "mobilenet_v2"):
+                t0 = _time.monotonic()
+                m = api_mod.compile(name, res_scale=0.25)
+                print(f"[program-cache] {name}: "
+                      f"tier={m.cache_tier or 'solved'} "
+                      f"{_time.monotonic() - t0:.3f}s")
+        _cache_summary()
         return rc
 
     if not args.skip_tables:
@@ -77,6 +111,7 @@ def main(argv=None):
         print("=" * 72)
         from . import roofline as rf
         rf.main()
+    _cache_summary()
     return rc
 
 

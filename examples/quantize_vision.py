@@ -1,6 +1,7 @@
-"""int8 PTQ end to end: calibrate, quantize, compile, and replay a
-vision model on the simulated Neutron NPU — then compare the scheduled
-latency against the float32 compile of the same graph.
+"""int8 PTQ end to end through the public API: one `repro.api.compile`
+call with ``precision="int8"`` runs calibration + quantization + the
+precision-aware compile internally — then compare the scheduled latency
+against the float32 compile of the same model and validate the replay.
 
     PYTHONPATH=src python examples/quantize_vision.py [model]
 """
@@ -8,42 +9,36 @@ import sys
 
 import numpy as np
 
-from repro import quant
-from repro.core import NEUTRON_2TOPS, CompilerOptions, compile_graph
-from repro.core.executor import execute
-from repro.core.ir import reference_execute
-from repro.frontends.vision import build, build_quantized
+import repro.api as api
 
 model = sys.argv[1] if len(sys.argv) > 1 else "mobilenet_v2"
 
-# float32 baseline
-g_f, b_f = build(model, res_scale=0.5)
-res_f = compile_graph(g_f, NEUTRON_2TOPS,
-                      CompilerOptions(precision="float32"), cache=False)
+# float32 baseline vs int8 (PTQ happens inside compile)
+m_f = api.compile(model, res_scale=0.5, precision="float32", cache=False)
+m_q = api.compile(model, res_scale=0.5, precision="int8",
+                  calib_samples=4, cache=False)
 
-# calibrate + quantize (min-max observers over 4 synthetic samples)
-g, b, qm = build_quantized(model, res_scale=0.5, samples=4)
-res_q = compile_graph(g, NEUTRON_2TOPS,
-                      CompilerOptions(precision="int8"), cache=False)
-
-f_ms, q_ms = res_f.program.latency_ms(), res_q.program.latency_ms()
+f_ms, q_ms = m_f.program.latency_ms(), m_q.program.latency_ms()
 print(f"{model}: float32 {f_ms:.3f} ms -> int8 {q_ms:.3f} ms "
-      f"({f_ms / q_ms:.2f}x) at identical {NEUTRON_2TOPS.name}")
-print(f"DDR traffic: {res_f.program.ddr_bytes()/1e6:.2f} MB -> "
-      f"{res_q.program.ddr_bytes()/1e6:.2f} MB")
+      f"({f_ms / q_ms:.2f}x) at identical {m_f.cfg.name}")
+print(f"DDR traffic: {m_f.program.ddr_bytes()/1e6:.2f} MB -> "
+      f"{m_q.program.ddr_bytes()/1e6:.2f} MB")
 
-# replay the quantized program on the banked-TCM simulator
+# replay the quantized program on the banked-TCM simulator (checked
+# against the quantized functional oracle)
 rng = np.random.default_rng(0)
-inp = {g.inputs[0].name: rng.normal(
-    size=g.inputs[0].shape).astype(np.float32)}
-sem = quant.QuantSemantics(qm)
-rep = execute(res_q.program, g, res_q.tiling, inp, qm.weights_f,
-              semantics=sem)
+inp = rng.normal(size=m_q.graph.inputs[0].shape).astype(np.float32)
+rep = m_q.verify(inp)
 print(f"quantized replay vs quantized oracle: ok={rep.ok} "
       f"(max err {rep.max_err:.2e})")
 
-ref = reference_execute(g, inp, qm.weights_f)
-for t in g.outputs:
+# dequantized outputs sit inside the calibrated tolerance of the float
+# oracle (the honest depth-aware bound, not an arbitrary epsilon)
+from repro.core.ir import reference_execute  # noqa: E402
+
+ref = reference_execute(m_q.graph, {m_q.graph.inputs[0].name: inp},
+                        m_q.qm.weights_f)
+for t in m_q.graph.outputs:
     err = float(np.max(np.abs(rep.outputs[t.name] - ref[t.name])))
     print(f"  {t.name}: |int8 - float32 oracle| = {err:.4f} "
-          f"(calibrated tol {sem.float_tolerance(t.name):.4f})")
+          f"(calibrated tol {m_q.semantics.float_tolerance(t.name):.4f})")

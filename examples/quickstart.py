@@ -1,39 +1,46 @@
-"""Quickstart: compile a vision model for the Neutron NPU and run the
-compiled tile program against the numpy oracle.
+"""Quickstart: compile a vision model for the Neutron NPU through the
+public `repro.api` surface, run it on an image, check it against the
+numpy oracle, and round-trip the deployable artifact.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+import tempfile
+
 import numpy as np
 
-from repro.core import (NEUTRON_2TOPS, CompilerOptions, compile_graph)
-from repro.core.executor import execute
-from repro.frontends.vision import build
+import repro.api as api
+from repro.core import CompilerOptions
 
-# 1. build the model graph (MobileNetV2 at 1/4 resolution for speed)
-graph, builder = build("mobilenet_v2", res_scale=0.25)
-print(f"graph: {graph}")
+# 1. compile a model (MobileNetV2 at 1/4 resolution for speed) — one call
+#    builds the graph and runs the full CP mid-end (formats + fusion +
+#    DAE schedule + allocation)
+model = api.compile("mobilenet_v2", res_scale=0.25)
+print(model.report())
 
-# 2. compile with the full CP mid-end (formats + fusion + DAE schedule)
-result = compile_graph(graph, NEUTRON_2TOPS, CompilerOptions())
-stats = result.stats()
-print(f"compiled in {stats['compile_s']:.2f}s -> "
-      f"{stats['ticks']:.0f} ticks, modeled latency "
-      f"{stats['latency_ms']:.3f} ms, "
-      f"effective {stats['effective_tops']:.2f} TOPS "
-      f"({100*stats['utilization']:.0f}% of peak), "
-      f"DDR traffic {stats['ddr_mb']:.1f} MB")
-
-# 3. run the compiled program functionally and check vs the oracle
-h, w, c = graph.inputs[0].shape
+# 2. the CompiledModel is directly callable (single inputs or batches)
+h, w, c = model.graph.inputs[0].shape
 image = np.random.default_rng(0).normal(size=(h, w, c)).astype(np.float32)
-report = execute(result.program, graph, result.tiling,
-                 {"input": image}, builder._weights)
+logits = model(image)
+batch = model(np.stack([image, image]))
+print(f"\noutput {list(logits)[0]}: single {list(logits.values())[0].shape}"
+      f", batched {list(batch.values())[0].shape}")
+
+# 3. verify the compiled tile program against the numpy oracle
+report = model.verify(image)
 print(f"functional check vs numpy oracle: max|err| = {report.max_err:.2e} "
       f"over {report.ticks} ticks  -> OK")
 
-# 4. compare against the baseline (reference-stack) compiler
-baseline = compile_graph(build("mobilenet_v2", res_scale=0.25)[0],
-                         NEUTRON_2TOPS, CompilerOptions.baseline())
-b = baseline.stats()
-print(f"baseline compiler: {b['latency_ms']:.3f} ms -> "
-      f"CP compiler speedup {b['latency_ms']/stats['latency_ms']:.2f}x")
+# 4. ship it: save the versioned artifact, load it back (no recompile)
+path = os.path.join(tempfile.gettempdir(), "mnv2.rpa")
+model.save(path)
+loaded = api.CompiledModel.load(path)
+same = all(np.array_equal(loaded(image)[k], logits[k]) for k in logits)
+print(f"artifact round trip {path}: outputs bit-exact = {same}")
+
+# 5. compare against the baseline (reference-stack) compiler
+baseline = api.compile("mobilenet_v2", res_scale=0.25,
+                       options=CompilerOptions.baseline(), cache=False)
+print(f"baseline compiler: {baseline.program.latency_ms():.3f} ms -> "
+      f"CP compiler speedup "
+      f"{baseline.program.latency_ms() / model.program.latency_ms():.2f}x")

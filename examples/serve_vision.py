@@ -1,0 +1,63 @@
+"""Multi-model serving demo: a `repro.api.Session` precompiles two
+vision models (one int8, one float32), serves a mixed-traffic request
+stream, and prints per-model request stats plus program-cache tier hit
+rates — including a second "process" (fresh Session + cleared in-memory
+tier) that warm-starts from the on-disk artifact tier instead of
+re-running the CP solver.
+
+    PYTHONPATH=src python examples/serve_vision.py
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+import repro.api as api
+from repro.core import program_cache_clear, program_cache_info
+
+cache_dir = os.path.join(tempfile.gettempdir(), "neutron-programs")
+print(f"two-tier program cache: in-process LRU + disk at {cache_dir}\n")
+
+# ---- fleet startup: precompile both models ------------------------------
+sess = api.Session(cache_dir=cache_dir)
+t0 = time.monotonic()
+sess.add("mobilenet_v2", precision="int8", res_scale=0.25,
+         calib_samples=2, warmup=True)
+sess.add("mobilenet_v1", precision="float32", res_scale=0.25, warmup=True)
+print(f"precompiled 2 models in {time.monotonic() - t0:.1f}s")
+for name in sess.models():
+    print(sess.get(name).report(), "\n")
+
+# ---- mixed-traffic request stream ---------------------------------------
+rng = np.random.default_rng(0)
+traffic = rng.choice(["mobilenet_v2", "mobilenet_v1"], size=24,
+                     p=[0.75, 0.25])
+t0 = time.monotonic()
+for name in traffic:
+    h, w, c = sess.get(name).graph.inputs[0].shape
+    sess.run(name, rng.normal(size=(h, w, c)).astype(np.float32))
+print(f"served {len(traffic)} requests in {time.monotonic() - t0:.1f}s")
+print(sess.report())
+
+# ---- rolling redeploy: re-adding hits the in-process tier ----------------
+sess.add("mobilenet_v2", precision="int8", res_scale=0.25, calib_samples=2)
+sess.add("mobilenet_v1", precision="float32", res_scale=0.25)
+
+# ---- second process: cold in-memory tier, warm disk tier -----------------
+program_cache_clear(stats=False)     # simulate a fresh serving process
+sess2 = api.Session(cache_dir=cache_dir)
+t0 = time.monotonic()
+m = sess2.add("mobilenet_v2", precision="int8", res_scale=0.25,
+              calib_samples=2)
+print(f"\ncold-process compile of mobilenet_v2/int8: "
+      f"{time.monotonic() - t0:.2f}s via cache tier {m.cache_tier!r} "
+      f"(no CP solve)")
+
+info = program_cache_info()
+mem = info["mem_hits"] / max(1, info["mem_hits"] + info["mem_misses"])
+dsk = info["disk_hits"] / max(1, info["disk_hits"] + info["disk_misses"])
+print(f"\nprogram-cache tiers: memory {info['mem_hits']} hits "
+      f"({100 * mem:.0f}%), disk {info['disk_hits']} hits "
+      f"({100 * dsk:.0f}%), {info['disk_entries']} artifacts on disk")
+print(sess2.report())

@@ -1,0 +1,258 @@
+"""The deployable unit of the ``repro.api`` surface.
+
+A :class:`CompiledModel` is what the paper ships to devices: one
+workload, compiled once, bundled with everything needed to execute it —
+the timed :class:`~repro.core.program.NPUProgram`, the tiling, the bank
+allocation, the (integer or float) weights, and the resolved execution
+semantics.  It is directly callable on single or batched inputs,
+reports its own statistics, and round-trips through the versioned
+on-disk artifact format of :mod:`repro.api.artifact`:
+
+    model = repro.api.compile("mobilenet_v2", precision="int8")
+    logits = model(image)                   # single (H, W, C) input
+    batch = model(images)                   # (B, H, W, C) batch
+    model.save("mnv2.rpa")
+    model = CompiledModel.load("mnv2.rpa")  # no recompilation
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Union
+
+import numpy as np
+
+from repro.core.executor import (ExecSemantics, ExecutionReport,
+                                 FLOAT_SEMANTICS, execute)
+from repro.core.ir import Graph, graph_precision
+from repro.core.npu import NPUConfig
+from repro.core.pipeline import CompileResult, CompilerOptions
+
+from . import artifact as _artifact
+
+Inputs = Union[np.ndarray, Dict[str, np.ndarray]]
+
+
+def resolve_semantics(graph: Graph, qm=None,
+                      sem_meta: Optional[dict] = None
+                      ) -> Optional[ExecSemantics]:
+    """Execution semantics implied by a graph's precision annotation
+    (plus, for quantized graphs, the integer-weight bundle and any
+    persisted semantics metadata).  A dtype-cast graph with no qparams
+    anywhere (``repro.quant.cast_graph`` — the cost-model-only
+    annotation) has *no* executable semantics and resolves to None."""
+    if graph_precision(graph) == "float32":
+        return FLOAT_SEMANTICS
+    if qm is None:
+        if not any(t.qparams is not None for t in graph.tensors.values()):
+            return None               # cast-only: latency model, no replay
+        raise ValueError(
+            f"graph {graph.name!r} is quantized but no QuantizedModel "
+            f"bundle was provided")
+    from repro.quant import QuantSemantics
+    if sem_meta:
+        return QuantSemantics.from_meta(qm, sem_meta)
+    return QuantSemantics(qm)
+
+
+@dataclass
+class CompiledModel:
+    """A compiled, executable, persistable NPU workload."""
+
+    name: str
+    graph: Graph
+    cfg: NPUConfig
+    options: CompilerOptions
+    result: CompileResult
+    weights: Dict[str, np.ndarray]           # float execution weights
+    semantics: ExecSemantics = field(default=FLOAT_SEMANTICS, repr=False)
+    qm: Optional[object] = field(default=None, repr=False)  # QuantizedModel
+    source: str = "compile"                  # "compile" | "cache" | path
+    #: the quant.CalibrationTable a PTQ-inside compile derived (reusable
+    #: via api.compile(..., calibration=...); not persisted in artifacts)
+    calibration: Optional[dict] = field(default=None, repr=False)
+
+    # -- structure ----------------------------------------------------------
+    @property
+    def program(self):
+        return self.result.program
+
+    @property
+    def tiling(self):
+        return self.result.tiling
+
+    @property
+    def allocation(self):
+        return self.result.allocation
+
+    @property
+    def plan(self):
+        return self.result.plan
+
+    @property
+    def precision(self) -> str:
+        if self.semantics is None:    # dtype-cast, cost-model-only
+            return graph_precision(self.graph)
+        return self.semantics.name
+
+    @property
+    def fingerprint(self) -> str:
+        return self.result.cache_key or self.graph.fingerprint()
+
+    @property
+    def compile_s(self) -> float:
+        return self.result.compile_s
+
+    @property
+    def cache_tier(self) -> Optional[str]:
+        return self.result.cache_tier
+
+    # -- execution ----------------------------------------------------------
+    def _normalize(self, inputs: Inputs) -> Dict[str, np.ndarray]:
+        if isinstance(inputs, np.ndarray):
+            ins = self.graph.inputs
+            if len(ins) != 1:
+                raise ValueError(
+                    f"{self.name}: graph has {len(ins)} inputs — pass a "
+                    f"dict of name -> array")
+            return {ins[0].name: inputs}
+        return dict(inputs)
+
+    def _batch_size(self, feed: Dict[str, np.ndarray]) -> Optional[int]:
+        sizes = set()
+        for t in self.graph.inputs:
+            arr = np.asarray(feed[t.name])
+            if arr.ndim == len(t.shape) + 1 and arr.shape[1:] == t.shape:
+                sizes.add(arr.shape[0])
+            elif arr.shape != t.shape:
+                raise ValueError(
+                    f"{self.name}: input {t.name} has shape {arr.shape}, "
+                    f"expected {t.shape} or (B, *{t.shape})")
+        if len(sizes) > 1:
+            raise ValueError(f"{self.name}: inconsistent batch sizes "
+                             f"{sorted(sizes)}")
+        return sizes.pop() if sizes else None
+
+    def _run_one(self, feed: Dict[str, np.ndarray],
+                 check: bool) -> Dict[str, np.ndarray]:
+        if self.semantics is None:
+            raise RuntimeError(
+                f"{self.name}: compiled from a dtype-cast graph "
+                f"(cost-model-only) — no executable semantics")
+        rep = execute(self.program, self.graph, self.tiling, feed,
+                      self.weights, check=check,
+                      semantics=self.semantics)
+        if check:
+            return rep.outputs       # already decoded + oracle-verified
+        return {name: self.semantics.decode(name, arr)
+                for name, arr in rep.outputs.items()}
+
+    def __call__(self, inputs: Inputs,
+                 check: bool = False) -> Dict[str, np.ndarray]:
+        """Run the compiled program.  ``inputs`` is one array (single-
+        input graphs), a dict of name -> array, or either with a leading
+        batch axis — batched calls run the batch-1 program per sample
+        (edge inference is batch-1 by construction, paper §IV) and stack
+        the outputs.  ``check=True`` additionally verifies every output
+        against the functional oracle."""
+        feed = self._normalize(inputs)
+        batch = self._batch_size(feed)
+        if batch is None:
+            return self._run_one(feed, check)
+        outs: Dict[str, list] = {}
+        for i in range(batch):
+            sample = {}
+            for t in self.graph.inputs:
+                arr = np.asarray(feed[t.name])
+                sample[t.name] = arr[i] if arr.ndim == len(t.shape) + 1 \
+                    else arr
+            res = self._run_one(sample, check)
+            for name, val in res.items():
+                outs.setdefault(name, []).append(val)
+        return {name: np.stack(vals) for name, vals in outs.items()}
+
+    def verify(self, inputs: Inputs) -> ExecutionReport:
+        """Checked single-sample replay vs the functional oracle."""
+        feed = self._normalize(inputs)
+        if self._batch_size(feed) is not None:
+            raise ValueError("verify() takes a single (unbatched) sample")
+        return execute(self.program, self.graph, self.tiling, feed,
+                       self.weights, check=True, semantics=self.semantics)
+
+    # -- reporting ----------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        s = self.result.stats()
+        s["precision"] = self.precision
+        s["fingerprint"] = self.fingerprint
+        return s
+
+    def report(self) -> str:
+        s = self.program.stats()
+        lines = [
+            f"CompiledModel {self.name!r}  [{self.precision}]",
+            f"  config       {self.cfg.name}  "
+            f"({self.cfg.peak_tops:.1f} peak TOPS, "
+            f"{self.cfg.tcm_bytes // 1024} KiB TCM / "
+            f"{self.cfg.tcm_banks} banks)",
+            f"  fingerprint  {self.fingerprint[:16]}…",
+            f"  source       {self.source}"
+            + (f" (cache tier: {self.cache_tier})" if self.cache_tier
+               else ""),
+            f"  compile      {self.result.compile_s * 1e3:.1f} ms",
+            f"  program      {s['ticks']:.0f} ticks, "
+            f"{s['gmacs']:.2f} GMACs, {s['ddr_mb']:.2f} MB DDR",
+            f"  latency      {s['latency_ms']:.3f} ms modeled "
+            f"({s['effective_tops']:.2f} effective TOPS, "
+            f"{100 * s['utilization']:.0f}% of peak)",
+        ]
+        return "\n".join(lines)
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str) -> str:
+        """Write the versioned on-disk artifact (everything needed to
+        :meth:`load` and execute in another process, no recompile)."""
+        if self.semantics is None:
+            raise RuntimeError(
+                f"{self.name}: cost-model-only models (dtype-cast "
+                f"graphs) are not persistable deployment artifacts")
+        quant_meta = None
+        qweights = packed = None
+        calib_error = None
+        if self.qm is not None:
+            quant_meta = self.semantics.meta() \
+                if hasattr(self.semantics, "meta") else None
+            qweights = self.qm.qweights
+            packed = self.qm.packed
+            calib_error = self.qm.calib_error
+        _artifact.save_model(
+            path, name=self.name, graph=self.graph, cfg=self.cfg,
+            options=self.options, result=self.result,
+            weights=self.weights, precision=self.precision,
+            quant_meta=quant_meta, qweights=qweights, packed=packed,
+            calib_error=calib_error)
+        return path
+
+    @classmethod
+    def load(cls, path: str, *,
+             expect_graph: Optional[Graph] = None,
+             expect_cfg: Optional[NPUConfig] = None,
+             expect_options: Optional[CompilerOptions] = None
+             ) -> "CompiledModel":
+        """Load an artifact written by :meth:`save`.  Integrity and
+        staleness are validated (see :mod:`repro.api.artifact`); a bad
+        artifact raises :class:`repro.core.serialize.ArtifactError`."""
+        (model_p, graph, cfg, options, result, weights, qweights,
+         packed) = _artifact.load_model(
+            path, expect_graph=expect_graph, expect_cfg=expect_cfg,
+            expect_options=expect_options)
+        qm = None
+        sem_meta = model_p.get("quant")
+        if model_p["precision"] != "float32":
+            from repro.quant import QuantizedModel
+            qm = QuantizedModel(
+                graph, qweights, packed, weights,
+                weight_dtype=(sem_meta or {}).get("weight_dtype", "int8"),
+                calib_error={k: float(v) for k, v in
+                             (model_p.get("calib_error") or {}).items()})
+        sem = resolve_semantics(graph, qm, sem_meta)
+        return cls(model_p["name"], graph, cfg, options, result, weights,
+                   semantics=sem, qm=qm, source=path)

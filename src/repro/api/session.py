@@ -1,0 +1,153 @@
+"""Multi-model serving session on top of the two-tier program cache.
+
+A :class:`Session` is the fleet-facing object: a registry of
+:class:`~repro.api.compiled.CompiledModel` instances (each with its own
+precision) behind one hardware config, one options baseline and one
+two-tier (in-process LRU + on-disk artifact) compiled-program cache.
+Typical serving flow:
+
+    sess = Session(cache_dir="/var/cache/neutron")
+    sess.add("mobilenet_v2", precision="int8")       # precompile
+    sess.add("yolov8n_det")                          # float32 fallback
+    out = sess.run("mobilenet_v2", image)            # request path
+    print(sess.stats())                              # tier hit rates
+
+Every compile inside the session flows through
+:func:`repro.core.pipeline.compile_graph`'s two-tier store, so a second
+process with the same ``cache_dir`` warm-starts from disk instead of
+re-running the CP solver.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, Optional
+
+from repro.core.npu import NEUTRON_2TOPS, NPUConfig
+from repro.core.pipeline import (CompilerOptions, program_cache_configure,
+                                 program_cache_info)
+
+from .compiled import CompiledModel, Inputs
+
+
+class Session:
+    """Multi-model registry + per-model serving statistics."""
+
+    def __init__(self, config: Optional[NPUConfig] = None,
+                 options: Optional[CompilerOptions] = None,
+                 cache_dir: Optional[str] = None,
+                 max_entries: Optional[int] = None,
+                 max_bytes: Optional[int] = None):
+        self.cfg = config or NEUTRON_2TOPS
+        self.options = options
+        # only forward knobs the caller actually set — the store is
+        # process-wide and an omitted knob must not reset prior config
+        if cache_dir is not None:
+            program_cache_configure(disk_dir=cache_dir)
+        if max_entries is not None:
+            program_cache_configure(max_entries=max_entries)
+        if max_bytes is not None:
+            program_cache_configure(max_bytes=max_bytes)
+        self._models: Dict[str, CompiledModel] = {}
+        self._stats: Dict[str, dict] = {}
+
+    # -- registry -----------------------------------------------------------
+    def add(self, source, name: Optional[str] = None,
+            precision: str = "auto",
+            options: Optional[CompilerOptions] = None,
+            warmup: bool = False, **kw) -> CompiledModel:
+        """Compile (or fetch from the program cache) and register one
+        model.  ``precision`` selects the per-model execution precision
+        ("auto" / "float32" / "int8"); ``warmup=True`` runs one zero
+        input through the program so first-request latency excludes the
+        replay's lazy setup."""
+        from . import compile as api_compile
+        model = api_compile(source, self.cfg,
+                            options if options is not None else self.options,
+                            precision=precision, **kw)
+        name = name or model.name
+        self._models[name] = model
+        st = self._stats.setdefault(name, {
+            "requests": 0, "run_s": 0.0,
+            "compiles": {"solved": 0, "memory": 0, "disk": 0,
+                         "artifact": 0},
+        })
+        st["precision"] = model.precision
+        st["compile_s"] = model.compile_s
+        st["latency_ms"] = model.program.latency_ms()
+        st["compiles"][model.cache_tier or "solved"] += 1
+        if warmup:
+            self.warmup(name)
+        return model
+
+    def load(self, path: str, name: Optional[str] = None) -> CompiledModel:
+        """Register a model from an on-disk artifact (no compilation)."""
+        model = CompiledModel.load(path)
+        name = name or model.name
+        self._models[name] = model
+        st = self._stats.setdefault(name, {
+            "requests": 0, "run_s": 0.0,
+            "compiles": {"solved": 0, "memory": 0, "disk": 0,
+                         "artifact": 0},
+        })
+        st["precision"] = model.precision
+        st["compile_s"] = 0.0
+        st["latency_ms"] = model.program.latency_ms()
+        st["compiles"]["artifact"] += 1
+        return model
+
+    def warmup(self, name: Optional[str] = None) -> None:
+        """Run one all-zeros input through the named model (or all)."""
+        import numpy as np
+        names = [name] if name else list(self._models)
+        for n in names:
+            m = self._models[n]
+            m({t.name: np.zeros(t.shape, dtype=np.float32)
+               for t in m.graph.inputs})
+
+    def get(self, name: str) -> CompiledModel:
+        return self._models[name]
+
+    __getitem__ = get
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._models
+
+    def models(self):
+        return list(self._models)
+
+    # -- request path -------------------------------------------------------
+    def run(self, name: str, inputs: Inputs, check: bool = False):
+        try:
+            model = self._models[name]
+        except KeyError:
+            raise KeyError(
+                f"model {name!r} not registered "
+                f"(have: {sorted(self._models)})") from None
+        t0 = time.monotonic()
+        out = model(inputs, check=check)
+        st = self._stats[name]
+        st["requests"] += 1
+        st["run_s"] += time.monotonic() - t0
+        return out
+
+    # -- reporting ----------------------------------------------------------
+    def stats(self) -> dict:
+        return {"models": {n: dict(s) for n, s in self._stats.items()},
+                "program_cache": program_cache_info()}
+
+    def report(self) -> str:
+        cache = program_cache_info()
+        lines = [f"Session: {len(self._models)} model(s), "
+                 f"cache {cache['entries']} entries in memory"
+                 + (f", disk tier at {cache['disk_dir']}"
+                    if cache["disk_dir"] else ", no disk tier")]
+        for n, st in self._stats.items():
+            tiers = st["compiles"]
+            lines.append(
+                f"  {n:<24} [{st['precision']:>7}]  "
+                f"{st['requests']:>5} reqs  "
+                f"modeled {st['latency_ms']:.3f} ms  "
+                f"compiles solved/mem/disk/artifact = "
+                f"{tiers['solved']}/{tiers['memory']}/{tiers['disk']}"
+                f"/{tiers['artifact']}")
+        return "\n".join(lines)

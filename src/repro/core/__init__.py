@@ -16,8 +16,10 @@ from .ir import (Graph, GraphBuilder, Op, QParams, Tensor, graph_precision,
 from .npu import (ENPU_A, ENPU_B, NEUTRON_2TOPS, NPUConfig, compute_job_cost,
                   cycles_to_ms, dma_cost, effective_tops)
 from .pipeline import (CompileResult, CompilerOptions, compile_graph,
-                       program_cache_clear, program_cache_info)
+                       program_cache_clear, program_cache_configure,
+                       program_cache_info)
 from .program import NPUProgram
+from .serialize import ArtifactError
 
 __all__ = [
     "Graph", "GraphBuilder", "Op", "QParams", "Tensor", "graph_precision",
@@ -25,5 +27,6 @@ __all__ = [
     "NPUConfig", "NEUTRON_2TOPS", "ENPU_A", "ENPU_B",
     "compute_job_cost", "dma_cost", "cycles_to_ms", "effective_tops",
     "CompileResult", "CompilerOptions", "compile_graph", "NPUProgram",
-    "program_cache_clear", "program_cache_info",
+    "program_cache_clear", "program_cache_configure", "program_cache_info",
+    "ArtifactError",
 ]

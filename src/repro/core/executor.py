@@ -51,21 +51,37 @@ class _TcmState:
     Tile lists are produced in ascending [r0, r1) order by the tiler, so
     the tiles covering a row/channel range form a contiguous slice found
     by bisection on cached boundary arrays — the replay's hottest path no
-    longer scans every tile of a tensor per gather."""
+    longer scans every tile of a tensor per gather.
+
+    Consecutive steps of the same op request heavily overlapping input
+    row windows (stride < kernel height), so assembled windows are
+    cached per tensor: a request fully inside the last window is a pure
+    slice (no concat), and a request extending it assembles only the new
+    rows.  The cache is versioned — any ``put``/``drop`` touching a
+    tensor invalidates its window — and residency of the covering tiles
+    is still asserted on every gather, so the validator's Eq.-2 check is
+    as strict as the uncached path."""
 
     def __init__(self, g: Graph):
         self.g = g
         self.data: Dict[Tuple[str, int], np.ndarray] = {}
         self.resident: set = set()
         self._bounds: Dict[str, Tuple[List[int], List[int]]] = {}
+        #: tensor -> (version, lo, hi, assembled rows [lo, hi))
+        self._win: Dict[str, Tuple[int, int, int, np.ndarray]] = {}
+        self._ver: Dict[str, int] = {}
 
     def put(self, tl: TileRef, arr: np.ndarray) -> None:
         self.data[tl.key] = arr
         self.resident.add(tl.key)
+        self._ver[tl.tensor] = self._ver.get(tl.tensor, 0) + 1
+        self._win.pop(tl.tensor, None)
 
     def drop(self, key: Tuple[str, int]) -> None:
         self.resident.discard(key)
         self.data.pop(key, None)
+        self._ver[key[0]] = self._ver.get(key[0], 0) + 1
+        self._win.pop(key[0], None)
 
     def _covering(self, tt, a: int, b: int) -> List[TileRef]:
         """Tiles (ascending) overlapping [a, b) on the tiled axis."""
@@ -78,25 +94,11 @@ class _TcmState:
         i1 = bisect.bisect_left(starts, b)
         return tt.tiles[i0:i1]
 
-    def gather_rows(self, tiling: TilingResult, tensor: str,
-                    a: int, b: int) -> np.ndarray:
-        """Assemble rows [a, b) of `tensor` from resident tiles."""
-        tt = tiling.tiles[tensor]
-        shape = self.g.tensors[tensor].shape
-        if tt.axis == "chan":
-            parts = []
-            for tl in tt.tiles:
-                if tl.key not in self.resident:
-                    raise ExecutionError(f"{tl} not resident")
-                parts.append(self.data[tl.key])
-            full = np.concatenate(parts, axis=-1) if len(parts) > 1 \
-                else parts[0]
-            return full[a:b] if len(shape) == 3 else full
+    def _assemble(self, tt, tensor: str, a: int, b: int) -> np.ndarray:
+        """Concatenate rows [a, b) from resident tiles (uncached path)."""
         parts = []
         covered = a
         for tl in self._covering(tt, a, b):
-            if tl.key not in self.resident:
-                raise ExecutionError(f"{tl} not resident")
             arr = self.data[tl.key]
             lo = max(a, tl.r0)
             hi = min(b, tl.r1)
@@ -109,6 +111,47 @@ class _TcmState:
             raise ExecutionError(
                 f"rows {covered}:{b} of {tensor} missing from TCM")
         return np.concatenate(parts, axis=0) if len(parts) > 1 else parts[0]
+
+    def gather_rows(self, tiling: TilingResult, tensor: str,
+                    a: int, b: int) -> np.ndarray:
+        """Assemble rows [a, b) of `tensor` from resident tiles."""
+        tt = tiling.tiles[tensor]
+        shape = self.g.tensors[tensor].shape
+        if tt.axis == "chan":
+            for tl in tt.tiles:
+                if tl.key not in self.resident:
+                    raise ExecutionError(f"{tl} not resident")
+            ver = self._ver.get(tensor, 0)
+            cached = self._win.get(tensor)
+            if cached is not None and cached[0] == ver:
+                full = cached[3]
+            else:
+                parts = [self.data[tl.key] for tl in tt.tiles]
+                full = np.concatenate(parts, axis=-1) if len(parts) > 1 \
+                    else parts[0]
+                H = shape[0] if len(shape) == 3 else 1
+                self._win[tensor] = (ver, 0, H, full)
+            return full[a:b] if len(shape) == 3 else full
+        # residency is asserted against the *current* tile set even when
+        # the window data comes from the cache
+        for tl in self._covering(tt, a, b):
+            if tl.key not in self.resident:
+                raise ExecutionError(f"{tl} not resident")
+        ver = self._ver.get(tensor, 0)
+        cached = self._win.get(tensor)
+        if cached is not None and cached[0] == ver:
+            _, lo, hi, arr = cached
+            if lo <= a and b <= hi:
+                return arr[a - lo: b - lo]
+            if lo <= a < hi < b:
+                # forward extension: assemble only the new rows
+                ext = self._assemble(tt, tensor, hi, b)
+                arr = np.concatenate([arr[a - lo:], ext], axis=0)
+                self._win[tensor] = (ver, a, b, arr)
+                return arr
+        arr = self._assemble(tt, tensor, a, b)
+        self._win[tensor] = (ver, a, b, arr)
+        return arr
 
     def gather_param(self, tiling: TilingResult, tensor: str,
                      c0: int, c1: int) -> np.ndarray:

@@ -21,16 +21,28 @@ hash, ``NPUConfig``, compile options), so a cache hit returns the
 previously compiled ``NPUProgram`` without re-running any pass, and any
 change to the graph topology, hardware config or options misses.
 Programs are treated as immutable once allocated.
+
+The cache is **two-tier**: a bounded in-process LRU (configurable entry
+and byte caps) in front of an optional on-disk artifact directory
+(``program_cache_configure(disk_dir=...)`` or the
+``REPRO_PROGRAM_CACHE_DIR`` environment variable).  Disk entries are the
+versioned, checksummed artifacts of :mod:`repro.core.serialize`, keyed
+by a digest of the same (fingerprint, config, options) triple — a
+serving fleet process that misses in memory loads the program from disk
+instead of re-running the CP solver, and a corrupted or stale artifact
+is rejected (and recompiled), never silently replayed.
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import threading
 import time
 from collections import OrderedDict
 from dataclasses import dataclass, field, fields, replace
 from typing import Dict, Optional, Tuple
 
-from . import cpsolver
+from . import cpsolver, serialize
 from .allocation import Allocation, AllocationError, allocate
 from .formats import FORMATS, FormatPlan, select_formats
 from .ir import Graph, graph_precision
@@ -93,6 +105,7 @@ class CompileResult:
     phase_s: Dict[str, float] = field(default_factory=dict)
     cache_hit: bool = False
     cache_key: Optional[str] = None
+    cache_tier: Optional[str] = None     # "memory" | "disk" | None (solved)
 
     def stats(self) -> Dict[str, float]:
         s = self.program.stats()
@@ -102,38 +115,193 @@ class CompileResult:
 
 
 # --------------------------------------------------------------------------
-# Compiled-program cache
+# Compiled-program cache (two tiers: in-process LRU + on-disk artifacts)
 # --------------------------------------------------------------------------
 
 _CACHE_LOCK = threading.Lock()
-_PROGRAM_CACHE: "OrderedDict[Tuple, CompileResult]" = OrderedDict()
-_PROGRAM_CACHE_MAX = 64
+#: key -> (result, estimated resident bytes)
+_PROGRAM_CACHE: "OrderedDict[Tuple, Tuple[CompileResult, int]]" = \
+    OrderedDict()
+_CACHE_MAX_ENTRIES = 64
+_CACHE_MAX_BYTES: Optional[int] = None
+_CACHE_BYTES = 0
+_CACHE_DISK_DIR: Optional[str] = \
+    os.environ.get("REPRO_PROGRAM_CACHE_DIR") or None
+
+_STATS_ZERO = {"mem_hits": 0, "mem_misses": 0, "mem_evictions": 0,
+               "disk_hits": 0, "disk_misses": 0, "disk_writes": 0,
+               "disk_rejects": 0}
+_CACHE_STATS = dict(_STATS_ZERO)
+
+_UNSET = object()
 
 
-def program_cache_clear() -> None:
+def _estimate_result_bytes(res: CompileResult) -> int:
+    """Cheap structural estimate of a cached entry's resident footprint
+    (Python object overhead dominates; tile data lives in DRAM/TCM at
+    run time, not in the program)."""
+    n_jobs = sum(1 + len(t.dma) + len(t.v2p) for t in res.program.ticks)
+    n_tiles = sum(len(tt.tiles) for tt in res.tiling.tiles.values())
+    return 400 * n_jobs + 200 * (n_tiles + len(res.tiling.order)) + 4096
+
+
+def program_cache_configure(max_entries: Optional[int] = None,
+                            max_bytes=_UNSET, disk_dir=_UNSET) -> None:
+    """Reconfigure the two-tier store.  ``max_entries``/``max_bytes``
+    bound the in-process LRU (None byte cap = unbounded bytes);
+    ``disk_dir`` enables (a path) or disables (None) the disk tier."""
+    global _CACHE_MAX_ENTRIES, _CACHE_MAX_BYTES, _CACHE_DISK_DIR
+    with _CACHE_LOCK:
+        if max_entries is not None:
+            _CACHE_MAX_ENTRIES = int(max_entries)
+        if max_bytes is not _UNSET:
+            _CACHE_MAX_BYTES = None if max_bytes is None else int(max_bytes)
+        if disk_dir is not _UNSET:
+            _CACHE_DISK_DIR = disk_dir
+        _evict_locked()
+
+
+def program_cache_clear(stats: bool = True) -> None:
+    """Drop every in-memory entry (the disk tier is persistent by design;
+    remove its directory to clear it).  ``stats=True`` also zeroes the
+    hit/miss/evict counters."""
+    global _CACHE_BYTES
     with _CACHE_LOCK:
         _PROGRAM_CACHE.clear()
+        _CACHE_BYTES = 0
+        if stats:
+            _CACHE_STATS.update(_STATS_ZERO)
 
 
 def program_cache_info() -> Dict[str, int]:
     with _CACHE_LOCK:
-        return {"entries": len(_PROGRAM_CACHE), "max": _PROGRAM_CACHE_MAX}
+        info = {"entries": len(_PROGRAM_CACHE), "max": _CACHE_MAX_ENTRIES,
+                "max_entries": _CACHE_MAX_ENTRIES,
+                "bytes": _CACHE_BYTES, "max_bytes": _CACHE_MAX_BYTES,
+                "disk_dir": _CACHE_DISK_DIR}
+        info.update(_CACHE_STATS)
+    disk_dir = info["disk_dir"]
+    if disk_dir and os.path.isdir(disk_dir):
+        info["disk_entries"] = sum(
+            1 for f in os.listdir(disk_dir) if f.endswith(".rpa"))
+    else:
+        info["disk_entries"] = 0
+    return info
+
+
+def _evict_locked() -> None:
+    global _CACHE_BYTES
+    while _PROGRAM_CACHE and (
+            len(_PROGRAM_CACHE) > _CACHE_MAX_ENTRIES or
+            (_CACHE_MAX_BYTES is not None and
+             _CACHE_BYTES > _CACHE_MAX_BYTES)):
+        _, (_, nb) = _PROGRAM_CACHE.popitem(last=False)
+        _CACHE_BYTES -= nb
+        _CACHE_STATS["mem_evictions"] += 1
 
 
 def _cache_get(key: Tuple) -> Optional[CompileResult]:
     with _CACHE_LOCK:
-        res = _PROGRAM_CACHE.get(key)
-        if res is not None:
+        entry = _PROGRAM_CACHE.get(key)
+        if entry is not None:
             _PROGRAM_CACHE.move_to_end(key)
-        return res
+            _CACHE_STATS["mem_hits"] += 1
+            return entry[0]
+        _CACHE_STATS["mem_misses"] += 1
+        return None
 
 
 def _cache_put(key: Tuple, res: CompileResult) -> None:
+    global _CACHE_BYTES
+    nb = _estimate_result_bytes(res)
     with _CACHE_LOCK:
-        _PROGRAM_CACHE[key] = res
-        _PROGRAM_CACHE.move_to_end(key)
-        while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_MAX:
-            _PROGRAM_CACHE.popitem(last=False)
+        old = _PROGRAM_CACHE.pop(key, None)
+        if old is not None:
+            _CACHE_BYTES -= old[1]
+        _PROGRAM_CACHE[key] = (res, nb)
+        _CACHE_BYTES += nb
+        _evict_locked()
+
+
+# ---- disk tier -----------------------------------------------------------
+# The disk directory is snapshotted once per compile (under the lock)
+# and passed down, so a concurrent program_cache_configure(disk_dir=...)
+# cannot yank the global out from under an in-flight compile; counter
+# updates take the lock like the memory tier's.
+
+
+def _bump(counter: str, n: int = 1) -> None:
+    with _CACHE_LOCK:
+        _CACHE_STATS[counter] += n
+
+
+def _disk_dir_snapshot() -> Optional[str]:
+    with _CACHE_LOCK:
+        return _CACHE_DISK_DIR
+
+
+def _disk_path(disk_dir: str, fp: str, cfg: NPUConfig,
+               opts: "CompilerOptions") -> str:
+    digest = serialize.cache_file_key(fp, cfg, opts.cache_key())
+    return os.path.join(disk_dir, f"{digest}.rpa")
+
+
+def _disk_get(disk_dir: str, fp: str, cfg: NPUConfig,
+              opts: "CompilerOptions") -> Optional[CompileResult]:
+    path = _disk_path(disk_dir, fp, cfg, opts)
+    if not os.path.exists(path):
+        _bump("disk_misses")
+        return None
+    t = time.monotonic()
+    try:
+        key, payloads, _ = serialize.read_artifact(path)
+        if (key.get("fingerprint") != fp or
+                key.get("cfg") != serialize.config_to_payload(cfg) or
+                key.get("opts") !=
+                serialize.options_digest(opts.cache_key())):
+            raise serialize.ArtifactError(
+                f"{path}: stale artifact (key mismatch)")
+        res = CompileResult(
+            serialize.program_from_payload(payloads["program"]),
+            serialize.plan_from_payload(payloads["plan"]),
+            serialize.tiling_from_payload(payloads["tiling"]),
+            serialize.allocation_from_payload(payloads["allocation"]),
+            compile_s=0.0,
+            phase_s={"disk_load": time.monotonic() - t},
+            cache_hit=True, cache_key=fp, cache_tier="disk")
+    except (serialize.ArtifactError, OSError):
+        # reject, never replay — and degrade to a recompile on any I/O
+        # error (file vanished between exists() and open, permissions,
+        # …): the disk tier must never fail a serving compile.  A fresh
+        # compile overwrites the bad file.
+        _bump("disk_rejects")
+        _bump("disk_misses")
+        return None
+    _bump("disk_hits")
+    return res
+
+
+def _disk_put(disk_dir: str, fp: str, cfg: NPUConfig,
+              opts: "CompilerOptions", res: CompileResult) -> None:
+    os.makedirs(disk_dir, exist_ok=True)
+    path = _disk_path(disk_dir, fp, cfg, opts)
+    key = {"fingerprint": fp, "cfg": serialize.config_to_payload(cfg),
+           "opts": serialize.options_digest(opts.cache_key())}
+    payloads = {
+        "program": serialize.program_to_payload(res.program),
+        "plan": serialize.plan_to_payload(res.plan),
+        "tiling": serialize.tiling_to_payload(res.tiling),
+        "allocation": serialize.allocation_to_payload(res.allocation),
+    }
+    fd, tmp = tempfile.mkstemp(dir=disk_dir, suffix=".tmp")
+    os.close(fd)
+    try:
+        serialize.write_artifact(tmp, key, payloads)
+        os.replace(tmp, path)     # atomic vs concurrent readers
+        _bump("disk_writes")
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
 
 
 def compile_graph(g: Graph, cfg: NPUConfig,
@@ -160,7 +328,13 @@ def compile_graph(g: Graph, cfg: NPUConfig,
             # fresh timing envelope for this call
             return replace(hit, compile_s=time.monotonic() - t0,
                            phase_s=dict(hit.phase_s, cache_hit=0.0),
-                           cache_hit=True)
+                           cache_hit=True, cache_tier="memory")
+        disk_dir = _disk_dir_snapshot()
+        if disk_dir:
+            disk = _disk_get(disk_dir, fp, cfg, opts)
+            if disk is not None:
+                _cache_put(key, disk)
+                return replace(disk, compile_s=time.monotonic() - t0)
 
     phase: Dict[str, float] = {}
     t = time.monotonic()
@@ -218,4 +392,12 @@ def compile_graph(g: Graph, cfg: NPUConfig,
                         cache_hit=False, cache_key=fp)
     if cache and key is not None:
         _cache_put(key, res)
+        disk_dir = _disk_dir_snapshot()
+        if disk_dir:
+            t = time.monotonic()
+            try:
+                _disk_put(disk_dir, fp, cfg, opts, res)
+                phase["disk_store"] = time.monotonic() - t
+            except OSError:
+                pass              # disk tier is best-effort
     return res

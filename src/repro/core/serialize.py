@@ -1,0 +1,362 @@
+"""Stable on-disk serialization for compiled NPU artifacts.
+
+The paper's compiler is a deployment product: a workload is compiled
+once and the resulting program ships to millions of edge devices.  This
+module gives every compiler artifact a canonical, *versioned* byte form
+so a compiled program can leave the process that solved the CPs:
+
+  * component codecs — :class:`~repro.core.ir.Graph` (with dtypes and
+    qparams), :class:`~repro.core.program.NPUProgram` (ticks, jobs,
+    tiles, meta), :class:`~repro.core.tiling.TilingResult`,
+    :class:`~repro.core.allocation.Allocation`,
+    :class:`~repro.core.formats.FormatPlan` and
+    :class:`~repro.core.npu.NPUConfig` each round-trip through a
+    JSON-able payload plus a dict of numpy arrays (arrays never pass
+    through JSON, so float32/int8 values are bit-exact);
+  * a container format — a single zip file holding ``meta.json``, one
+    ``<component>.json`` per payload and one ``arrays.npz``, with a
+    per-entry sha256 manifest in the meta.  A flipped byte, a truncated
+    file or a hand-edited entry fails the manifest check and raises
+    :class:`ArtifactError` — a bad artifact is rejected, never replayed.
+
+Consumers: the two-tier compiled-program cache in
+:mod:`repro.core.pipeline` (program-only artifacts) and the public
+``repro.api`` deployment surface (full ``CompiledModel`` artifacts that
+add the graph, weights and quantization state).
+"""
+from __future__ import annotations
+
+import hashlib
+import io
+import json
+import zipfile
+from dataclasses import asdict
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .allocation import Allocation
+from .formats import FormatPlan
+from .ir import Graph, Op, QParams, Tensor
+from .npu import NPUConfig
+from .program import ComputeJob, DmaJob, NPUProgram, Tick, TileRef, V2PJob
+from .tiling import ComputeStep, TensorTiles, TilingResult
+
+#: bump when any payload layout changes incompatibly.
+ARTIFACT_VERSION = 1
+ARTIFACT_MAGIC = "repro-npu-artifact"
+
+
+class ArtifactError(RuntimeError):
+    """A persisted artifact is corrupted, truncated, from an
+    incompatible format version, or stale for the requested key."""
+
+
+# --------------------------------------------------------------------------
+# Small helpers
+# --------------------------------------------------------------------------
+
+
+def _tuplify(v: Any) -> Any:
+    """JSON arrays back to tuples (op attrs are built with tuples; the
+    executors unpack them positionally)."""
+    if isinstance(v, list):
+        return tuple(_tuplify(x) for x in v)
+    return v
+
+
+def _tile_to_list(tl: TileRef) -> list:
+    return [tl.tensor, tl.index, tl.r0, tl.r1, tl.nbytes, tl.banks, tl.axis]
+
+
+def _tile_from_list(v: list) -> TileRef:
+    return TileRef(v[0], int(v[1]), int(v[2]), int(v[3]), int(v[4]),
+                   int(v[5]), v[6])
+
+
+# --------------------------------------------------------------------------
+# NPUConfig
+# --------------------------------------------------------------------------
+
+
+def config_to_payload(cfg: NPUConfig) -> dict:
+    return asdict(cfg)
+
+
+def config_from_payload(p: dict) -> NPUConfig:
+    return NPUConfig(**p)
+
+
+# --------------------------------------------------------------------------
+# Graph (tensors + qparams + ops)
+# --------------------------------------------------------------------------
+
+
+def graph_to_payload(g: Graph) -> Tuple[dict, Dict[str, np.ndarray]]:
+    arrays: Dict[str, np.ndarray] = {}
+    tensors = []
+    for t in sorted(g.tensors.values(), key=lambda t: t.name):
+        qp = None
+        if t.qparams is not None:
+            qp = {"bits": t.qparams.bits, "axis": t.qparams.axis}
+            arrays[f"qp.scale/{t.name}"] = np.asarray(t.qparams.scale)
+            arrays[f"qp.zp/{t.name}"] = np.asarray(t.qparams.zero_point)
+        tensors.append({
+            "name": t.name, "shape": list(t.shape), "kind": t.kind,
+            "dtype": t.dtype, "producer": t.producer,
+            "consumers": list(t.consumers), "scale": t.scale, "qparams": qp,
+        })
+    ops = [{"name": op.name, "kind": op.kind, "inputs": list(op.inputs),
+            "outputs": list(op.outputs), "attrs": op.attrs}
+           for op in g.ops]
+    return {"name": g.name, "tensors": tensors, "ops": ops}, arrays
+
+
+def graph_from_payload(p: dict, arrays: Dict[str, np.ndarray]) -> Graph:
+    g = Graph(p["name"])
+    for tp in p["tensors"]:
+        qp = None
+        if tp["qparams"] is not None:
+            qp = QParams(arrays[f"qp.scale/{tp['name']}"],
+                         arrays[f"qp.zp/{tp['name']}"],
+                         bits=int(tp["qparams"]["bits"]),
+                         axis=tp["qparams"]["axis"])
+        g.tensors[tp["name"]] = Tensor(
+            tp["name"], tuple(tp["shape"]), tp["kind"], tp["dtype"],
+            tp["producer"], list(tp["consumers"]), tp["scale"], qp)
+    for op_p in p["ops"]:
+        # "pad"/"k" attrs are tuples in builder-made graphs; JSON returns
+        # lists, and the executors unpack them positionally either way,
+        # but fingerprint stability and isinstance(k, tuple) checks in
+        # in_row_range need the original tuple form back.
+        attrs = {k: _tuplify(v) for k, v in op_p["attrs"].items()}
+        op = Op(op_p["name"], op_p["kind"], list(op_p["inputs"]),
+                list(op_p["outputs"]), attrs)
+        g.ops.append(op)
+        g._op_index[op.name] = op
+    return g
+
+
+# --------------------------------------------------------------------------
+# NPUProgram
+# --------------------------------------------------------------------------
+
+
+def program_to_payload(prog: NPUProgram) -> dict:
+    ticks = []
+    for t in prog.ticks:
+        cj = None
+        if t.compute:
+            c = t.compute
+            cj = {"op": c.op_name,
+                  "out": [_tile_to_list(x) for x in c.out_tiles],
+                  "in": [_tile_to_list(x) for x in c.in_tiles],
+                  "fmt": c.fmt, "cycles": c.cycles, "macs": c.macs,
+                  "r0": c.r0, "r1": c.r1, "axis": c.axis}
+        ticks.append({
+            "index": t.index,
+            "compute": cj,
+            "dma": [[j.kind, _tile_to_list(j.tile), j.nbytes, j.cycles]
+                    for j in t.dma],
+            "v2p": [[_tile_to_list(j.tile), list(j.banks), j.cycles]
+                    for j in t.v2p],
+        })
+    meta = dict(prog.meta)
+    dead = meta.pop("dead_after_tick", {})
+    return {
+        "name": prog.name,
+        "cfg": config_to_payload(prog.cfg),
+        "dm_penalty": prog.dm_penalty,
+        "ticks": ticks,
+        "meta": meta,
+        "dead_after_tick": {str(k): [[n, i] for (n, i) in v]
+                            for k, v in dead.items()},
+    }
+
+
+def program_from_payload(p: dict) -> NPUProgram:
+    ticks: List[Tick] = []
+    for tp in p["ticks"]:
+        cj = None
+        if tp["compute"] is not None:
+            c = tp["compute"]
+            cj = ComputeJob(c["op"],
+                            [_tile_from_list(x) for x in c["out"]],
+                            [_tile_from_list(x) for x in c["in"]],
+                            c["fmt"], int(c["cycles"]), int(c["macs"]),
+                            r0=c["r0"], r1=c["r1"], axis=c["axis"])
+        ticks.append(Tick(
+            int(tp["index"]), cj,
+            [DmaJob(j[0], _tile_from_list(j[1]), int(j[2]), int(j[3]))
+             for j in tp["dma"]],
+            [V2PJob(_tile_from_list(j[0]), [int(b) for b in j[1]],
+                    int(j[2])) for j in tp["v2p"]],
+        ))
+    meta = dict(p["meta"])
+    meta["dead_after_tick"] = {
+        int(k): [(n, int(i)) for n, i in v]
+        for k, v in p["dead_after_tick"].items()}
+    return NPUProgram(p["name"], config_from_payload(p["cfg"]), ticks,
+                      dm_penalty=int(p["dm_penalty"]), meta=meta)
+
+
+# --------------------------------------------------------------------------
+# TilingResult / Allocation / FormatPlan
+# --------------------------------------------------------------------------
+
+
+def tiling_to_payload(tiling: TilingResult) -> dict:
+    return {
+        "tiles": [[name, [_tile_to_list(tl) for tl in tt.tiles]]
+                  for name, tt in tiling.tiles.items()],
+        "order": [[s.op_name, s.r0, s.r1, s.axis] for s in tiling.order],
+        "regions": [list(r) for r in tiling.regions],
+        "fusion_objective": tiling.fusion_objective,
+        "stats": json.loads(json.dumps(tiling.stats, default=list)),
+    }
+
+
+def tiling_from_payload(p: dict) -> TilingResult:
+    tiles = {name: TensorTiles(name, [_tile_from_list(v) for v in tls])
+             for name, tls in p["tiles"]}
+    order = [ComputeStep(o, int(r0), int(r1), axis)
+             for o, r0, r1, axis in p["order"]]
+    return TilingResult(tiles, order, [list(r) for r in p["regions"]],
+                        p["fusion_objective"], dict(p["stats"]))
+
+
+def allocation_to_payload(alloc: Allocation) -> dict:
+    return {
+        "banks": [[n, i, list(b)] for (n, i), b in alloc.banks.items()],
+        "tiles": [[n, i, _tile_to_list(tl)]
+                  for (n, i), tl in alloc.tiles.items()],
+        "peak_banks": alloc.peak_banks,
+        "v2p_updates": alloc.v2p_updates,
+        "repair_spills": alloc.repair_spills,
+        # spill_events are compile-time diagnostics; not persisted
+    }
+
+
+def allocation_from_payload(p: dict) -> Allocation:
+    return Allocation(
+        banks={(n, int(i)): [int(x) for x in b]
+               for n, i, b in p["banks"]},
+        tiles={(n, int(i)): _tile_from_list(tl)
+               for n, i, tl in p["tiles"]},
+        peak_banks=int(p["peak_banks"]),
+        v2p_updates=int(p["v2p_updates"]),
+        repair_spills=int(p["repair_spills"]),
+    )
+
+
+def plan_to_payload(plan: FormatPlan) -> dict:
+    return {"fmt": dict(plan.fmt), "cost_cycles": dict(plan.cost_cycles)}
+
+
+def plan_from_payload(p: dict) -> FormatPlan:
+    return FormatPlan(dict(p["fmt"]),
+                      {k: int(v) for k, v in p["cost_cycles"].items()})
+
+
+# --------------------------------------------------------------------------
+# Container: zip of json payloads + arrays.npz with a sha256 manifest
+# --------------------------------------------------------------------------
+
+
+def _json_bytes(obj: Any) -> bytes:
+    return json.dumps(obj, sort_keys=True,
+                      separators=(",", ":")).encode("utf-8")
+
+
+def write_artifact(path: str, key: dict, payloads: Dict[str, Any],
+                   arrays: Optional[Dict[str, np.ndarray]] = None) -> None:
+    """Write one artifact file.  ``key`` is the caller's identity record
+    (fingerprint / config / options digest / precision …); ``payloads``
+    maps component name -> JSON-able payload; ``arrays`` holds every
+    numpy array referenced by the payloads."""
+    entries: Dict[str, bytes] = {}
+    for name, payload in payloads.items():
+        entries[f"{name}.json"] = _json_bytes(payload)
+    if arrays:
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        entries["arrays.npz"] = buf.getvalue()
+    meta = {
+        "magic": ARTIFACT_MAGIC,
+        "version": ARTIFACT_VERSION,
+        "key": key,
+        "manifest": {name: hashlib.sha256(blob).hexdigest()
+                     for name, blob in sorted(entries.items())},
+    }
+    with zipfile.ZipFile(path, "w", zipfile.ZIP_DEFLATED) as zf:
+        zf.writestr("meta.json", _json_bytes(meta))
+        for name, blob in sorted(entries.items()):
+            zf.writestr(name, blob)
+
+
+def read_artifact(path: str) -> Tuple[dict, Dict[str, Any],
+                                      Dict[str, np.ndarray]]:
+    """Read + integrity-check one artifact file.
+
+    Returns ``(key, payloads, arrays)``.  Raises :class:`ArtifactError`
+    on any corruption: bad zip, missing/extra entries vs the manifest,
+    sha256 mismatch, wrong magic or incompatible version."""
+    try:
+        with zipfile.ZipFile(path, "r") as zf:
+            try:
+                meta = json.loads(zf.read("meta.json"))
+            except KeyError:
+                raise ArtifactError(f"{path}: no meta.json")
+            if meta.get("magic") != ARTIFACT_MAGIC:
+                raise ArtifactError(f"{path}: not a repro NPU artifact")
+            if meta.get("version") != ARTIFACT_VERSION:
+                raise ArtifactError(
+                    f"{path}: artifact version {meta.get('version')} "
+                    f"incompatible with {ARTIFACT_VERSION}")
+            manifest = meta.get("manifest", {})
+            entries: Dict[str, bytes] = {}
+            names = set(zf.namelist()) - {"meta.json"}
+            if names != set(manifest):
+                raise ArtifactError(
+                    f"{path}: entry set {sorted(names)} does not match "
+                    f"manifest {sorted(manifest)}")
+            for name, want in manifest.items():
+                blob = zf.read(name)
+                got = hashlib.sha256(blob).hexdigest()
+                if got != want:
+                    raise ArtifactError(
+                        f"{path}: checksum mismatch on {name}")
+                entries[name] = blob
+    except zipfile.BadZipFile as e:
+        raise ArtifactError(f"{path}: unreadable artifact ({e})") from e
+    payloads: Dict[str, Any] = {}
+    arrays: Dict[str, np.ndarray] = {}
+    for name, blob in entries.items():
+        if name == "arrays.npz":
+            with np.load(io.BytesIO(blob)) as npz:
+                arrays = {k: npz[k] for k in npz.files}
+        elif name.endswith(".json"):
+            payloads[name[:-5]] = json.loads(blob)
+    return meta["key"], payloads, arrays
+
+
+def options_digest(opts_key: tuple) -> str:
+    """Stable digest of a CompilerOptions.cache_key() tuple (its repr is
+    deterministic: strings, numbers, bools, None and nested tuples)."""
+    return hashlib.sha256(repr(opts_key).encode()).hexdigest()
+
+
+def cache_file_key(fingerprint: str, cfg: NPUConfig, opts_key: tuple) -> str:
+    """Filename-safe digest of the full compiled-program cache key."""
+    return cache_file_key_digest(fingerprint, config_to_payload(cfg),
+                                 options_digest(opts_key))
+
+
+def cache_file_key_digest(fingerprint: str, cfg_payload: dict,
+                          opts_digest: str) -> str:
+    """Same digest, from the already-serialized key components (what an
+    artifact's own key record stores — lets auditors re-derive the
+    expected filename of any artifact from its contents)."""
+    blob = _json_bytes({"fp": fingerprint, "cfg": cfg_payload,
+                        "opts": opts_digest})
+    return hashlib.sha256(blob).hexdigest()

@@ -535,10 +535,7 @@ def build_quantized(name: str, res_scale: float = 1.0, samples: int = 4,
     from repro import quant
 
     g, b = build(name, res_scale=res_scale)
-    rng = np.random.default_rng(seed)
-    inp_t = g.inputs[0]
-    cal = [{inp_t.name: rng.normal(size=inp_t.shape).astype(np.float32)}
-           for _ in range(max(1, samples))]
+    cal = quant.synthetic_calibration(g, samples=samples, seed=seed)
     calib = quant.calibrate(g, b._weights, cal, method=method,
                             percentile=percentile)
     qm = quant.quantize_graph(g, b._weights, calib,

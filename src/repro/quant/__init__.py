@@ -23,7 +23,7 @@ from .observers import (MinMaxObserver, PerChannelMinMaxObserver,
                         PercentileObserver, make_observer)
 from .ptq import (QuantizedModel, calibrate, cast_graph,
                   measure_quant_error, quantize_graph,
-                  quantized_reference_execute)
+                  quantized_reference_execute, synthetic_calibration)
 from .qparams import (dequantize, pack_int4, qparams_from_range,
                       qparams_per_channel, quantize, unpack_int4)
 
@@ -32,6 +32,7 @@ __all__ = [
     "MinMaxObserver", "PercentileObserver", "PerChannelMinMaxObserver",
     "make_observer", "calibrate", "quantize_graph", "cast_graph",
     "measure_quant_error", "quantized_reference_execute",
+    "synthetic_calibration",
     "graph_precision",
     "quantize", "dequantize", "qparams_from_range", "qparams_per_channel",
     "pack_int4", "unpack_int4",

@@ -49,6 +49,25 @@ class QuantSemantics(ExecSemantics):
         self.float_atol_steps = float_atol_steps
         self._qref: Optional[Dict[str, np.ndarray]] = None
 
+    # -- artifact metadata round trip ---------------------------------------
+    def meta(self) -> Dict[str, object]:
+        """Everything a persisted artifact needs to rebuild *these*
+        semantics (tolerances included) next to the stored qparams."""
+        return {"precision": self.name,
+                "weight_dtype": self.qm.weight_dtype,
+                "atol_steps": self.atol_steps,
+                "float_atol_steps": self.float_atol_steps}
+
+    @classmethod
+    def from_meta(cls, qm: QuantizedModel,
+                  meta: Dict[str, object]) -> "QuantSemantics":
+        sem = cls(qm, atol_steps=float(meta.get("atol_steps", 1.5)))
+        # float_atol_steps was already widened for int4 at save time;
+        # restore it verbatim rather than re-deriving
+        if "float_atol_steps" in meta:
+            sem.float_atol_steps = float(meta["float_atol_steps"])
+        return sem
+
     # -- replay hooks -------------------------------------------------------
     def dram_init(self, g: Graph, inputs, weights) -> Dict[str, np.ndarray]:
         dram: Dict[str, np.ndarray] = {}

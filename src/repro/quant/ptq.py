@@ -50,6 +50,19 @@ _NEG_SENTINEL = np.int32(-(1 << 30))
 CalibrationTable = Dict[str, object]  # tensor name -> observer
 
 
+def synthetic_calibration(g: Graph, samples: int = 4, seed: int = 0
+                          ) -> List[Dict[str, np.ndarray]]:
+    """Deterministic synthetic calibration set: normal inputs for every
+    graph input.  The repro's graphs carry deterministic pseudo-random
+    weights, so synthetic activations exercise the same dynamic range a
+    real input pipeline would here (and PTQ stays reproducible without
+    external data)."""
+    rng = np.random.default_rng(seed)
+    return [{t.name: rng.normal(size=t.shape).astype(np.float32)
+             for t in g.inputs}
+            for _ in range(max(1, samples))]
+
+
 def calibrate(g: Graph, weights: Dict[str, np.ndarray],
               sample_inputs: List[Dict[str, np.ndarray]],
               method: str = "minmax",

@@ -1,0 +1,427 @@
+"""The `repro.api` deployment surface: CompiledModel compile/call/save/
+load round trips (bit-exact for float32 and int8), artifact corruption
+and staleness rejection, the two-tier program cache (LRU caps, hit/miss
+/evict counters, disk tier, cross-process reuse) and the multi-model
+serving Session."""
+import json
+import os
+import subprocess
+import sys
+import zipfile
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core import (NEUTRON_2TOPS, CompilerOptions,
+                        program_cache_clear, program_cache_configure,
+                        program_cache_info)
+from repro.core.ir import GraphBuilder
+from repro.core.serialize import ArtifactError
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache():
+    """Every test starts with a clean, disk-less, default-sized store;
+    teardown restores whatever configuration the process had before
+    (the store is process-wide — later test modules may rely on an
+    environment-configured disk tier)."""
+    saved = program_cache_info()
+    program_cache_clear()
+    program_cache_configure(max_entries=64, max_bytes=None, disk_dir=None)
+    yield
+    program_cache_clear()
+    program_cache_configure(max_entries=saved["max_entries"],
+                            max_bytes=saved["max_bytes"],
+                            disk_dir=saved["disk_dir"])
+
+
+def _tiny_graph(seed: int = 0, name: str = "apitiny"):
+    b = GraphBuilder(name, seed=seed)
+    x = b.input((16, 16, 8))
+    x = b.conv(x, 16, k=3, act="relu")
+    x = b.dwconv(x, k=3, act="relu6")
+    x = b.maxpool(x, k=2)
+    x = b.conv(x, 24, k=1, act="silu")
+    x = b.global_avgpool(x)
+    x = b.fc(x, 10)
+    b.mark_output(x)
+    return b.build(), b
+
+
+def _input(g, seed=0):
+    t = g.inputs[0]
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=t.shape).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# compile() resolution + callable surface
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_compile_graph_pair_and_call():
+    m = api.compile(_tiny_graph(), cache=False)
+    assert m.precision == "float32"
+    x = _input(m.graph)
+    out = m(x)
+    assert set(out) == {t.name for t in m.graph.outputs}
+    rep = m.verify(x)
+    assert rep.ok
+    # stats/report surface
+    s = m.stats()
+    assert s["precision"] == "float32" and "latency_ms" in s
+    assert "CompiledModel" in m.report()
+
+
+@pytest.mark.fast
+def test_compile_batched_call():
+    m = api.compile(_tiny_graph(), cache=False)
+    x = np.stack([_input(m.graph, 0), _input(m.graph, 1),
+                  _input(m.graph, 2)])
+    out = m(x)
+    for t in m.graph.outputs:
+        assert out[t.name].shape[0] == 3
+        single = m(x[1])
+        np.testing.assert_array_equal(out[t.name][1], single[t.name])
+
+
+@pytest.mark.fast
+def test_compile_int8_runs_ptq_internally():
+    """precision='int8' must quantize inside — no quant imports at the
+    call site — and produce int8 semantics + calibrated tolerances."""
+    m = api.compile(_tiny_graph(), precision="int8", calib_samples=2,
+                    cache=False)
+    assert m.precision == "int8"
+    assert m.qm is not None and m.qm.calib_error
+    from repro.core.ir import graph_precision
+    assert graph_precision(m.graph) == "int8"
+    rep = m.verify(_input(m.graph))
+    assert rep.ok
+
+
+@pytest.mark.fast
+def test_compile_calibration_reuse():
+    """An int4-weight re-quantize can reuse the int8 compile's
+    calibration table — identical activation qparams, no second float
+    reference sweep."""
+    m8 = api.compile(_tiny_graph(), precision="int8", calib_samples=2,
+                     cache=False)
+    assert m8.calibration is not None
+    m4 = api.compile(_tiny_graph(), precision="int8",
+                     weight_dtype="int4", calibration=m8.calibration,
+                     cache=False)
+    assert m4.calibration is m8.calibration
+    for t8, t4 in zip(sorted(m8.graph.tensors), sorted(m4.graph.tensors)):
+        qp8 = m8.graph.tensors[t8].qparams
+        qp4 = m4.graph.tensors[t4].qparams
+        if qp8 is not None and not m8.graph.tensors[t8].is_param:
+            np.testing.assert_array_equal(np.atleast_1d(qp8.scale),
+                                          np.atleast_1d(qp4.scale))
+    assert m4.verify(_input(m4.graph)).ok
+
+
+@pytest.mark.fast
+def test_compile_precision_mismatch_raises():
+    g, b = _tiny_graph()
+    with pytest.raises(ValueError):
+        # quantized graph without its QuantizedModel bundle
+        from repro import quant
+        cal = quant.synthetic_calibration(g, samples=1)
+        calib = quant.calibrate(g, b._weights, cal)
+        quant.quantize_graph(g, b._weights, calib)
+        api.compile(g, weights=b._weights, cache=False)
+
+
+@pytest.mark.fast
+def test_compile_rejects_unknown_source():
+    with pytest.raises(TypeError):
+        api.compile(12345)
+
+
+# --------------------------------------------------------------------------
+# artifact round trip: save -> load -> execute bit-exact
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_artifact_round_trip_float32_bit_exact(tmp_path):
+    m = api.compile(_tiny_graph(), cache=False)
+    x = _input(m.graph)
+    want = m(x)
+    p = m.save(str(tmp_path / "m.rpa"))
+    m2 = api.CompiledModel.load(p)
+    assert m2.fingerprint == m.fingerprint
+    assert m2.precision == "float32"
+    got = m2(x)
+    for k in want:
+        np.testing.assert_array_equal(want[k], got[k])
+    assert m2.verify(x).ok
+    # latency accounting survives serialization exactly
+    assert m2.program.latency_cycles() == m.program.latency_cycles()
+
+
+@pytest.mark.fast
+def test_artifact_round_trip_int8_bit_exact(tmp_path):
+    m = api.compile(_tiny_graph(), precision="int8", calib_samples=2,
+                    cache=False)
+    x = _input(m.graph)
+    want = m(x)
+    p = m.save(str(tmp_path / "q.rpa"))
+    m2 = api.CompiledModel.load(p)
+    assert m2.precision == "int8"
+    got = m2(x)
+    for k in want:
+        np.testing.assert_array_equal(want[k], got[k])
+    # semantics resolved from artifact metadata: same calibrated band
+    for t in m.graph.outputs:
+        assert m2.semantics.float_tolerance(t.name) == \
+            pytest.approx(m.semantics.float_tolerance(t.name))
+    assert m2.verify(x).ok
+
+
+def test_artifact_round_trip_int8_vision(tmp_path):
+    m = api.compile("mobilenet_v1", precision="int8", res_scale=0.125,
+                    calib_samples=2, cache=False)
+    x = _input(m.graph, seed=7)
+    want = m(x)
+    m2 = api.CompiledModel.load(m.save(str(tmp_path / "v.rpa")))
+    got = m2(x)
+    for k in want:
+        np.testing.assert_array_equal(want[k], got[k])
+
+
+@pytest.mark.fast
+def test_artifact_corruption_rejected(tmp_path):
+    m = api.compile(_tiny_graph(), cache=False)
+    p = m.save(str(tmp_path / "m.rpa"))
+    blob = bytearray(open(p, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    open(p, "wb").write(bytes(blob))
+    with pytest.raises(ArtifactError):
+        api.CompiledModel.load(p)
+    # truncated file
+    open(p, "wb").write(bytes(blob[: len(blob) // 3]))
+    with pytest.raises(ArtifactError):
+        api.CompiledModel.load(p)
+    # not an artifact at all
+    open(p, "wb").write(b"not a zip")
+    with pytest.raises(ArtifactError):
+        api.CompiledModel.load(p)
+
+
+@pytest.mark.fast
+def test_artifact_tampered_entry_rejected(tmp_path):
+    """A re-zipped artifact with an edited payload fails the sha256
+    manifest even though the zip itself is valid."""
+    m = api.compile(_tiny_graph(), cache=False)
+    p = str(tmp_path / "m.rpa")
+    m.save(p)
+    with zipfile.ZipFile(p) as zf:
+        entries = {n: zf.read(n) for n in zf.namelist()}
+    entries["model.json"] = entries["model.json"].replace(
+        b"float32", b"floatXX")
+    with zipfile.ZipFile(p, "w") as zf:
+        for n, blob in entries.items():
+            zf.writestr(n, blob)
+    with pytest.raises(ArtifactError):
+        api.CompiledModel.load(p)
+
+
+@pytest.mark.fast
+def test_artifact_stale_for_other_graph_rejected(tmp_path):
+    m = api.compile(_tiny_graph(), cache=False)
+    p = m.save(str(tmp_path / "m.rpa"))
+    other, _ = _tiny_graph(name="other")
+    with pytest.raises(ArtifactError):
+        api.CompiledModel.load(p, expect_graph=other)
+    from dataclasses import replace as dc_replace
+    with pytest.raises(ArtifactError):
+        api.CompiledModel.load(
+            p, expect_cfg=dc_replace(NEUTRON_2TOPS, tcm_banks=16))
+    with pytest.raises(ArtifactError):
+        api.CompiledModel.load(
+            p, expect_options=CompilerOptions(fusion=False))
+    # matching expectations load fine
+    g, _ = _tiny_graph()
+    api.CompiledModel.load(p, expect_graph=g, expect_cfg=NEUTRON_2TOPS,
+                           expect_options=m.options)
+
+
+# --------------------------------------------------------------------------
+# two-tier program cache: LRU caps + counters + disk tier
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_program_cache_lru_cap_and_counters():
+    program_cache_configure(max_entries=2)
+    graphs = [_tiny_graph(name=f"lru{i}") for i in range(3)]
+    for g, _ in graphs:
+        api.compile((g, graphs[0][1]), cache=True)
+    info = program_cache_info()
+    assert info["entries"] == 2            # capped
+    assert info["mem_evictions"] == 1      # oldest evicted
+    assert info["mem_misses"] == 3
+    # oldest graph was evicted -> recompiling it misses
+    api.compile((graphs[0][0], graphs[0][1]), cache=True)
+    assert program_cache_info()["mem_hits"] == 0
+    # newest still cached
+    m = api.compile((graphs[2][0], graphs[2][1]), cache=True)
+    assert m.result.cache_tier == "memory"
+    assert program_cache_info()["mem_hits"] == 1
+
+
+@pytest.mark.fast
+def test_program_cache_byte_cap_evicts():
+    g, b = _tiny_graph()
+    api.compile((g, b), cache=True)
+    assert program_cache_info()["entries"] == 1
+    assert program_cache_info()["bytes"] > 0
+    program_cache_configure(max_bytes=1)   # below any entry estimate
+    assert program_cache_info()["entries"] == 0
+    assert program_cache_info()["mem_evictions"] == 1
+
+
+@pytest.mark.fast
+def test_program_cache_disk_tier_round_trip(tmp_path):
+    program_cache_configure(disk_dir=str(tmp_path))
+    g, b = _tiny_graph()
+    a = api.compile((g, b), cache=True)
+    assert not a.result.cache_hit
+    assert program_cache_info()["disk_entries"] == 1
+    # drop the memory tier -> next compile must come from disk
+    program_cache_clear(stats=False)
+    g2, b2 = _tiny_graph()
+    c = api.compile((g2, b2), cache=True)
+    assert c.result.cache_hit and c.result.cache_tier == "disk"
+    x = _input(g)
+    np.testing.assert_array_equal(
+        a(x)[g.outputs[0].name], c(x)[g2.outputs[0].name])
+    info = program_cache_info()
+    assert info["disk_hits"] == 1 and info["disk_writes"] == 1
+
+
+@pytest.mark.fast
+def test_program_cache_disk_corruption_recompiles(tmp_path):
+    program_cache_configure(disk_dir=str(tmp_path))
+    g, b = _tiny_graph()
+    api.compile((g, b), cache=True)
+    (path,) = [p for p in os.listdir(str(tmp_path)) if p.endswith(".rpa")]
+    full = os.path.join(str(tmp_path), path)
+    open(full, "wb").write(b"garbage")
+    program_cache_clear(stats=False)
+    g2, b2 = _tiny_graph()
+    c = api.compile((g2, b2), cache=True)
+    assert not c.result.cache_hit          # rejected, recompiled
+    assert program_cache_info()["disk_rejects"] == 1
+    # the recompile overwrote the bad file with a good one
+    program_cache_clear(stats=False)
+    g3, b3 = _tiny_graph()
+    d = api.compile((g3, b3), cache=True)
+    assert d.result.cache_tier == "disk"
+
+
+def test_program_cache_cross_process(tmp_path):
+    """Acceptance: a second process with the same artifact dir skips
+    compilation entirely — its compile_s is load time, not solve time."""
+    script = r"""
+import json
+import repro.api as api
+
+# a real benchmark model: the CP solve takes O(seconds) cold, so the
+# solve-vs-load timing assertion below has a wide margin
+m = api.compile("mobilenet_v1", res_scale=0.25)
+res = m.result
+print(json.dumps({"compile_s": res.compile_s,
+                  "cache_hit": res.cache_hit,
+                  "cache_tier": res.cache_tier,
+                  "disk_load": res.phase_s.get("disk_load")}))
+"""
+    env = dict(os.environ,
+               PYTHONPATH=SRC + os.pathsep + os.environ.get("PYTHONPATH",
+                                                            ""),
+               REPRO_PROGRAM_CACHE_DIR=str(tmp_path))
+    runs = []
+    for _ in range(2):
+        out = subprocess.run([sys.executable, "-c", script], env=env,
+                             capture_output=True, text=True, check=True)
+        runs.append(json.loads(out.stdout.strip().splitlines()[-1]))
+    first, second = runs
+    assert not first["cache_hit"]
+    assert second["cache_hit"] and second["cache_tier"] == "disk"
+    # compile_s in the warm process is artifact-load time, not CP-solve
+    # time: orders of magnitude under the cold solve
+    assert second["compile_s"] < first["compile_s"] * 0.25
+    assert second["disk_load"] is not None
+    assert second["compile_s"] < second["disk_load"] + 0.25
+
+
+# --------------------------------------------------------------------------
+# Session
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_session_multi_model_precisions(tmp_path):
+    sess = api.Session(cache_dir=str(tmp_path / "cache"))
+    f = sess.add(_tiny_graph(name="sfloat"), name="tiny_f32")
+    q = sess.add(_tiny_graph(name="squant"), name="tiny_int8",
+                 precision="int8", calib_samples=2)
+    assert f.precision == "float32" and q.precision == "int8"
+    assert set(sess.models()) == {"tiny_f32", "tiny_int8"}
+    x = _input(f.graph)
+    out = sess.run("tiny_f32", x)
+    assert set(out) == {t.name for t in f.graph.outputs}
+    sess.run("tiny_int8", x)
+    st = sess.stats()
+    assert st["models"]["tiny_f32"]["requests"] == 1
+    assert st["models"]["tiny_int8"]["precision"] == "int8"
+    assert st["models"]["tiny_f32"]["compiles"]["solved"] == 1
+    # re-adding hits the in-process tier
+    sess.add(_tiny_graph(name="sfloat"), name="tiny_f32")
+    assert sess.stats()["models"]["tiny_f32"]["compiles"]["memory"] == 1
+    assert "Session" in sess.report()
+    with pytest.raises(KeyError):
+        sess.run("nope", x)
+
+
+@pytest.mark.fast
+def test_session_load_artifact_and_warmup(tmp_path):
+    m = api.compile(_tiny_graph(), cache=False)
+    p = m.save(str(tmp_path / "m.rpa"))
+    sess = api.Session()
+    sess.load(p, name="from_disk")
+    sess.warmup("from_disk")
+    x = _input(m.graph)
+    np.testing.assert_array_equal(
+        sess.run("from_disk", x)[m.graph.outputs[0].name],
+        m(x)[m.graph.outputs[0].name])
+    assert sess.stats()["models"]["from_disk"]["compiles"]["artifact"] == 1
+
+
+# --------------------------------------------------------------------------
+# executor row-window cache: replay stays exact with fused row tiling
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_window_cache_replay_exact_deep_rows():
+    """A taller model with many row-tiled steps per op exercises the
+    window cache's slice/extend paths; the replay must stay oracle-exact
+    (execute() checks against reference_execute internally)."""
+    b = GraphBuilder("wincache", seed=3)
+    x = b.input((48, 48, 16))
+    x = b.conv(x, 24, k=3, act="relu")
+    x = b.conv(x, 24, k=5, s=1, act="relu6")
+    x = b.dwconv(x, k=3, act="relu")
+    x = b.maxpool(x, k=2)
+    x = b.conv(x, 32, k=3, act="silu")
+    b.mark_output(x)
+    g = b.build()
+    m = api.compile((g, b), cache=False)
+    rep = m.verify(_input(g, seed=5))
+    assert rep.ok

@@ -204,16 +204,14 @@ def test_cost_model_precision_aware():
 
 @pytest.mark.parametrize("name", ["mobilenet_v1", "mobilenet_v2"])
 def test_vision_quantized_parity(name):
-    from repro.frontends.vision import build_quantized
-    g, b, qm = build_quantized(name, res_scale=0.25, samples=2)
-    res = compile_graph(g, NEUTRON_2TOPS, CompilerOptions(precision="int8"),
-                        cache=False)
+    import repro.api as api
+    model = api.compile(name, precision="int8", res_scale=0.25,
+                        calib_samples=2, cache=False)
+    g, qm, sem = model.graph, model.qm, model.semantics
     rng = np.random.default_rng(7)
     inp = {g.inputs[0].name: rng.normal(
         size=g.inputs[0].shape).astype(np.float32)}
-    sem = quant.QuantSemantics(qm)
-    rep = execute(res.program, g, res.tiling, inp, qm.weights_f,
-                  semantics=sem)
+    rep = model.verify(inp)
     assert rep.ok
     ref = reference_execute(g, inp, qm.weights_f)
     for t in g.outputs:
@@ -222,12 +220,11 @@ def test_vision_quantized_parity(name):
 
 
 def test_vision_quantized_latency_speedup():
-    from repro.frontends.vision import build, build_quantized
+    import repro.api as api
     name = "mobilenet_v2"
-    gf, _ = build(name, res_scale=0.25)
-    f = compile_graph(gf, NEUTRON_2TOPS, cache=False)
-    g, b, qm = build_quantized(name, res_scale=0.25, samples=2)
-    q = compile_graph(g, NEUTRON_2TOPS, cache=False)
+    f = api.compile(name, precision="float32", res_scale=0.25, cache=False)
+    q = api.compile(name, precision="int8", res_scale=0.25,
+                    calib_samples=2, cache=False)
     # the acceptance bar: >= 1.5x on the scheduled-latency model
     assert f.program.latency_ms() / q.program.latency_ms() >= 1.5
 

@@ -3,8 +3,7 @@ compile+execute equivalence at reduced resolution."""
 import numpy as np
 import pytest
 
-from repro.core import NEUTRON_2TOPS, CompilerOptions, compile_graph
-from repro.core.executor import execute
+import repro.api as api
 from repro.core.ir import reference_execute
 from repro.frontends.vision import VISION_MODELS, build, table4_targets
 
@@ -46,11 +45,10 @@ def test_params_match_table4(name):
 @pytest.mark.parametrize("name", ["mobilenet_v1", "mobilenet_v2",
                                   "efficientnet_lite0"])
 def test_vision_compile_execute(name):
-    g, b = build(name, res_scale=0.25)
-    res = compile_graph(g, NEUTRON_2TOPS, CompilerOptions())
-    inp = {g.inputs[0].name: np.random.default_rng(1).normal(
-        size=g.inputs[0].shape).astype(np.float32)}
-    rep = execute(res.program, g, res.tiling, inp, b._weights)
+    model = api.compile(name, res_scale=0.25)
+    inp = np.random.default_rng(1).normal(
+        size=model.graph.inputs[0].shape).astype(np.float32)
+    rep = model.verify(inp)
     assert rep.ok
 
 
