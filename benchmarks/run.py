@@ -20,6 +20,7 @@ def main(argv=None):
     ap.add_argument("--skip-tables", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--skip-quant", action="store_true")
+    ap.add_argument("--skip-fusion", action="store_true")
     ap.add_argument("--cache-dir", default=None,
                     help="enable the on-disk program-cache tier at this "
                          "directory (CI keys its cache on it; a warm dir "
@@ -56,6 +57,9 @@ def main(argv=None):
         from . import quant_bench
         rc |= quant_bench.main(["--quick",
                                 "--out", "BENCH_quant_quick.json"])
+        from . import fusion_bench
+        rc |= fusion_bench.main(["--quick",
+                                 "--out", "BENCH_fusion_quick.json"])
         if args.cache_dir:
             # exercise the disk tier with real programs: cold CI solves
             # and writes artifacts; a restored cache dir serves them in
@@ -95,15 +99,25 @@ def main(argv=None):
         pt.bench_genai()
 
     rc = 0
+    if not args.skip_fusion:
+        print("=" * 72)
+        print("FUSION WINDOWING (greedy vs capped vs windowed CP, "
+              "BENCH_fusion.json)")
+        print("=" * 72)
+        from . import fusion_bench
+        rc |= fusion_bench.main(["--quick", "--out",
+                                 "BENCH_fusion_quick.json"]
+                                if args.fast else [])
+
     if not args.skip_quant:
         print("=" * 72)
         print("QUANTIZATION (int8/int4 PTQ vs float32, BENCH_quant.json)")
         print("=" * 72)
         from . import quant_bench
         # --fast smoke must not clobber the canonical full-run artifact
-        rc = quant_bench.main(["--quick", "--out",
-                               "BENCH_quant_quick.json"]
-                              if args.fast else [])
+        rc |= quant_bench.main(["--quick", "--out",
+                                "BENCH_quant_quick.json"]
+                               if args.fast else [])
 
     if not args.skip_roofline:
         print("=" * 72)

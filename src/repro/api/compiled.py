@@ -187,6 +187,10 @@ class CompiledModel:
 
     def report(self) -> str:
         s = self.program.stats()
+        ts = self.tiling.stats or {}
+        fused = ts.get("fused_steps", 0)
+        cov = f"{100.0 * ts.get('fused_steps_cp', 0) / fused:.0f}%" \
+            if fused else "n/a (no fused regions)"
         lines = [
             f"CompiledModel {self.name!r}  [{self.precision}]",
             f"  config       {self.cfg.name}  "
@@ -200,6 +204,14 @@ class CompiledModel:
             f"  compile      {self.result.compile_s * 1e3:.1f} ms",
             f"  program      {s['ticks']:.0f} ticks, "
             f"{s['gmacs']:.2f} GMACs, {s['ddr_mb']:.2f} MB DDR",
+            # fusion coverage: how much of the fusion-eligible work the
+            # CP actually optimized (the rest ran the greedy order)
+            f"  fusion       {ts.get('cp_regions', 0)} CP + "
+            f"{ts.get('windowed_regions', 0)} windowed "
+            f"({ts.get('windows', 0)} windows) + "
+            f"{ts.get('greedy_regions', 0)} greedy regions, "
+            f"{ts.get('layerwise_regions', 0)} layer-wise; "
+            f"optimized fused steps: {cov}",
             f"  latency      {s['latency_ms']:.3f} ms modeled "
             f"({s['effective_tops']:.2f} effective TOPS, "
             f"{100 * s['utilization']:.0f}% of peak)",

@@ -117,6 +117,14 @@ class CPModel:
     def fix(self, var: int, val: int) -> None:
         self.fixed[var] = int(val)
 
+    def fix_many(self, assignments: Dict[int, int]) -> None:
+        """Bulk fixed assignment — how precondition/boundary state
+        enters a model cheaply (e.g. the windowed fusion CPs' carry
+        state): fixed vars are assigned and propagated once at the root
+        and excluded from branching entirely."""
+        for v, val in assignments.items():
+            self.fixed[v] = int(val)
+
     # ---- constraints (normalized to <=) ----
     def add(self, terms: Terms, sense: str, rhs: int, name: str = "") -> None:
         terms = [(v, c) for v, c in terms if c != 0]
@@ -381,8 +389,13 @@ def solve(model: CPModel, time_limit_s: float = 10.0,
                 act_inc = 1.0
 
     # branching order: activity (after restarts), then objective-
-    # coefficient magnitude, then index
-    order = sorted(range(n), key=lambda v: (-abs(obj_coef[v]), v))
+    # coefficient magnitude, then index.  Fixed vars (preconditions /
+    # boundary state, see CPModel.fix_many) are assigned at the root and
+    # never branched on.
+    free = [v for v in range(n) if v not in model.fixed] \
+        if model.fixed else list(range(n))
+    order = sorted(free, key=lambda v: (-abs(obj_coef[v]), v))
+    n_order = len(order)
 
     # ---- root: fixed vars + initial propagation over ALL constraints
     # (a constraint can be violated or unit-forcing before any
@@ -421,9 +434,9 @@ def solve(model: CPModel, time_limit_s: float = 10.0,
         while True:
             if descend:
                 i = cur_pos
-                while i < n and assigned[order[i]]:
+                while i < n_order and assigned[order[i]]:
                     i += 1
-                if i >= n:
+                if i >= n_order:
                     obj = lin_lb + total_mt   # exact at full assignment
                     if obj < best_obj:
                         best_obj = obj
@@ -478,7 +491,7 @@ def solve(model: CPModel, time_limit_s: float = 10.0,
                     reset_queue()
                     stack.clear()
                     order = sorted(
-                        range(n),
+                        free,
                         key=lambda v: (-activity[v], -abs(obj_coef[v]), v))
                     cur_pos = 0
                     descend = True

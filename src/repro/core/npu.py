@@ -376,6 +376,28 @@ def dma_cost(cfg: NPUConfig, nbytes: int, kind: str = "ddr") -> int:
     return int(cfg.dma_setup_cycles + math.ceil(nbytes / rate))
 
 
+def cross_window_spill_cost(cfg: NPUConfig, nbytes: int,
+                            round_trip: bool = True) -> int:
+    """Price, in the fusion CP's bank-tick objective units, of a tile
+    crossing a fusion-window boundary through DDR.
+
+    The windowed fusion CP (:mod:`repro.core.tiling`) trades "hold a
+    tile resident" (``tile.banks`` per tick) against "let it go and
+    bring it back from DDR" (this constant).  ``round_trip=True`` is an
+    activation crossing the boundary (push + refetch);
+    ``round_trip=False`` is a parameter or model input, which still
+    lives in DRAM and only costs the refetch.  The exchange rate
+    normalizes the DDR traffic by the DMA cost of one TCM bank, so a
+    tile is worth keeping resident for roughly ``cost / banks`` ticks —
+    which also makes per-window objectives comparable when they are
+    summed across the stitched windows of one region."""
+    if nbytes <= 0:
+        return 0
+    per_bank = max(1, dma_cost(cfg, cfg.bank_bytes))
+    trips = 2 if round_trip else 1
+    return max(1, math.ceil(trips * dma_cost(cfg, nbytes) / per_bank))
+
+
 def cycles_to_ms(cfg: NPUConfig, cycles: float) -> float:
     return cycles / cfg.freq_hz * 1e3
 

@@ -71,6 +71,15 @@ class CompilerOptions:
         cpsolver.DEFAULT_STALL_NODES      # …or stall search nodes
     parallel_cp: bool = True          # solve partitions on a process pool
     cp_engine: str = "incremental"    # cpsolver.ENGINES key
+    # fusion-CP scale (§IV-C): regions whose estimated tile count fits
+    # max_cp_tiles get the joint tile-size + order CP; bigger regions
+    # are decomposed into overlapping windows of <= max_cp_window_tiles
+    # greedy steps (region_overlap steps shared between neighbours),
+    # solved concurrently and stitched.  max_cp_window_tiles=0 disables
+    # windowing — oversized regions then fall back to the greedy order.
+    max_cp_tiles: int = 36
+    max_cp_window_tiles: int = 24
+    region_overlap: int = 6
     # requested execution precision.  "auto" compiles whatever the graph
     # is annotated with; "float32"/"int8" assert the graph matches (a
     # quantized request must have gone through repro.quant.quantize_graph
@@ -127,10 +136,11 @@ _CACHE_MAX_BYTES: Optional[int] = None
 _CACHE_BYTES = 0
 _CACHE_DISK_DIR: Optional[str] = \
     os.environ.get("REPRO_PROGRAM_CACHE_DIR") or None
+_CACHE_DISK_MAX_BYTES: Optional[int] = None
 
 _STATS_ZERO = {"mem_hits": 0, "mem_misses": 0, "mem_evictions": 0,
                "disk_hits": 0, "disk_misses": 0, "disk_writes": 0,
-               "disk_rejects": 0}
+               "disk_rejects": 0, "disk_evictions": 0}
 _CACHE_STATS = dict(_STATS_ZERO)
 
 _UNSET = object()
@@ -146,11 +156,17 @@ def _estimate_result_bytes(res: CompileResult) -> int:
 
 
 def program_cache_configure(max_entries: Optional[int] = None,
-                            max_bytes=_UNSET, disk_dir=_UNSET) -> None:
+                            max_bytes=_UNSET, disk_dir=_UNSET,
+                            disk_max_bytes=_UNSET) -> None:
     """Reconfigure the two-tier store.  ``max_entries``/``max_bytes``
     bound the in-process LRU (None byte cap = unbounded bytes);
-    ``disk_dir`` enables (a path) or disables (None) the disk tier."""
-    global _CACHE_MAX_ENTRIES, _CACHE_MAX_BYTES, _CACHE_DISK_DIR
+    ``disk_dir`` enables (a path) or disables (None) the disk tier;
+    ``disk_max_bytes`` caps the disk tier's total artifact bytes (None =
+    unbounded) — past the cap the least-recently-served ``.rpa`` files
+    are garbage-collected, counted by ``disk_evictions`` in
+    :func:`program_cache_info`."""
+    global _CACHE_MAX_ENTRIES, _CACHE_MAX_BYTES, _CACHE_DISK_DIR, \
+        _CACHE_DISK_MAX_BYTES
     with _CACHE_LOCK:
         if max_entries is not None:
             _CACHE_MAX_ENTRIES = int(max_entries)
@@ -158,7 +174,14 @@ def program_cache_configure(max_entries: Optional[int] = None,
             _CACHE_MAX_BYTES = None if max_bytes is None else int(max_bytes)
         if disk_dir is not _UNSET:
             _CACHE_DISK_DIR = disk_dir
+        if disk_max_bytes is not _UNSET:
+            _CACHE_DISK_MAX_BYTES = None if disk_max_bytes is None \
+                else int(disk_max_bytes)
         _evict_locked()
+    if disk_dir is not _UNSET or disk_max_bytes is not _UNSET:
+        d = _disk_dir_snapshot()
+        if d:
+            _disk_gc(d)
 
 
 def program_cache_clear(stats: bool = True) -> None:
@@ -178,14 +201,22 @@ def program_cache_info() -> Dict[str, int]:
         info = {"entries": len(_PROGRAM_CACHE), "max": _CACHE_MAX_ENTRIES,
                 "max_entries": _CACHE_MAX_ENTRIES,
                 "bytes": _CACHE_BYTES, "max_bytes": _CACHE_MAX_BYTES,
-                "disk_dir": _CACHE_DISK_DIR}
+                "disk_dir": _CACHE_DISK_DIR,
+                "disk_max_bytes": _CACHE_DISK_MAX_BYTES}
         info.update(_CACHE_STATS)
     disk_dir = info["disk_dir"]
+    info["disk_entries"] = 0
+    info["disk_bytes"] = 0
     if disk_dir and os.path.isdir(disk_dir):
-        info["disk_entries"] = sum(
-            1 for f in os.listdir(disk_dir) if f.endswith(".rpa"))
-    else:
-        info["disk_entries"] = 0
+        for f in os.listdir(disk_dir):
+            if not f.endswith(".rpa"):
+                continue
+            info["disk_entries"] += 1
+            try:
+                info["disk_bytes"] += os.path.getsize(
+                    os.path.join(disk_dir, f))
+            except OSError:
+                pass              # raced with GC / external cleanup
     return info
 
 
@@ -240,6 +271,39 @@ def _disk_dir_snapshot() -> Optional[str]:
         return _CACHE_DISK_DIR
 
 
+def _disk_gc(disk_dir: str) -> None:
+    """Evict oldest artifacts once the disk tier exceeds its byte cap.
+
+    "Oldest" is least-recently-*served*: a disk hit touches the file's
+    mtime, so hot programs survive the sweep.  Unlink races (another
+    process GC-ing the same shared dir) are benign — whoever loses the
+    race just skips the file."""
+    with _CACHE_LOCK:
+        cap = _CACHE_DISK_MAX_BYTES
+    if cap is None or not os.path.isdir(disk_dir):
+        return
+    entries = []
+    for f in os.listdir(disk_dir):
+        if not f.endswith(".rpa"):
+            continue
+        p = os.path.join(disk_dir, f)
+        try:
+            st = os.stat(p)
+        except OSError:
+            continue
+        entries.append((st.st_mtime, st.st_size, p))
+    total = sum(sz for _, sz, _ in entries)
+    for _, sz, p in sorted(entries):
+        if total <= cap:
+            return
+        try:
+            os.unlink(p)
+        except OSError:
+            continue
+        _bump("disk_evictions")
+        total -= sz
+
+
 def _disk_path(disk_dir: str, fp: str, cfg: NPUConfig,
                opts: "CompilerOptions") -> str:
     digest = serialize.cache_file_key(fp, cfg, opts.cache_key())
@@ -277,6 +341,10 @@ def _disk_get(disk_dir: str, fp: str, cfg: NPUConfig,
         _bump("disk_rejects")
         _bump("disk_misses")
         return None
+    try:
+        os.utime(path)            # mark recently-served for the GC sweep
+    except OSError:
+        pass
     _bump("disk_hits")
     return res
 
@@ -358,30 +426,52 @@ def compile_graph(g: Graph, cfg: NPUConfig,
     # paper's "partitioned into smaller sub-problems" escape hatch,
     # §III-B).  Within a rung, allocation failures first retry with pure
     # JIT placement (no CP re-timing) before descending.
+    #
+    # When windowed fusion produced a stitched order that differs from
+    # the greedy one, plan_tiling attaches the greedy-order variant as
+    # `tiling.fallback` (same tiles, no re-solving) and the rung races
+    # both through the scheduler, keeping whichever program the DAE
+    # latency model scores better: the window CP's memory objective is a
+    # proxy, and the guarantee that windowing never loses vs greedy
+    # comes from this race, not from the proxy.
     t = time.monotonic()
     last_err: Optional[Exception] = None
-    prog = alloc = None
+    prog = alloc = tiling = None
     for frac in (0.5, 0.25, 0.125, 0.0625, 0.03125):
-        tiling = plan_tiling(cfg, g, plan, fusion=opts.fusion,
-                             cp_time_limit_s=opts.cp_time_limit_s,
-                             budget_frac=frac,
-                             naive=opts.naive_tiling,
-                             cp_stall_s=opts.cp_stall_s,
-                             cp_stall_nodes=opts.cp_stall_nodes,
-                             parallel_cp=opts.parallel_cp,
-                             cp_engine=opts.cp_engine)
-        for so in (sched_opt,
-                   replace(sched_opt, cp_time_limit_s=0.0)):
-            try:
-                prog = schedule(cfg, g, plan, tiling, so)
-                alloc = allocate(prog, cfg)
-                last_err = None
-                break
-            except (RuntimeError, AllocationError) as e:
-                last_err = e
-                prog = alloc = None
-                continue
-        if last_err is None:
+        ti = plan_tiling(cfg, g, plan, fusion=opts.fusion,
+                         cp_time_limit_s=opts.cp_time_limit_s,
+                         max_cp_tiles=opts.max_cp_tiles,
+                         budget_frac=frac,
+                         naive=opts.naive_tiling,
+                         cp_stall_s=opts.cp_stall_s,
+                         cp_stall_nodes=opts.cp_stall_nodes,
+                         parallel_cp=opts.parallel_cp,
+                         cp_engine=opts.cp_engine,
+                         max_cp_window_tiles=opts.max_cp_window_tiles,
+                         region_overlap=opts.region_overlap)
+        best = None
+        for cand in ([ti] if ti.fallback is None else [ti, ti.fallback]):
+            got = None
+            for so in (sched_opt,
+                       replace(sched_opt, cp_time_limit_s=0.0)):
+                try:
+                    p = schedule(cfg, g, plan, cand, so)
+                    a = allocate(p, cfg)
+                    got = (p, a, cand)
+                    last_err = None
+                    break
+                except (RuntimeError, AllocationError) as e:
+                    last_err = e
+                    continue
+            if got is not None and (
+                    best is None or
+                    (got[0].latency_cycles(), got[0].ddr_bytes()) <
+                    (best[0].latency_cycles(), best[0].ddr_bytes())):
+                best = got
+        if best is not None:
+            prog, alloc, tiling = best
+            tiling.fallback = None       # not part of the compiled result
+            last_err = None
             break
     if last_err is not None:
         raise last_err
@@ -397,6 +487,7 @@ def compile_graph(g: Graph, cfg: NPUConfig,
             t = time.monotonic()
             try:
                 _disk_put(disk_dir, fp, cfg, opts, res)
+                _disk_gc(disk_dir)
                 phase["disk_store"] = time.monotonic() - t
             except OSError:
                 pass              # disk tier is best-effort

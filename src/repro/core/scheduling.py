@@ -188,6 +188,7 @@ def _greedy_schedule(cfg: NPUConfig, g: Graph, steps: List[_Step],
     decisions: List[_DmaDecision] = []
     death: List[Tuple[Tuple[str, int], int]] = []   # (key, tick) events
     spilled: Dict[Tuple[str, int], int] = {}   # key -> push tick
+    evicted_at: Dict[Tuple[str, int], int] = {}   # key -> last evict tick
     # Belady eviction heap: max-heap on next-use (stored as -next_use).
     # Entries go stale when a tile is evicted/retired (lazy deletion) or
     # when time advances past a use.  A stale-small priority would BURY
@@ -237,17 +238,25 @@ def _greedy_schedule(cfg: NPUConfig, g: Graph, steps: List[_Step],
             is_out = g.tensors[tl.tensor].kind == "output"
             if (needs_later and not is_param_or_input) or is_out:
                 # activations must round-trip through DRAM; params and
-                # model inputs still live in DRAM — drop and re-fetch
+                # model inputs still live in DRAM — drop and re-fetch.
+                # The push may not be re-timed before the tile's last
+                # compute use (a push releases the banks in the
+                # allocator's replay), so its release is that use + 1,
+                # not merely produce + 1.
+                us = uses.get(key, ())
+                i = bisect.bisect_right(us, at_tick)
+                prev_use = us[i - 1] if i else 0
                 decisions.append(_DmaDecision(
                     "push", tl, tl.nbytes, dma_cost(cfg, tl.nbytes),
                     at_tick,
-                    release=produce_tick.get(key, 0) + 1,
+                    release=max(produce_tick.get(key, 0), prev_use) + 1,
                     deadline=at_tick))
                 if needs_later:
                     spilled[key] = at_tick
             del resident[key]
             used_banks -= tl.banks   # push frees within its tick
             death.append((key, at_tick))
+            evicted_at[key] = at_tick
         for entry in skipped:
             heapq.heappush(evict_heap, entry)
 
@@ -257,6 +266,16 @@ def _greedy_schedule(cfg: NPUConfig, g: Graph, steps: List[_Step],
         nonlocal used_banks
         if tl.key in resident:
             return
+        if via is not None and compute_tick > at_tick \
+                and evicted_at.get(tl.key) == at_tick:
+            # the tile was evicted *within* this very tick (to make room
+            # for this tick's outputs) — a same-tick refetch would race
+            # the death event in the allocator/executor replay, so issue
+            # the fetch in the compute tick instead (the supported
+            # late-fetch slot: the controller sequences DMA before the
+            # compute job within a tick).  Interleaved fused orders hit
+            # this whenever a tile is used at ticks t-1 and t+1 but not t.
+            at_tick = compute_tick
         if avail(at_tick) < tl.banks:
             evict(at_tick, needed, tl.banks)
         if avail(at_tick) < tl.banks and via is not None \
@@ -277,12 +296,16 @@ def _greedy_schedule(cfg: NPUConfig, g: Graph, steps: List[_Step],
                 f"(working set too large for TCM)")
         if via is not None:
             t = g.tensors[tl.tensor]
+            # a re-fetch may never be re-timed before the eviction that
+            # made it necessary — the death event would erase it in the
+            # allocator/executor replay
             if tl.key in spilled:
                 rel = spilled.pop(tl.key) + 1
             elif t.is_param or t.kind == "input":
-                rel = 0
+                rel = evicted_at.get(tl.key, -1) + 1
             else:
-                rel = produce_tick.get(tl.key, 0) + 1
+                rel = max(produce_tick.get(tl.key, 0),
+                          evicted_at.get(tl.key, -1)) + 1
             decisions.append(_DmaDecision(
                 via, tl, tl.nbytes, dma_cost(cfg, tl.nbytes),
                 max(rel, at_tick), release=rel,
@@ -351,7 +374,9 @@ def _greedy_schedule(cfg: NPUConfig, g: Graph, steps: List[_Step],
         if g.tensors[tl.tensor].kind == "output":
             decisions.append(_DmaDecision(
                 "push", tl, tl.nbytes, dma_cost(cfg, tl.nbytes),
-                T + 1, release=produce_tick.get(key, T) + 1,
+                T + 1,
+                release=max(produce_tick.get(key, T),
+                            last_use.get(key, 0)) + 1,
                 deadline=T + 1))
     return decisions, death
 
@@ -388,7 +413,18 @@ def _build_window_cp(cfg: NPUConfig, steps: List[_Step],
                      ) -> Optional[_WindowCP]:
     """Build the CP that re-times jobs whose greedy tick is in [a, b) to
     minimize Eq. (8) over that window."""
-    window_jobs = [j for j in jobs if a <= j.tick < b]
+    # Jobs whose legal window is inverted (deadline < release) are the
+    # scheduler's same-tick late fetches: a tile spilled at tick t and
+    # re-needed at t+1 is re-fetched *in* its compute tick (the
+    # controller sequences DMA before compute within a tick).  They must
+    # stay at their greedy tick — clamping them into [deadline, deadline]
+    # would move the fetch before its own spill push and break
+    # residency.  Fused (interleaved) orders hit this routinely.
+    def _movable(j: _DmaDecision) -> bool:
+        return min(j.deadline, b - 1) >= \
+            max(j.release, a, j.tick - opt.fetch_window)
+
+    window_jobs = [j for j in jobs if a <= j.tick < b and _movable(j)]
     if not window_jobs:
         return None
     m = CPModel(f"sched[{a}:{b})")
@@ -396,7 +432,6 @@ def _build_window_cp(cfg: NPUConfig, steps: List[_Step],
     for ji, j in enumerate(window_jobs):
         lo = max(j.release, a, j.tick - opt.fetch_window)
         hi = min(j.deadline, b - 1)
-        lo = min(lo, hi)
         ticks = list(range(lo, hi + 1))
         vs = []
         for t in ticks:

@@ -206,6 +206,12 @@ def program_from_payload(p: dict) -> NPUProgram:
 
 
 def tiling_to_payload(tiling: TilingResult) -> dict:
+    # ``stats`` round-trips as plain JSON and now carries the fusion
+    # coverage record (cp/windowed/greedy/layer-wise region counts,
+    # window counts and per-region detail) that CompiledModel.report()
+    # surfaces.  ``tiling.fallback`` — the greedy-order race variant the
+    # compile ladder may hold transiently — is deliberately NOT
+    # persisted: artifacts store only the chosen plan.
     return {
         "tiles": [[name, [_tile_to_list(tl) for tl in tt.tiles]]
                   for name, tt in tiling.tiles.items()],

@@ -1,0 +1,293 @@
+"""Windowed fusion-CP machinery: region partition/order soundness
+properties, the windowed order stitcher, the greedy-order safety net,
+the CP-eligibility estimate, cpsolver fixed-assignment support, and the
+disk-tier artifact GC."""
+import numpy as np
+import pytest
+
+from repro.core import (NEUTRON_2TOPS, CompilerOptions, compile_graph,
+                        cpsolver, program_cache_clear,
+                        program_cache_configure, program_cache_info)
+from repro.core.executor import execute
+from repro.core.formats import select_formats
+from repro.core.ir import GraphBuilder
+from repro.core.npu import cross_window_spill_cost
+from repro.core.tiling import (TensorTiles, _est_region_tiles,
+                               _greedy_order, _mk_tiles, _regions,
+                               _tile_options, _window_bounds,
+                               plan_tiling, validate_order)
+
+CFG = NEUTRON_2TOPS
+
+
+def _chain_graph(h=40, c=8, n=4):
+    b = GraphBuilder("chain", seed=0)
+    x = b.input((h, h, 3))
+    for i in range(n):
+        x = b.conv(x, c, k=3, act="relu")
+        x = b.dwconv(x, k=3, act="relu")
+    b.mark_output(x)
+    return b.build(), b
+
+
+# --------------------------------------------------------------------------
+# _regions partitions topo_ops exactly once
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("model,scale", [("mobilenet_v1", 0.25),
+                                         ("mobilenet_v2", 0.25),
+                                         ("yolov8n_det", 0.1)])
+def test_regions_partition_topo_ops_exactly_once(model, scale):
+    from repro.frontends.vision import build
+    g, _ = build(model, res_scale=scale)
+    for frac in (0.5, 0.125):
+        opts = _tile_options(CFG, g, budget_frac=frac)
+        regions = _regions(CFG, g, opts)
+        flat = [op.name for r in regions for op in r]
+        assert flat == [op.name for op in g.topo_ops()]
+
+
+@pytest.mark.fast
+def test_regions_partition_random_graphs():
+    g, _ = _chain_graph()
+    opts = _tile_options(CFG, g)
+    regions = _regions(CFG, g, opts)
+    flat = [op.name for r in regions for op in r]
+    assert flat == [op.name for op in g.topo_ops()]
+
+
+# --------------------------------------------------------------------------
+# est_tiles counts every output of multi-output ops
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_est_region_tiles_counts_all_outputs():
+    b = GraphBuilder("split", seed=0)
+    x = b.input((16, 16, 8))
+    x = b.conv(x, 8, k=1)
+    parts = b.split(x, 2)
+    y = b.add(parts[0], parts[1])
+    b.mark_output(y)
+    g = b.build()
+    opts = {name: (2, 4, "rows") for name in g.tensors}
+    split_op = next(op for op in g.ops if op.kind == "split")
+    # the split op alone contributes BOTH outputs at the larger option
+    assert _est_region_tiles(opts, [split_op]) == 8
+    assert _est_region_tiles(opts, g.ops) == 4 * sum(
+        len(op.outputs) for op in g.ops)
+
+
+# --------------------------------------------------------------------------
+# windowed stitched orders: every tile exactly once + row-dep sound
+# --------------------------------------------------------------------------
+
+
+def _region_orders(g, tiling):
+    """Split the global order into per-region sub-orders."""
+    own = {}
+    for ri, names in enumerate(tiling.regions):
+        for n in names:
+            own[n] = ri
+    orders = {ri: [] for ri in range(len(tiling.regions))}
+    for st in tiling.order:
+        orders[own[st.op_name]].append(st)
+    return orders
+
+
+@pytest.mark.fast
+def test_windowed_orders_sound_and_complete():
+    from repro.frontends.vision import build
+    g, _ = build("mobilenet_v2", res_scale=0.5)
+    plan = select_formats(CFG, g)
+    # max_cp_tiles=0 forces every multi-op region onto the windowed
+    # path; a small window size forces multi-window decompositions
+    tiling = plan_tiling(CFG, g, plan, max_cp_tiles=0,
+                         max_cp_window_tiles=4, region_overlap=2)
+    st = tiling.stats
+    assert st["windowed_regions"] >= 1
+    assert st["windows"] >= 2
+    name_to_op = {op.name: op for op in g.ops}
+    orders = _region_orders(g, tiling)
+    for ri, names in enumerate(tiling.regions):
+        region = [name_to_op[n] for n in names]
+        if len(region) <= 1:
+            continue
+        errs = validate_order(g, region, tiling.tiles, orders[ri])
+        assert not errs, errs
+    # the fallback plan (if any) must be equally sound
+    if tiling.fallback is not None:
+        fb_orders = _region_orders(g, tiling.fallback)
+        for ri, names in enumerate(tiling.fallback.regions):
+            region = [name_to_op[n] for n in names]
+            if len(region) <= 1:
+                continue
+            errs = validate_order(g, region, tiling.fallback.tiles,
+                                  fb_orders[ri])
+            assert not errs, errs
+
+
+def test_windowed_compile_executes_oracle_exact():
+    g, b = _chain_graph(h=48, c=12, n=5)
+    opts = CompilerOptions(max_cp_tiles=0, max_cp_window_tiles=6,
+                           region_overlap=2)
+    res = compile_graph(g, CFG, opts, cache=False)
+    inp = {g.inputs[0].name: np.random.default_rng(0).normal(
+        size=g.inputs[0].shape).astype(np.float32)}
+    rep = execute(res.program, g, res.tiling, inp, b._weights)
+    assert rep.ok
+    assert res.program.meta["peak_banks"] <= CFG.tcm_banks
+
+
+@pytest.mark.fast
+def test_window_bounds_cover_and_overlap():
+    for T in (1, 2, 7, 24, 100):
+        for size in (2, 8, 24):
+            for ov in (0, 3, 30):
+                bounds = _window_bounds(T, size, ov)
+                assert bounds[0][0] == 0 and bounds[-1][1] == T
+                for (a, b), (a2, b2) in zip(bounds, bounds[1:]):
+                    assert a < a2 <= b <= b2     # progress, no gaps
+                covered = set()
+                for a, b in bounds:
+                    covered |= set(range(a, b))
+                assert covered == set(range(T))
+
+
+# --------------------------------------------------------------------------
+# greedy-order safety net is row-dependency-sound
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_greedy_order_safety_net_sound_for_shuffled_region():
+    g, _ = _chain_graph(h=32, c=8, n=3)
+    opts = _tile_options(CFG, g, budget_frac=0.125)
+    region = [op for op in g.topo_ops() if op.kind in ("conv", "dwconv")]
+    tiles = {}
+    for op in region:
+        for oname in op.outputs:
+            t = g.tensors[oname]
+            tiles[oname] = TensorTiles(oname, _mk_tiles(
+                t, opts[oname][0], CFG.bank_bytes, opts[oname][2]))
+    # reversed + interleaved region order still must come out sound —
+    # the fixpoint loop stalls on some ops and the topological-order
+    # safety net has to finish the job
+    for perm in (list(reversed(region)),
+                 region[1::2] + region[0::2]):
+        order = _greedy_order(g, perm, tiles)
+        errs = validate_order(g, region, tiles, order)
+        assert not errs, errs
+
+
+# --------------------------------------------------------------------------
+# cpsolver: fixed assignments
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_fix_many_respected_and_excluded_from_branching():
+    m = cpsolver.CPModel("fix")
+    xs = [m.bool(f"x{i}") for i in range(6)]
+    m.add_exactly_one(xs[:3])
+    m.add_exactly_one(xs[3:])
+    m.minimize([(v, c) for v, c in zip(xs, (3, 2, 1, 1, 2, 3))])
+    m.fix_many({xs[2]: 0, xs[3]: 0})
+    sol = cpsolver.solve(m, time_limit_s=2.0)
+    ref = cpsolver.brute_force(m)
+    assert sol.feasible and sol.optimal
+    assert sol.objective == ref.objective
+    assert sol[xs[2]] == 0 and sol[xs[3]] == 0
+
+
+@pytest.mark.fast
+def test_fix_many_infeasible_detected():
+    m = cpsolver.CPModel("fix-bad")
+    xs = [m.bool(f"x{i}") for i in range(2)]
+    m.add_exactly_one(xs)
+    m.fix_many({xs[0]: 0, xs[1]: 0})
+    sol = cpsolver.solve(m, time_limit_s=1.0)
+    assert not sol.feasible
+
+
+@pytest.mark.fast
+def test_cross_window_spill_cost_monotone():
+    assert cross_window_spill_cost(CFG, 0) == 0
+    a = cross_window_spill_cost(CFG, CFG.bank_bytes)
+    b = cross_window_spill_cost(CFG, 8 * CFG.bank_bytes)
+    assert 0 < a <= b
+    one_way = cross_window_spill_cost(CFG, 8 * CFG.bank_bytes,
+                                      round_trip=False)
+    assert one_way <= b
+
+
+# --------------------------------------------------------------------------
+# disk-tier artifact GC
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_disk_cache_gc_evicts_oldest(tmp_path):
+    import os
+    import time
+    d = str(tmp_path / "programs")
+    saved = program_cache_info()
+    program_cache_clear()
+    program_cache_configure(disk_dir=d, disk_max_bytes=None)
+    try:
+        paths = []
+        for i in range(4):
+            g, _ = _chain_graph(h=16 + 4 * i, c=4, n=1)
+            compile_graph(g, CFG, CompilerOptions(), cache=True)
+            fresh = [os.path.join(d, f) for f in os.listdir(d)
+                     if f.endswith(".rpa")]
+            new = sorted(set(fresh) - set(paths))
+            paths.extend(new)
+            time.sleep(0.05)         # distinct mtimes for LRU order
+        assert len(paths) == 4
+        sizes = {p: os.path.getsize(p) for p in paths}
+        total = sum(sizes.values())
+        # cap to just under the total: the single oldest file must go
+        cap = total - 1
+        program_cache_configure(disk_max_bytes=cap)
+        info = program_cache_info()
+        assert info["disk_max_bytes"] == cap
+        assert info["disk_evictions"] >= 1
+        assert info["disk_bytes"] <= cap
+        assert not os.path.exists(paths[0])          # oldest evicted
+        assert os.path.exists(paths[-1])             # newest kept
+        # writes keep enforcing the cap
+        g, _ = _chain_graph(h=36, c=4, n=1)
+        compile_graph(g, CFG, CompilerOptions(), cache=True)
+        assert program_cache_info()["disk_bytes"] <= cap
+    finally:
+        program_cache_configure(disk_dir=saved["disk_dir"],
+                                disk_max_bytes=saved["disk_max_bytes"])
+        program_cache_clear()
+
+
+@pytest.mark.fast
+def test_disk_cache_hit_refreshes_mtime(tmp_path):
+    import os
+    d = str(tmp_path / "programs")
+    saved = program_cache_info()
+    program_cache_clear()
+    program_cache_configure(disk_dir=d, disk_max_bytes=None)
+    try:
+        g, _ = _chain_graph(h=20, c=4, n=1)
+        compile_graph(g, CFG, CompilerOptions(), cache=True)
+        (path,) = [os.path.join(d, f) for f in os.listdir(d)
+                   if f.endswith(".rpa")]
+        old = os.stat(path).st_mtime
+        os.utime(path, (old - 100, old - 100))       # age it
+        program_cache_clear(stats=False)             # force disk lookup
+        g2, _ = _chain_graph(h=20, c=4, n=1)
+        res = compile_graph(g2, CFG, CompilerOptions(), cache=True)
+        assert res.cache_tier == "disk"
+        assert os.stat(path).st_mtime > old - 100    # touched on hit
+    finally:
+        program_cache_configure(disk_dir=saved["disk_dir"],
+                                disk_max_bytes=saved["disk_max_bytes"])
+        program_cache_clear()
