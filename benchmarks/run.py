@@ -21,6 +21,7 @@ def main(argv=None):
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--skip-quant", action="store_true")
     ap.add_argument("--skip-fusion", action="store_true")
+    ap.add_argument("--skip-serve", action="store_true")
     ap.add_argument("--cache-dir", default=None,
                     help="enable the on-disk program-cache tier at this "
                          "directory (CI keys its cache on it; a warm dir "
@@ -46,8 +47,8 @@ def main(argv=None):
         import subprocess
         import sys as _sys
         print("=" * 72)
-        print("QUICK SMOKE (pytest -m fast + compile_bench --quick "
-              "+ quant_bench --quick)")
+        print("QUICK SMOKE (pytest -m fast + compile/quant/fusion/serve "
+              "benches --quick)")
         print("=" * 72)
         rc = subprocess.call(
             [_sys.executable, "-m", "pytest", "-q", "-m", "fast"])
@@ -60,6 +61,9 @@ def main(argv=None):
         from . import fusion_bench
         rc |= fusion_bench.main(["--quick",
                                  "--out", "BENCH_fusion_quick.json"])
+        from . import serve_bench
+        rc |= serve_bench.main(["--quick",
+                                "--out", "BENCH_serve_quick.json"])
         if args.cache_dir:
             # exercise the disk tier with real programs: cold CI solves
             # and writes artifacts; a restored cache dir serves them in
@@ -117,6 +121,16 @@ def main(argv=None):
         # --fast smoke must not clobber the canonical full-run artifact
         rc |= quant_bench.main(["--quick", "--out",
                                 "BENCH_quant_quick.json"]
+                               if args.fast else [])
+
+    if not args.skip_serve:
+        print("=" * 72)
+        print("SERVING (compiled replay plans vs interpretive executor, "
+              "BENCH_serve.json)")
+        print("=" * 72)
+        from . import serve_bench
+        rc |= serve_bench.main(["--quick", "--out",
+                                "BENCH_serve_quick.json"]
                                if args.fast else [])
 
     if not args.skip_roofline:

@@ -86,7 +86,8 @@ def save_model(path: str, *, name: str, graph: Graph, cfg: NPUConfig,
 def load_model(path: str, *,
                expect_graph: Optional[Graph] = None,
                expect_cfg: Optional[NPUConfig] = None,
-               expect_options: Optional[CompilerOptions] = None
+               expect_options: Optional[CompilerOptions] = None,
+               mmap: bool = False
                ) -> Tuple[dict, Graph, NPUConfig, CompilerOptions,
                           CompileResult, Dict[str, np.ndarray],
                           Dict[str, np.ndarray], Dict[str, np.ndarray]]:
@@ -99,8 +100,13 @@ def load_model(path: str, *,
     (catches hand-edits and fingerprint-algorithm drift), then any
     ``expect_*`` the caller passes must match the key (catches serving a
     program compiled for a different model/config/options).
+
+    ``mmap=True`` maps weight arrays copy-on-write out of the (stored,
+    version-2) artifact instead of materializing them in RAM; the
+    sha256 manifest is still fully validated either way.
     """
-    key, payloads, arrays = serialize.read_artifact(path)
+    key, payloads, arrays = serialize.read_artifact(path,
+                                                    mmap_arrays=mmap)
     if key.get("kind") != "compiled-model":
         raise ArtifactError(
             f"{path}: artifact kind {key.get('kind')!r} is not a "

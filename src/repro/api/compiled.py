@@ -16,13 +16,15 @@ on-disk artifact format of :mod:`repro.api.artifact`:
 """
 from __future__ import annotations
 
+import time as _time
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Union
+from typing import Dict, List, Optional, Union
 
 import numpy as np
 
-from repro.core.executor import (ExecSemantics, ExecutionReport,
-                                 FLOAT_SEMANTICS, execute)
+from repro.core.execplan import ExecPlan, lower_plan, lower_steps
+from repro.core.executor import (ExecSemantics, ExecutionError,
+                                 ExecutionReport, FLOAT_SEMANTICS, execute)
 from repro.core.ir import Graph, graph_precision
 from repro.core.npu import NPUConfig
 from repro.core.pipeline import CompileResult, CompilerOptions
@@ -30,6 +32,12 @@ from repro.core.pipeline import CompileResult, CompilerOptions
 from . import artifact as _artifact
 
 Inputs = Union[np.ndarray, Dict[str, np.ndarray]]
+
+#: batch-size buckets compiled replay plans are built for.  A request
+#: batch is served by the smallest bucket that fits it (ragged tails
+#: just run the bucket partially full); batches past the largest bucket
+#: are chunked.
+PLAN_BUCKETS = (1, 2, 4, 8, 16, 32)
 
 
 def resolve_semantics(graph: Graph, qm=None,
@@ -70,6 +78,13 @@ class CompiledModel:
     #: the quant.CalibrationTable a PTQ-inside compile derived (reusable
     #: via api.compile(..., calibration=...); not persisted in artifacts)
     calibration: Optional[dict] = field(default=None, repr=False)
+    #: lazily built compiled replay plans, keyed by
+    #: (graph fingerprint, semantics dtype, batch bucket)
+    _plans: Dict[tuple, ExecPlan] = field(default_factory=dict, repr=False)
+    _plan_stats: Dict[str, float] = field(
+        default_factory=lambda: {"builds": 0, "hits": 0, "build_s": 0.0,
+                                 "plan_requests": 0, "plan_batches": 0},
+        repr=False)
 
     # -- structure ----------------------------------------------------------
     @property
@@ -96,7 +111,12 @@ class CompiledModel:
 
     @property
     def fingerprint(self) -> str:
-        return self.result.cache_key or self.graph.fingerprint()
+        fp = self.result.cache_key
+        if fp is None:
+            fp = getattr(self, "_fp_memo", None)
+            if fp is None:    # hash once — this sits on the request path
+                fp = self._fp_memo = self.graph.fingerprint()
+        return fp
 
     @property
     def compile_s(self) -> float:
@@ -132,12 +152,15 @@ class CompiledModel:
                              f"{sorted(sizes)}")
         return sizes.pop() if sizes else None
 
-    def _run_one(self, feed: Dict[str, np.ndarray],
-                 check: bool) -> Dict[str, np.ndarray]:
+    def _require_semantics(self) -> None:
         if self.semantics is None:
             raise RuntimeError(
                 f"{self.name}: compiled from a dtype-cast graph "
                 f"(cost-model-only) — no executable semantics")
+
+    def _run_one(self, feed: Dict[str, np.ndarray],
+                 check: bool) -> Dict[str, np.ndarray]:
+        self._require_semantics()
         rep = execute(self.program, self.graph, self.tiling, feed,
                       self.weights, check=check,
                       semantics=self.semantics)
@@ -146,16 +169,95 @@ class CompiledModel:
         return {name: self.semantics.decode(name, arr)
                 for name, arr in rep.outputs.items()}
 
-    def __call__(self, inputs: Inputs,
-                 check: bool = False) -> Dict[str, np.ndarray]:
-        """Run the compiled program.  ``inputs`` is one array (single-
+    # -- compiled replay plans ---------------------------------------------
+    def plan_for(self, batch: int = 1) -> ExecPlan:
+        """The compiled replay plan serving a ``batch``-request group:
+        lowered lazily, cached per batch-size bucket (and per execution
+        dtype — an int8 model's plans never alias a float32 model's,
+        the graph fingerprint is part of the key).  Step lowering —
+        with its pre-gathered, pre-cast weight constants — runs once
+        per model and is shared across buckets; only the arena is
+        per-bucket."""
+        self._require_semantics()
+        bucket = next((b for b in PLAN_BUCKETS if b >= batch),
+                      PLAN_BUCKETS[-1])
+        key = (self.fingerprint, self.semantics.name, bucket)
+        plan = self._plans.get(key)
+        if plan is None:
+            lowered = getattr(self, "_lowered_steps", None)
+            if lowered is None:
+                t0 = _time.monotonic()
+                lowered = lower_steps(self.program, self.graph,
+                                      self.tiling, self.weights,
+                                      self.semantics)
+                self._lowered_steps = lowered
+                self._plan_stats["build_s"] += _time.monotonic() - t0
+            plan = lower_plan(self.program, self.graph, self.tiling,
+                              self.weights, self.semantics,
+                              capacity=bucket, lowered=lowered)
+            self._plans[key] = plan
+            self._plan_stats["builds"] += 1
+            self._plan_stats["build_s"] += plan.build_s
+        else:
+            self._plan_stats["hits"] += 1
+        return plan
+
+    def plan_cache_info(self) -> Dict[str, object]:
+        info = dict(self._plan_stats)
+        info["plans"] = sorted(
+            (fp[:12], sem, bucket)
+            for fp, sem, bucket in self._plans)
+        return info
+
+    def _run_plan_batch(self, stacked: Dict[str, np.ndarray], n: int
+                        ) -> Dict[str, np.ndarray]:
+        """Run ``n`` stacked requests through bucketed plans (chunking
+        past the largest bucket)."""
+        cap = PLAN_BUCKETS[-1]
+        self._plan_stats["plan_requests"] += n
+        if n <= cap:
+            self._plan_stats["plan_batches"] += 1
+            return self.plan_for(n).run(stacked, n=n)
+        outs: Dict[str, list] = {}
+        for i in range(0, n, cap):
+            j = min(i + cap, n)
+            chunk = {k: v[i:j] for k, v in stacked.items()}
+            self._plan_stats["plan_batches"] += 1
+            res = self.plan_for(j - i).run(chunk, n=j - i)
+            for name, val in res.items():
+                outs.setdefault(name, []).append(val)
+        return {name: np.concatenate(vals) for name, vals in outs.items()}
+
+    def __call__(self, inputs: Inputs, check: bool = False,
+                 engine: Optional[str] = None) -> Dict[str, np.ndarray]:
+        """Run the compiled model.  ``inputs`` is one array (single-
         input graphs), a dict of name -> array, or either with a leading
-        batch axis — batched calls run the batch-1 program per sample
-        (edge inference is batch-1 by construction, paper §IV) and stack
-        the outputs.  ``check=True`` additionally verifies every output
-        against the functional oracle."""
+        batch axis.
+
+        Requests are served by the **compiled replay plan** (lowered
+        once, batch-vectorized; see :mod:`repro.core.execplan`) — the
+        plan's outputs are bit-exact with the interpretive executor for
+        float32 and match its stored integers for int8/int4.  Pass
+        ``engine="interp"`` to force the interpretive (validating)
+        executor; ``check=True`` implies it and additionally verifies
+        every output against the functional oracle, per sample."""
         feed = self._normalize(inputs)
         batch = self._batch_size(feed)
+        if engine is None:
+            engine = "interp" if check else "plan"
+        if engine not in ("plan", "interp"):
+            raise ValueError(f"engine must be 'plan'/'interp', "
+                             f"got {engine!r}")
+        if check and engine == "plan":
+            raise ValueError(
+                "check=True runs the interpretive oracle path — use "
+                "verify() to cross-check the plan against it")
+        if engine == "plan":
+            self._require_semantics()
+            stacked = {k: np.asarray(v) for k, v in feed.items()}
+            if batch is None:
+                return self.plan_for(1).run(stacked)   # unbatched shapes
+            return self._run_plan_batch(stacked, batch)
         if batch is None:
             return self._run_one(feed, check)
         outs: Dict[str, list] = {}
@@ -170,19 +272,61 @@ class CompiledModel:
                 outs.setdefault(name, []).append(val)
         return {name: np.stack(vals) for name, vals in outs.items()}
 
+    def run_many(self, requests: List[Inputs], check: bool = False
+                 ) -> List[Dict[str, np.ndarray]]:
+        """Execute a group of independent requests as one (or a few)
+        batched plan replays; returns one output dict per request in
+        order.  ``check=True`` falls back to per-sample interpretive
+        oracle replay."""
+        if not requests:
+            return []
+        feeds = [self._normalize(r) for r in requests]
+        for f in feeds:
+            if self._batch_size(f) is not None:
+                raise ValueError(
+                    f"{self.name}: run_many takes single-sample requests"
+                    f" — pass a batched array to __call__ instead")
+        if check:
+            return [self._run_one(f, True) for f in feeds]
+        self._require_semantics()
+        stacked = {t.name: np.stack([f[t.name] for f in feeds])
+                   for t in self.graph.inputs}
+        res = self._run_plan_batch(stacked, len(feeds))
+        return [{name: vals[i] for name, vals in res.items()}
+                for i in range(len(feeds))]
+
     def verify(self, inputs: Inputs) -> ExecutionReport:
-        """Checked single-sample replay vs the functional oracle."""
+        """Checked single-sample replay exercising **both** execution
+        paths: the interpretive executor replays against the functional
+        oracle (residency/persistency/bank invariants included), then
+        the compiled replay plan runs the same sample and its outputs
+        are asserted against the interpreter's — bit-exact for float32,
+        within one output quantization step for int8/int4."""
         feed = self._normalize(inputs)
         if self._batch_size(feed) is not None:
             raise ValueError("verify() takes a single (unbatched) sample")
-        return execute(self.program, self.graph, self.tiling, feed,
-                       self.weights, check=True, semantics=self.semantics)
+        rep = execute(self.program, self.graph, self.tiling, feed,
+                      self.weights, check=True, semantics=self.semantics)
+        plan_out = self.plan_for(1).run(
+            {k: np.asarray(v) for k, v in feed.items()})
+        for t in self.graph.outputs:
+            got = plan_out[t.name]
+            want = rep.outputs[t.name]
+            err = float(np.max(np.abs(got - want))) if got.size else 0.0
+            tol = self.semantics.plan_parity_tol(t.name)
+            if err > tol:
+                raise ExecutionError(
+                    f"{self.name}: plan replay diverged from the "
+                    f"interpretive executor on {t.name}: max|err|="
+                    f"{err:.3e} (tol {tol:.3e})")
+        return rep
 
     # -- reporting ----------------------------------------------------------
     def stats(self) -> Dict[str, float]:
         s = self.result.stats()
         s["precision"] = self.precision
         s["fingerprint"] = self.fingerprint
+        s["plan"] = self.plan_cache_info()
         return s
 
     def report(self) -> str:
@@ -216,6 +360,21 @@ class CompiledModel:
             f"({s['effective_tops']:.2f} effective TOPS, "
             f"{100 * s['utilization']:.0f}% of peak)",
         ]
+        ps = self._plan_stats
+        if self._plans:
+            buckets = sorted({b for (_, _, b) in self._plans})
+            kernels = sum(len(p.steps) for p in self._plans.values())
+            arena = max(p.arena_bytes for p in self._plans.values())
+            lines.append(
+                f"  replay       {len(self._plans)} plan(s), buckets "
+                f"{buckets}, {kernels} kernels, arena "
+                f"{arena / 1024:.0f} KiB/request, built in "
+                f"{ps['build_s'] * 1e3:.1f} ms "
+                f"({ps['plan_requests']:.0f} plan requests in "
+                f"{ps['plan_batches']:.0f} batches)")
+        else:
+            lines.append("  replay       no plans built yet "
+                         "(lowered lazily on first request)")
         return "\n".join(lines)
 
     # -- persistence --------------------------------------------------------
@@ -247,15 +406,17 @@ class CompiledModel:
     def load(cls, path: str, *,
              expect_graph: Optional[Graph] = None,
              expect_cfg: Optional[NPUConfig] = None,
-             expect_options: Optional[CompilerOptions] = None
-             ) -> "CompiledModel":
+             expect_options: Optional[CompilerOptions] = None,
+             mmap: bool = False) -> "CompiledModel":
         """Load an artifact written by :meth:`save`.  Integrity and
         staleness are validated (see :mod:`repro.api.artifact`); a bad
-        artifact raises :class:`repro.core.serialize.ArtifactError`."""
+        artifact raises :class:`repro.core.serialize.ArtifactError`.
+        ``mmap=True`` maps weights copy-on-write out of the artifact
+        (many-model fleets share one page-cache copy per weight)."""
         (model_p, graph, cfg, options, result, weights, qweights,
          packed) = _artifact.load_model(
             path, expect_graph=expect_graph, expect_cfg=expect_cfg,
-            expect_options=expect_options)
+            expect_options=expect_options, mmap=mmap)
         qm = None
         sem_meta = model_p.get("quant")
         if model_p["precision"] != "float32":

@@ -1,4 +1,4 @@
-"""Multi-model serving session on top of the two-tier program cache.
+"""Multi-model serving session: micro-batching + admission policy.
 
 A :class:`Session` is the fleet-facing object: a registry of
 :class:`~repro.api.compiled.CompiledModel` instances (each with its own
@@ -6,39 +6,83 @@ precision) behind one hardware config, one options baseline and one
 two-tier (in-process LRU + on-disk artifact) compiled-program cache.
 Typical serving flow:
 
-    sess = Session(cache_dir="/var/cache/neutron")
-    sess.add("mobilenet_v2", precision="int8")       # precompile
-    sess.add("yolov8n_det")                          # float32 fallback
-    out = sess.run("mobilenet_v2", image)            # request path
-    print(sess.stats())                              # tier hit rates
+    sess = Session(cache_dir="/var/cache/neutron", max_batch=8)
+    sess.add("mobilenet_v2", precision="int8", pin=True)  # hot model
+    sess.add("yolov8n_det")                               # float32
+    out = sess.run("mobilenet_v2", image)         # single request
+    outs = sess.run_many("mobilenet_v2", images)  # one plan replay
 
-Every compile inside the session flows through
-:func:`repro.core.pipeline.compile_graph`'s two-tier store, so a second
-process with the same ``cache_dir`` warm-starts from disk instead of
-re-running the CP solver.
+    t1 = sess.submit("mobilenet_v2", img_a)       # coalescing queue
+    t2 = sess.submit("mobilenet_v2", img_b)
+    sess.flush()                                  # one batched replay
+    t1.result(), t2.result()
+
+Requests execute on each model's **compiled replay plan** (lowered
+once, batch-vectorized — see :mod:`repro.core.execplan`); the
+request-coalescing queue groups same-model submissions into one plan
+execution of up to ``max_batch`` requests.  ``pin()`` marks a model's
+compiled program exempt from the in-process LRU eviction (the
+admission policy for hot models); pinned counts are surfaced in
+``program_cache_info()`` / :meth:`stats`.
 """
 from __future__ import annotations
 
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 from repro.core.npu import NEUTRON_2TOPS, NPUConfig
 from repro.core.pipeline import (CompilerOptions, program_cache_configure,
-                                 program_cache_info)
+                                 program_cache_info, program_cache_pin,
+                                 program_cache_unpin)
 
 from .compiled import CompiledModel, Inputs
 
 
+class Ticket:
+    """Handle for one queued request.  ``result()`` flushes the owning
+    session's queue if the request has not been executed yet, and
+    re-raises the execution error if its batch failed."""
+
+    __slots__ = ("_session", "_done", "_value", "_error")
+
+    def __init__(self, session: "Session"):
+        self._session = session
+        self._done = False
+        self._value = None
+        self._error = None
+
+    def _fulfill(self, value) -> None:
+        self._done = True
+        self._value = value
+
+    def _fail(self, error: BaseException) -> None:
+        self._done = True
+        self._error = error
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def result(self):
+        if not self._done:
+            self._session.flush()
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
 class Session:
-    """Multi-model registry + per-model serving statistics."""
+    """Multi-model registry + micro-batched request path + stats."""
 
     def __init__(self, config: Optional[NPUConfig] = None,
                  options: Optional[CompilerOptions] = None,
                  cache_dir: Optional[str] = None,
                  max_entries: Optional[int] = None,
-                 max_bytes: Optional[int] = None):
+                 max_bytes: Optional[int] = None,
+                 max_batch: int = 8):
         self.cfg = config or NEUTRON_2TOPS
         self.options = options
+        self.max_batch = int(max_batch)
         # only forward knobs the caller actually set — the store is
         # process-wide and an omitted knob must not reset prior config
         if cache_dir is not None:
@@ -49,54 +93,70 @@ class Session:
             program_cache_configure(max_bytes=max_bytes)
         self._models: Dict[str, CompiledModel] = {}
         self._stats: Dict[str, dict] = {}
+        self._pinned: set = set()
+        #: request-coalescing queue: model name -> [(feed, ticket), ...]
+        self._queue: Dict[str, List[tuple]] = {}
+        self._queue_depth = 0
+
+    def _model_stats(self, name: str) -> dict:
+        return self._stats.setdefault(name, {
+            "requests": 0, "run_s": 0.0,
+            "batched_requests": 0, "batches": 0, "max_batch_seen": 0,
+            "compiles": {"solved": 0, "memory": 0, "disk": 0,
+                         "artifact": 0},
+        })
 
     # -- registry -----------------------------------------------------------
     def add(self, source, name: Optional[str] = None,
             precision: str = "auto",
             options: Optional[CompilerOptions] = None,
-            warmup: bool = False, **kw) -> CompiledModel:
+            warmup: bool = False, pin: bool = False,
+            **kw) -> CompiledModel:
         """Compile (or fetch from the program cache) and register one
         model.  ``precision`` selects the per-model execution precision
         ("auto" / "float32" / "int8"); ``warmup=True`` runs one zero
         input through the program so first-request latency excludes the
-        replay's lazy setup."""
+        replay's lazy plan lowering; ``pin=True`` marks the model's
+        compiled program exempt from in-process LRU eviction."""
         from . import compile as api_compile
         model = api_compile(source, self.cfg,
                             options if options is not None else self.options,
                             precision=precision, **kw)
         name = name or model.name
         self._models[name] = model
-        st = self._stats.setdefault(name, {
-            "requests": 0, "run_s": 0.0,
-            "compiles": {"solved": 0, "memory": 0, "disk": 0,
-                         "artifact": 0},
-        })
+        st = self._model_stats(name)
         st["precision"] = model.precision
         st["compile_s"] = model.compile_s
         st["latency_ms"] = model.program.latency_ms()
         st["compiles"][model.cache_tier or "solved"] += 1
+        if pin:
+            self.pin(name)
         if warmup:
             self.warmup(name)
         return model
 
-    def load(self, path: str, name: Optional[str] = None) -> CompiledModel:
-        """Register a model from an on-disk artifact (no compilation)."""
-        model = CompiledModel.load(path)
+    def load(self, path: str, name: Optional[str] = None,
+             mmap: bool = True, pin: bool = False) -> CompiledModel:
+        """Register a model from an on-disk artifact (no compilation).
+        ``mmap=True`` maps the artifact's weight arrays copy-on-write
+        instead of reading them into RAM — a fleet of Sessions serving
+        the same artifacts shares one page-cache copy per weight."""
+        model = CompiledModel.load(path, mmap=mmap)
         name = name or model.name
         self._models[name] = model
-        st = self._stats.setdefault(name, {
-            "requests": 0, "run_s": 0.0,
-            "compiles": {"solved": 0, "memory": 0, "disk": 0,
-                         "artifact": 0},
-        })
+        st = self._model_stats(name)
         st["precision"] = model.precision
         st["compile_s"] = 0.0
         st["latency_ms"] = model.program.latency_ms()
         st["compiles"]["artifact"] += 1
+        if pin:
+            self.pin(name)
         return model
 
     def warmup(self, name: Optional[str] = None) -> None:
-        """Run one all-zeros input through the named model (or all)."""
+        """Run one all-zeros input through the named model (or all) —
+        builds the batch-1 replay plan, so first-request latency is
+        pure execution."""
         import numpy as np
         names = [name] if name else list(self._models)
         for n in names:
@@ -115,14 +175,33 @@ class Session:
     def models(self):
         return list(self._models)
 
+    # -- admission policy ---------------------------------------------------
+    def pin(self, name: str) -> None:
+        """Exempt this model's compiled program from in-process LRU
+        eviction (hot-model admission policy)."""
+        model = self._get(name)
+        program_cache_pin(model.fingerprint)
+        self._pinned.add(name)
+
+    def unpin(self, name: str) -> None:
+        model = self._get(name)
+        program_cache_unpin(model.fingerprint)
+        self._pinned.discard(name)
+
+    def pinned(self) -> List[str]:
+        return sorted(self._pinned)
+
     # -- request path -------------------------------------------------------
-    def run(self, name: str, inputs: Inputs, check: bool = False):
+    def _get(self, name: str) -> CompiledModel:
         try:
-            model = self._models[name]
+            return self._models[name]
         except KeyError:
             raise KeyError(
                 f"model {name!r} not registered "
                 f"(have: {sorted(self._models)})") from None
+
+    def run(self, name: str, inputs: Inputs, check: bool = False):
+        model = self._get(name)
         t0 = time.monotonic()
         out = model(inputs, check=check)
         st = self._stats[name]
@@ -130,22 +209,90 @@ class Session:
         st["run_s"] += time.monotonic() - t0
         return out
 
+    def run_many(self, name: str, requests: List[Inputs],
+                 check: bool = False) -> List[dict]:
+        """Execute a group of same-model requests as chunked plan
+        replays of at most ``max_batch`` requests each."""
+        model = self._get(name)
+        st = self._stats[name]
+        out: List[dict] = []
+        t0 = time.monotonic()
+        for i in range(0, len(requests), self.max_batch):
+            group = requests[i:i + self.max_batch]
+            out.extend(model.run_many(group, check=check))
+            st["batches"] += 1
+            st["batched_requests"] += len(group)
+            st["max_batch_seen"] = max(st["max_batch_seen"], len(group))
+        st["requests"] += len(requests)
+        st["run_s"] += time.monotonic() - t0
+        return out
+
+    def submit(self, name: str, inputs: Inputs) -> Ticket:
+        """Queue one request for micro-batching.  The request executes
+        at the next :meth:`flush` (or transparently when its ticket's
+        ``result()`` is read), grouped with every other queued request
+        for the same model."""
+        self._get(name)                       # fail fast on bad names
+        ticket = Ticket(self)
+        self._queue.setdefault(name, []).append((inputs, ticket))
+        self._queue_depth += 1
+        return ticket
+
+    def flush(self) -> int:
+        """Drain the coalescing queue: one ``run_many`` per model with
+        queued work.  Returns the number of requests executed.
+
+        One model's batch failing fails only *its* tickets (the error
+        is stored and re-raised both here and from each ``result()``);
+        every other model's requests stay queued for the next flush."""
+        executed = 0
+        while self._queue:
+            name = next(iter(self._queue))
+            entries = self._queue.pop(name)
+            self._queue_depth -= len(entries)
+            try:
+                outs = self.run_many(name, [feed for feed, _ in entries])
+            except Exception as e:
+                for _, ticket in entries:
+                    ticket._fail(e)
+                raise
+            for (_, ticket), out in zip(entries, outs):
+                ticket._fulfill(out)
+            executed += len(entries)
+        return executed
+
+    @property
+    def queue_depth(self) -> int:
+        return self._queue_depth
+
     # -- reporting ----------------------------------------------------------
     def stats(self) -> dict:
-        return {"models": {n: dict(s) for n, s in self._stats.items()},
+        models = {}
+        for n, s in self._stats.items():
+            d = dict(s)
+            if n in self._models:
+                d["plan"] = self._models[n].plan_cache_info()
+            models[n] = d
+        return {"models": models,
+                "pinned": self.pinned(),
+                "queue_depth": self._queue_depth,
+                "max_batch": self.max_batch,
                 "program_cache": program_cache_info()}
 
     def report(self) -> str:
         cache = program_cache_info()
         lines = [f"Session: {len(self._models)} model(s), "
-                 f"cache {cache['entries']} entries in memory"
+                 f"cache {cache['entries']} entries in memory "
+                 f"({cache['pinned_entries']} pinned)"
                  + (f", disk tier at {cache['disk_dir']}"
                     if cache["disk_dir"] else ", no disk tier")]
         for n, st in self._stats.items():
             tiers = st["compiles"]
+            pin_mark = "*" if n in self._pinned else " "
             lines.append(
-                f"  {n:<24} [{st['precision']:>7}]  "
-                f"{st['requests']:>5} reqs  "
+                f" {pin_mark}{n:<24} [{st['precision']:>7}]  "
+                f"{st['requests']:>5} reqs "
+                f"({st['batched_requests']} in {st['batches']} batches)  "
                 f"modeled {st['latency_ms']:.3f} ms  "
                 f"compiles solved/mem/disk/artifact = "
                 f"{tiers['solved']}/{tiers['memory']}/{tiers['disk']}"

@@ -17,7 +17,8 @@ from .npu import (ENPU_A, ENPU_B, NEUTRON_2TOPS, NPUConfig, compute_job_cost,
                   cycles_to_ms, dma_cost, effective_tops)
 from .pipeline import (CompileResult, CompilerOptions, compile_graph,
                        program_cache_clear, program_cache_configure,
-                       program_cache_info)
+                       program_cache_info, program_cache_pin,
+                       program_cache_unpin)
 from .program import NPUProgram
 from .serialize import ArtifactError
 
@@ -28,5 +29,6 @@ __all__ = [
     "compute_job_cost", "dma_cost", "cycles_to_ms", "effective_tops",
     "CompileResult", "CompilerOptions", "compile_graph", "NPUProgram",
     "program_cache_clear", "program_cache_configure", "program_cache_info",
+    "program_cache_pin", "program_cache_unpin",
     "ArtifactError",
 ]

@@ -1,0 +1,542 @@
+"""Plan lowering + compiled replay engine.
+
+The interpretive executor (:mod:`repro.core.executor`) replays a
+compiled :class:`~repro.core.program.NPUProgram` tick by tick — per-step
+dict lookups, tile covering/assembly, residency checks, bank ledgers.
+That is exactly what makes it a *validator*: every invariant of the
+compiled program is re-asserted on every request.  It is also what makes
+it slow: measured serving latency is dominated by the interpreter's
+Python bookkeeping, not by the modeled schedule.
+
+This module is the deployment-speed counterpart: a **one-time lowering
+pass** that compiles the already-verified program into a flat
+:class:`ExecPlan` —
+
+  * every per-request decision is made once at lowering time: input row
+    windows (the ``gather_rows`` receptive-field math), output scatter
+    ranges, weight/bias slices (pre-gathered, pre-cast), activation and
+    requantization constants;
+  * tensors live in a **preallocated contiguous arena**: one byte
+    buffer per batch bucket, each tensor a view at a static offset
+    assigned by a linear-scan allocator over the plan's live intervals
+    (the same lifetime information the bank allocator scheduled from),
+    so slots are reused exactly like TCM banks are;
+  * a leading **batch dimension** runs through every kernel, so one
+    replay executes N requests;
+  * both value semantics lower through the same plan machinery: the
+    float32 path emits one kernel per *program step* (bit-exact with
+    the interpreter — same window shapes, same kernel calls), and the
+    int8/int4 :class:`~repro.quant.executor.QuantSemantics` path emits
+    one fused kernel per *op* (integer accumulation is order-exact, so
+    coalescing a step sequence into a whole-op kernel reproduces the
+    interpreter's stored integers bit for bit).
+
+The interpretive executor stays the oracle: ``CompiledModel.verify()``
+replays both engines and asserts the plan matches it (bit-exact for
+float32, within one output quantization step for int8/int4 — in
+practice the integers are identical).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .ir import Graph
+from .program import NPUProgram
+from .tiling import TilingResult
+
+#: arena slots are aligned to this many bytes (cache-line friendly).
+ARENA_ALIGN = 64
+
+
+class PlanError(RuntimeError):
+    pass
+
+
+@dataclass
+class PlanStep:
+    """One lowered kernel: ``run(bufs, n)`` reads/writes the first ``n``
+    batch rows of the arena views in ``bufs`` (indexed by tensor id).
+    ``reads``/``writes`` drive the arena's live-interval analysis."""
+
+    label: str
+    reads: Tuple[int, ...]
+    writes: Tuple[int, ...]
+    run: Callable[[List[np.ndarray], int], None]
+
+
+# --------------------------------------------------------------------------
+# Arena: static slot offsets from live intervals (linear scan)
+# --------------------------------------------------------------------------
+
+
+def _align(n: int) -> int:
+    return (n + ARENA_ALIGN - 1) // ARENA_ALIGN * ARENA_ALIGN
+
+
+def assign_slots(sizes: Sequence[int],
+                 intervals: Sequence[Tuple[int, int]]) -> Tuple[List[int],
+                                                                int]:
+    """First-fit linear-scan slot assignment.
+
+    ``sizes[i]`` bytes must be resident over step interval
+    ``intervals[i] = (start, end)`` inclusive; two tensors may share
+    bytes only if their intervals are disjoint.  Returns (offsets,
+    total_bytes)."""
+    order = sorted(range(len(sizes)), key=lambda i: intervals[i][0])
+    active: List[Tuple[int, int, int]] = []   # (offset, size, end)
+    offsets = [0] * len(sizes)
+    total = 0
+    for i in order:
+        start, end = intervals[i]
+        active = [a for a in active if a[2] >= start]
+        size = _align(max(1, sizes[i]))
+        # first-fit into the lowest gap between active allocations
+        off = 0
+        for a_off, a_size, _ in sorted(active):
+            if off + size <= a_off:
+                break
+            off = max(off, _align(a_off + a_size))
+        offsets[i] = off
+        active.append((off, size, end))
+        total = max(total, off + size)
+    return offsets, total
+
+
+# --------------------------------------------------------------------------
+# ExecPlan
+# --------------------------------------------------------------------------
+
+
+class ExecPlan:
+    """A lowered, batch-vectorized replay of one compiled program.
+
+    Built once per ``(model, semantics, batch bucket)`` by
+    :func:`lower_plan`; ``run()`` executes up to ``capacity`` requests
+    in one pass.  Not thread-safe: the arena is owned by the plan."""
+
+    def __init__(self, name: str, graph: Graph, program: NPUProgram,
+                 semantics, steps: List[PlanStep],
+                 ids: Dict[str, int], capacity: int,
+                 build_s: float = 0.0, granularity: str = "step"):
+        self.name = name
+        self.graph = graph
+        self.program = program
+        self.semantics = semantics
+        self.steps = steps
+        self.ids = ids
+        self.capacity = int(capacity)
+        self.granularity = granularity
+        #: modeled DDR traffic of one request (the schedule's fetch/push
+        #: bytes); batched runs report this per request, not per batch,
+        #: so BENCH_* DDR columns stay comparable across executors.
+        self.ddr_bytes_per_request = program.ddr_bytes()
+        self.ticks = len(program.ticks)
+
+        names = [None] * len(ids)
+        for nm, i in ids.items():
+            names[i] = nm
+        self._names: List[str] = names
+
+        # -- live intervals over the step sequence --------------------------
+        n_steps = len(steps)
+        first = [0] * len(ids)
+        last = [n_steps] * len(ids)
+        seen = [False] * len(ids)
+        for si, st in enumerate(steps):
+            for t in st.reads + st.writes:
+                if not seen[t]:
+                    first[t] = si
+                    seen[t] = True
+                last[t] = si
+        for t in graph.inputs:          # encoded before step 0
+            first[ids[t.name]] = -1
+        for t in graph.outputs:         # decoded after the last step
+            last[ids[t.name]] = n_steps
+
+        # -- static slot offsets + one contiguous arena per plan ------------
+        dtypes = [np.dtype(semantics.plan_dtype(graph.tensors[nm]))
+                  for nm in names]
+        shapes = [graph.tensors[nm].shape for nm in names]
+        sizes = [int(np.prod(shp)) * dt.itemsize
+                 for shp, dt in zip(shapes, dtypes)]
+        offsets, total = assign_slots(
+            sizes, [(first[i], last[i]) for i in range(len(ids))])
+        self.arena_bytes = total
+        self._arena = np.empty((self.capacity, max(1, total)),
+                               dtype=np.uint8)
+        self._views: List[np.ndarray] = []
+        for i in range(len(ids)):
+            flat = self._arena[:, offsets[i]:offsets[i] + sizes[i]]
+            self._views.append(
+                flat.view(dtypes[i]).reshape((self.capacity,) + shapes[i]))
+        self.build_s = build_s
+
+    # -- execution ----------------------------------------------------------
+    def run(self, feed: Dict[str, np.ndarray], n: Optional[int] = None,
+            decode: bool = True) -> Dict[str, np.ndarray]:
+        """Replay ``n`` stacked requests.  ``feed`` maps every graph
+        input to an ``(n, *shape)`` array (or ``(*shape,)`` when
+        ``n`` is None/1).  Returns each model output as ``(n, *shape)``
+        — decoded to float via the semantics, or the raw stored values
+        with ``decode=False``."""
+        sem = self.semantics
+        ids = self.ids
+        bufs = self._views
+        squeeze = n is None
+        n = 1 if n is None else int(n)
+        if not 1 <= n <= self.capacity:
+            raise PlanError(
+                f"{self.name}: batch {n} outside plan capacity "
+                f"[1, {self.capacity}]")
+        for t in self.graph.inputs:
+            arr = np.asarray(feed[t.name])
+            if squeeze and arr.shape == t.shape:
+                arr = arr[None]
+            if arr.shape != (n,) + t.shape:
+                raise PlanError(
+                    f"{self.name}: input {t.name} has shape {arr.shape}, "
+                    f"expected {(n,) + t.shape}")
+            bufs[ids[t.name]][:n] = sem.encode_input(t.name, arr)
+        for st in self.steps:
+            st.run(bufs, n)
+        outs: Dict[str, np.ndarray] = {}
+        for t in self.graph.outputs:
+            raw = bufs[ids[t.name]][:n]
+            if decode:
+                dec = sem.decode(t.name, raw)
+                out = dec.copy() if dec is raw else dec
+            else:
+                out = raw.copy()
+            outs[t.name] = out[0] if squeeze else out
+        return outs
+
+    def execution_report(self, outputs: Dict[str, np.ndarray],
+                         n: int = 1):
+        """An :class:`~repro.core.executor.ExecutionReport` for one plan
+        replay.  ``ticks``/``ddr_bytes`` are the schedule's modeled
+        **per-request** quantities — a batch-N replay does not multiply
+        them, so DDR columns stay comparable across executors."""
+        from .executor import ExecutionReport
+        return ExecutionReport(outputs, 0.0, self.ticks,
+                               self.ddr_bytes_per_request,
+                               batch=int(n), engine="plan")
+
+    # -- reporting ----------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        return {
+            "semantics": self.semantics.name,
+            "granularity": self.granularity,
+            "capacity": self.capacity,
+            "kernels": len(self.steps),
+            "tensors": len(self.ids),
+            "arena_bytes": int(self.arena_bytes),
+            "arena_total_bytes": int(self.arena_bytes * self.capacity),
+            "build_s": self.build_s,
+            "ddr_bytes_per_request": int(self.ddr_bytes_per_request),
+        }
+
+
+# --------------------------------------------------------------------------
+# Lowering entry point
+# --------------------------------------------------------------------------
+
+
+def lower_steps(program: NPUProgram, graph: Graph, tiling: TilingResult,
+                weights: Dict[str, np.ndarray], semantics
+                ) -> Tuple[List[PlanStep], Dict[str, int], str]:
+    """Semantics-driven step lowering: ``(steps, tensor ids,
+    granularity)``.  Step closures are batch-capacity-independent
+    (they read ``n`` at run time), so one lowered step list — with its
+    pre-gathered, pre-cast weight constants — is shared by every batch
+    bucket's :class:`ExecPlan`; only the arena is per-bucket."""
+    ids: Dict[str, int] = {}
+    for t in graph.tensors.values():
+        if not t.is_param:
+            ids[t.name] = len(ids)
+    lowerer = semantics.plan_lowerer()
+    steps, granularity = lowerer(graph, tiling, program, weights, ids)
+    return steps, ids, granularity
+
+
+def lower_plan(program: NPUProgram, graph: Graph, tiling: TilingResult,
+               weights: Dict[str, np.ndarray], semantics,
+               capacity: int = 1,
+               lowered: Optional[Tuple[List[PlanStep], Dict[str, int],
+                                       str]] = None) -> ExecPlan:
+    """Lower one scheduled program into an :class:`ExecPlan`.
+
+    The value semantics object picks the lowering (float32 emits one
+    kernel per program step; quantized semantics coalesce to one fused
+    integer kernel per op); this function owns everything semantics-
+    independent: tensor ids, live intervals, the arena, the runner.
+    Pass ``lowered`` (from :func:`lower_steps`) to share one step list
+    across several batch buckets instead of re-gathering the kernel
+    constants per bucket."""
+    t0 = time.monotonic()
+    if lowered is None:
+        lowered = lower_steps(program, graph, tiling, weights, semantics)
+    steps, ids, granularity = lowered
+    return ExecPlan(program.name, graph, program, semantics, steps, ids,
+                    capacity, build_s=time.monotonic() - t0,
+                    granularity=granularity)
+
+
+# --------------------------------------------------------------------------
+# float32 lowering — one kernel per program step, bit-exact with the
+# interpreter (same window contents, same kernel calls)
+# --------------------------------------------------------------------------
+
+
+def _step_geometry(g: Graph, op, r0: int, r1: int, axis: str):
+    """(c0, c1, rr0, rr1) exactly as executor._run_step derives them."""
+    out0 = g.tensors[op.outputs[0]]
+    H = out0.shape[0] if len(out0.shape) == 3 else 1
+    if axis == "chan":
+        return r0, r1, 0, H
+    return 0, out0.shape[-1], r0, r1
+
+
+def _scatter(out_buf: np.ndarray, y: np.ndarray, n: int, axis: str,
+             r0: int, r1: int) -> None:
+    """Write a step result into the output buffer over [r0, r1) of the
+    tiled axis — the union of the interpreter's per-tile ``put``s
+    (tile-relative indexing included)."""
+    if axis == "chan":
+        out_buf[:n, ..., r0:r1] = y[..., 0:r1 - r0]
+    else:
+        out_buf[:n, r0:r1] = y[:, 0:r1 - r0]
+
+
+def lower_float_steps(g: Graph, tiling: TilingResult, program: NPUProgram,
+                      weights: Dict[str, np.ndarray],
+                      ids: Dict[str, int]) -> Tuple[List[PlanStep], str]:
+    """Per-step float32 lowering.
+
+    Convolution/fc/pooling reductions loop over the batch calling the
+    *identical* single-sample kernels the interpreter calls on the
+    identical row windows, so every float reduction sees the same
+    operands in the same order — the plan's float outputs are
+    bit-identical to the interpretive replay.  Purely elementwise steps
+    (add/mul/act/scalar/resize/concat/split, max-pooling) vectorize the
+    batch axis directly."""
+    from .ir import _apply_act, _conv2d_ref
+    from .tiling import in_row_range
+    from numpy.lib.stride_tricks import sliding_window_view
+
+    steps: List[PlanStep] = []
+
+    for cj, r0, r1, axis in program.compute_steps():
+        op = g.op(cj.op_name)
+        a = op.attrs
+        k = op.kind
+        c0, c1, rr0, rr1 = _step_geometry(g, op, r0, r1, axis)
+        oid = ids[op.outputs[0]]
+        label = f"{op.name}[{r0}:{r1}@{axis}]"
+
+        def gather_param(name: str, lo: int, hi: int) -> np.ndarray:
+            return np.ascontiguousarray(
+                np.asarray(weights[name], dtype=np.float32)[lo:hi])
+
+        if k in ("conv", "dwconv"):
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            kh = a["k"][0]
+            s = a["stride"]
+            pt, pb, pl, pr = a["pad"]
+            ih = x.shape[0]
+            u0 = rr0 * s - pt
+            u1 = (rr1 - 1) * s - pt + kh
+            lo, hi = max(0, u0), min(ih, u1)
+            pads = (max(0, -u0), max(0, u1 - ih), pl, pr)
+            w = gather_param(op.inputs[1], c0, c1)
+            bias = gather_param(op.inputs[2], c0, c1) \
+                if len(op.inputs) > 2 else None
+            act = a.get("act", "none")
+            dw = k == "dwconv"
+            dw_chan = dw and axis == "chan"
+
+            def run(bufs, n, xid=xid, oid=oid, lo=lo, hi=hi, w=w,
+                    bias=bias, act=act, s=s, pads=pads, dw=dw,
+                    dw_chan=dw_chan, c0=c0, c1=c1, axis=axis,
+                    r0=r0, r1=r1):
+                win = bufs[xid][:n, lo:hi]
+                if dw_chan:
+                    win = win[:, :, :, c0:c1]
+                out = bufs[oid]
+                for b in range(n):
+                    y = _conv2d_ref(win[b], w, s, pads, dw)
+                    if bias is not None:
+                        y = y + bias
+                    y = _apply_act(y, act)
+                    if axis == "chan":
+                        out[b, ..., r0:r1] = y[..., 0:r1 - r0]
+                    else:
+                        out[b, r0:r1] = y[0:r1 - r0]
+            reads = (ids[x.name],)
+        elif k == "fc":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            w2 = gather_param(op.inputs[1], c0, c1)[:, 0, 0, :]
+            bias = gather_param(op.inputs[2], c0, c1) \
+                if len(op.inputs) > 2 else None
+            act = a.get("act", "none")
+
+            def run(bufs, n, xid=xid, oid=oid, w2=w2, bias=bias, act=act,
+                    axis=axis, r0=r0, r1=r1):
+                out = bufs[oid]
+                for b in range(n):
+                    y = w2 @ bufs[xid][b].reshape(-1)
+                    if bias is not None:
+                        y = y + bias
+                    y = _apply_act(y, act).reshape(1, 1, -1)
+                    if axis == "chan":
+                        out[b, ..., r0:r1] = y[..., 0:r1 - r0]
+                    else:
+                        out[b, r0:r1] = y[0:r1 - r0]
+            reads = (ids[x.name],)
+        elif k in ("add", "mul"):
+            xs = g.act_inputs(op)
+            ranges = []
+            for x in xs:
+                ih = x.shape[0] if len(x.shape) == 3 else 1
+                ranges.append(in_row_range(op, rr0, rr1, ih))
+            act = a.get("act", "none")
+            i0, i1 = ids[xs[0].name], ids[xs[1].name]
+            (l0, h0), (l1, h1) = ranges
+            is_add = k == "add"
+
+            def run(bufs, n, i0=i0, i1=i1, l0=l0, h0=h0, l1=l1, h1=h1,
+                    act=act, is_add=is_add, oid=oid, axis=axis,
+                    r0=r0, r1=r1):
+                a0 = bufs[i0][:n, l0:h0]
+                a1 = bufs[i1][:n, l1:h1]
+                y = _apply_act(a0 + a1, act) if is_add else a0 * a1
+                _scatter(bufs[oid], y, n, axis, r0, r1)
+            reads = (i0, i1)
+        elif k == "scalar":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            v = a["value"]
+            sop = a["op"]
+
+            def run(bufs, n, xid=xid, v=v, sop=sop, oid=oid, axis=axis,
+                    r0=r0, r1=r1, rr0=rr0, rr1=rr1):
+                xw = bufs[xid][:n, rr0:rr1]
+                y = {"add": xw + v, "mul": xw * v, "div": xw / v}[sop]
+                _scatter(bufs[oid], y, n, axis, r0, r1)
+            reads = (xid,)
+        elif k == "act":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            act = a["act"]
+
+            def run(bufs, n, xid=xid, act=act, oid=oid, axis=axis,
+                    r0=r0, r1=r1, rr0=rr0, rr1=rr1):
+                y = _apply_act(bufs[xid][:n, rr0:rr1], act)
+                _scatter(bufs[oid], y, n, axis, r0, r1)
+            reads = (xid,)
+        elif k == "maxpool":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            kk, s = a["k"], a["stride"]
+            pt, pb, pl, pr = a["pad"]
+            ih = x.shape[0]
+            u0 = rr0 * s - pt
+            u1 = (rr1 - 1) * s - pt + kk
+            lo, hi = max(0, u0), min(ih, u1)
+            top, bot = max(0, -u0), max(0, u1 - ih)
+
+            def run(bufs, n, xid=xid, lo=lo, hi=hi, top=top, bot=bot,
+                    pl=pl, pr=pr, kk=kk, s=s, oid=oid, axis=axis,
+                    r0=r0, r1=r1):
+                win = bufs[xid][:n, lo:hi]
+                xp = np.pad(win, ((0, 0), (top, bot), (pl, pr), (0, 0)),
+                            constant_values=-np.inf)
+                wins = sliding_window_view(xp, (kk, kk), axis=(1, 2))
+                y = wins[:, ::s, ::s].max(axis=(-2, -1))
+                _scatter(bufs[oid], y, n, axis, r0, r1)
+            reads = (xid,)
+        elif k == "avgpool":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            ih = x.shape[0]
+            if a["k"] == 0:
+                def run(bufs, n, xid=xid, ih=ih, oid=oid, axis=axis,
+                        r0=r0, r1=r1):
+                    win = bufs[xid][:n, 0:ih]
+                    out = bufs[oid]
+                    for b in range(n):
+                        y = win[b].mean(axis=(0, 1), keepdims=True)
+                        if axis == "chan":
+                            out[b, ..., r0:r1] = y[..., 0:r1 - r0]
+                        else:
+                            out[b, r0:r1] = y[0:r1 - r0]
+            else:
+                kk, s = a["k"], a["stride"]
+                pt, pb, pl, pr = a["pad"]
+                u0 = rr0 * s - pt
+                u1 = (rr1 - 1) * s - pt + kk
+                lo, hi = max(0, u0), min(ih, u1)
+                top, bot = max(0, -u0), max(0, u1 - ih)
+
+                def run(bufs, n, xid=xid, lo=lo, hi=hi, top=top, bot=bot,
+                        pl=pl, pr=pr, kk=kk, s=s, oid=oid, axis=axis,
+                        r0=r0, r1=r1):
+                    win = bufs[xid][:n, lo:hi]
+                    out = bufs[oid]
+                    for b in range(n):
+                        xp = np.pad(win[b], ((top, bot), (pl, pr), (0, 0)))
+                        wins = sliding_window_view(xp, (kk, kk),
+                                                   axis=(0, 1))
+                        y = wins[::s, ::s].sum(axis=(-2, -1),
+                                               dtype=np.float32) / (kk * kk)
+                        if axis == "chan":
+                            out[b, ..., r0:r1] = y[..., 0:r1 - r0]
+                        else:
+                            out[b, r0:r1] = y[0:r1 - r0]
+            reads = (xid,)
+        elif k == "resize":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            f = a["factor"]
+            lo, hi = rr0 // f, (rr1 + f - 1) // f
+
+            def run(bufs, n, xid=xid, lo=lo, hi=hi, f=f, rr0=rr0,
+                    rr1=rr1, oid=oid, axis=axis, r0=r0, r1=r1):
+                win = bufs[xid][:n, lo:hi]
+                y = np.repeat(np.repeat(win, f, axis=1), f, axis=2)
+                y = y[:, rr0 - lo * f: rr1 - lo * f]
+                _scatter(bufs[oid], y, n, axis, r0, r1)
+            reads = (xid,)
+        elif k == "concat":
+            xids = tuple(ids[x.name] for x in g.act_inputs(op))
+
+            def run(bufs, n, xids=xids, rr0=rr0, rr1=rr1, oid=oid,
+                    axis=axis, r0=r0, r1=r1):
+                y = np.concatenate([bufs[i][:n, rr0:rr1] for i in xids],
+                                   axis=-1)
+                _scatter(bufs[oid], y, n, axis, r0, r1)
+            reads = xids
+        elif k == "split":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            oids = tuple(ids[o] for o in op.outputs)
+            sections = a["sections"]
+
+            def run(bufs, n, xid=xid, oids=oids, sections=sections,
+                    rr0=rr0, rr1=rr1, axis=axis, r0=r0, r1=r1):
+                parts = np.split(bufs[xid][:n, rr0:rr1], sections, axis=-1)
+                for o, p in zip(oids, parts):
+                    _scatter(bufs[o], p, n, axis, r0, r1)
+            steps.append(PlanStep(label, (xid,), oids, run))
+            continue
+        else:  # pragma: no cover
+            raise NotImplementedError(k)
+
+        steps.append(PlanStep(label, reads, (oid,), run))
+
+    return steps, "step"

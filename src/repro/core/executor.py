@@ -11,6 +11,12 @@ data and asserts that the compiler's output is *correct*, not just fast:
     pure-numpy :func:`repro.core.ir.reference_execute` oracle.
 
 This is the repro analogue of running the compiled binary on silicon.
+
+It is the *validating* replay and the oracle the deployment-speed
+engine is checked against: :mod:`repro.core.execplan` lowers the same
+program once into a batch-vectorized :class:`ExecPlan` (no per-request
+bookkeeping) whose outputs must match this executor bit for bit
+(float32) or to the stored integer (int8/int4).
 """
 from __future__ import annotations
 
@@ -33,11 +39,20 @@ class ExecutionError(RuntimeError):
 
 @dataclass
 class ExecutionReport:
+    """Outcome of one replay.
+
+    ``ticks`` and ``ddr_bytes`` are **per-request** modeled quantities:
+    a batched plan execution (``batch > 1``) reports the schedule's
+    fetch/push bytes for *one* request, not the batch aggregate, so
+    DDR columns stay comparable across executors and batch sizes."""
+
     outputs: Dict[str, np.ndarray]
     max_err: float
     ticks: int
     ddr_bytes: int
     ok: bool = True
+    batch: int = 1
+    engine: str = "interp"            # "interp" | "plan"
 
 
 # --------------------------------------------------------------------------
@@ -265,7 +280,13 @@ def _run_step(g: Graph, tiling: TilingResult, tcm: _TcmState, op: Op,
         x = g.act_inputs(op)[0]
         ih = x.shape[0]
         if a["k"] == 0:
-            win = rows_of(x, 0, ih)
+            # canonical layout before the reduction: numpy's pairwise
+            # summation blocking follows the array's strides, and a
+            # gathered window may be a transposed einsum-output view —
+            # the mean must not depend on which tiles the window came
+            # from (the compiled replay plan reduces contiguous
+            # buffers and is asserted bit-exact against this path)
+            win = np.ascontiguousarray(rows_of(x, 0, ih))
             y = win.mean(axis=(0, 1), keepdims=True)
         else:
             kk, s = a["k"], a["stride"]
@@ -339,6 +360,28 @@ class ExecSemantics:
         """Max |got - want| accepted for one output tensor."""
         scale = float(np.max(np.abs(want)) + 1e-6) if want.size else 1.0
         return atol * max(1.0, scale)
+
+    # -- plan lowering hooks (repro.core.execplan) --------------------------
+    def plan_lowerer(self):
+        """Step-lowering function for :func:`repro.core.execplan.
+        lower_plan`.  The float path emits one kernel per program step
+        so plan replay is bit-exact with the interpreter."""
+        from .execplan import lower_float_steps
+        return lower_float_steps
+
+    def plan_dtype(self, tensor) -> np.dtype:
+        """Stored dtype of one tensor's arena buffer."""
+        return np.dtype(np.float32)
+
+    def encode_input(self, name: str, arr: np.ndarray) -> np.ndarray:
+        """Request values -> stored arena values (may be batched)."""
+        return np.asarray(arr, dtype=np.float32)
+
+    def plan_parity_tol(self, tensor: str) -> float:
+        """Accepted |plan - interpreter| on one decoded output.  The
+        float path is bit-exact; quantized semantics allow one step of
+        the output quantization grid (rounding-boundary flips)."""
+        return 0.0
 
 
 FLOAT_SEMANTICS = ExecSemantics()

@@ -535,6 +535,23 @@ def _apply_act(x: np.ndarray, act: str) -> np.ndarray:
     raise ValueError(act)
 
 
+#: memoized einsum contraction paths.  ``np.einsum(optimize=True)``
+#: re-derives the path on *every* call (~0.1 ms of pure Python) — the
+#: path depends only on the subscripts and operand shapes, and passing
+#: the precomputed path back executes the identical contraction, so the
+#: numerical result is bit-for-bit unchanged.
+_EINSUM_PATHS: Dict[tuple, list] = {}
+
+
+def cached_einsum(subs: str, *ops: np.ndarray) -> np.ndarray:
+    key = (subs,) + tuple(op.shape for op in ops)
+    path = _EINSUM_PATHS.get(key)
+    if path is None:
+        path = np.einsum_path(subs, *ops, optimize=True)[0]
+        _EINSUM_PATHS[key] = path
+    return np.einsum(subs, *ops, optimize=path)
+
+
 def _conv2d_ref(x: np.ndarray, w: np.ndarray, stride: int,
                 pad: Tuple[int, int, int, int], depthwise: bool
                 ) -> np.ndarray:
@@ -554,9 +571,9 @@ def _conv2d_ref(x: np.ndarray, w: np.ndarray, stride: int,
     if depthwise:
         # w (C, fh, fw, 1)
         ker = np.transpose(w[:, :, :, 0], (1, 2, 0))  # (fh, fw, C)
-        return np.einsum("hwijc,ijc->hwc", cols, ker, optimize=True)
-    return np.einsum("hwijc,oijc->hwo", cols.reshape(oh, ow, fh, fw, ic),
-                     w, optimize=True)
+        return cached_einsum("hwijc,ijc->hwc", cols, ker)
+    return cached_einsum("hwijc,oijc->hwo",
+                         cols.reshape(oh, ow, fh, fw, ic), w)
 
 
 def reference_execute(g: Graph, inputs: Dict[str, np.ndarray],

@@ -142,6 +142,9 @@ _STATS_ZERO = {"mem_hits": 0, "mem_misses": 0, "mem_evictions": 0,
                "disk_hits": 0, "disk_misses": 0, "disk_writes": 0,
                "disk_rejects": 0, "disk_evictions": 0}
 _CACHE_STATS = dict(_STATS_ZERO)
+#: graph fingerprints exempt from LRU eviction (Session admission
+#: policy: pinned hot models stay resident even under cap pressure).
+_PINNED_FPS: set = set()
 
 _UNSET = object()
 
@@ -202,7 +205,10 @@ def program_cache_info() -> Dict[str, int]:
                 "max_entries": _CACHE_MAX_ENTRIES,
                 "bytes": _CACHE_BYTES, "max_bytes": _CACHE_MAX_BYTES,
                 "disk_dir": _CACHE_DISK_DIR,
-                "disk_max_bytes": _CACHE_DISK_MAX_BYTES}
+                "disk_max_bytes": _CACHE_DISK_MAX_BYTES,
+                "pinned_fps": len(_PINNED_FPS),
+                "pinned_entries": sum(1 for k in _PROGRAM_CACHE
+                                      if k[0] in _PINNED_FPS)}
         info.update(_CACHE_STATS)
     disk_dir = info["disk_dir"]
     info["disk_entries"] = 0
@@ -226,9 +232,29 @@ def _evict_locked() -> None:
             len(_PROGRAM_CACHE) > _CACHE_MAX_ENTRIES or
             (_CACHE_MAX_BYTES is not None and
              _CACHE_BYTES > _CACHE_MAX_BYTES)):
-        _, (_, nb) = _PROGRAM_CACHE.popitem(last=False)
+        # LRU order, skipping pinned entries.  If only pinned entries
+        # remain the store is allowed to exceed its caps — pinning is an
+        # explicit operator decision and must never be silently undone.
+        victim = next((k for k in _PROGRAM_CACHE
+                       if k[0] not in _PINNED_FPS), None)
+        if victim is None:
+            break
+        _, nb = _PROGRAM_CACHE.pop(victim)
         _CACHE_BYTES -= nb
         _CACHE_STATS["mem_evictions"] += 1
+
+
+def program_cache_pin(fingerprint: str) -> None:
+    """Exempt every cache entry of this graph fingerprint (present or
+    future) from in-process LRU eviction."""
+    with _CACHE_LOCK:
+        _PINNED_FPS.add(fingerprint)
+
+
+def program_cache_unpin(fingerprint: str) -> None:
+    with _CACHE_LOCK:
+        _PINNED_FPS.discard(fingerprint)
+        _evict_locked()
 
 
 def _cache_get(key: Tuple) -> Optional[CompileResult]:

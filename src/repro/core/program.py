@@ -107,6 +107,28 @@ class NPUProgram:
     dm_penalty: int = 16              # delta of Eq. (8), cycles per DM job
     meta: Dict = field(default_factory=dict)
 
+    # ---- replay structure ----
+    def compute_steps(self) -> List[Tuple[ComputeJob, int, int, str]]:
+        """The program's compute jobs in tick order with their step
+        ranges resolved: ``(job, r0, r1, axis)``.  Legacy programs
+        (``r0 is None``) derive the range from the out tiles exactly
+        like the interpretive executor does — this is the step sequence
+        both the interpreter and the plan lowering replay."""
+        out: List[Tuple[ComputeJob, int, int, str]] = []
+        for t in self.ticks:
+            cj = t.compute
+            if cj is None:
+                continue
+            if cj.r0 is not None:
+                out.append((cj, cj.r0, cj.r1, cj.axis))
+            else:
+                axis = cj.out_tiles[0].axis
+                t0 = cj.out_tiles[0].tensor
+                r0 = min(tl.r0 for tl in cj.out_tiles if tl.tensor == t0)
+                r1 = max(tl.r1 for tl in cj.out_tiles if tl.tensor == t0)
+                out.append((cj, r0, r1, axis))
+        return out
+
     # ---- latency accounting (Eq. 8) ----
     def latency_cycles(self, overlap: Optional[bool] = None) -> int:
         """DAE programs overlap DMA with compute (max per tick, Eq. 8);

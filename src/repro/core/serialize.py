@@ -14,10 +14,16 @@ so a compiled program can leave the process that solved the CPs:
     JSON-able payload plus a dict of numpy arrays (arrays never pass
     through JSON, so float32/int8 values are bit-exact);
   * a container format — a single zip file holding ``meta.json``, one
-    ``<component>.json`` per payload and one ``arrays.npz``, with a
-    per-entry sha256 manifest in the meta.  A flipped byte, a truncated
-    file or a hand-edited entry fails the manifest check and raises
-    :class:`ArtifactError` — a bad artifact is rejected, never replayed.
+    ``<component>.json`` per payload and one *stored* (uncompressed)
+    ``arrays/<name>.npy`` member per array, with a per-entry sha256
+    manifest in the meta.  Stored members sit at fixed byte offsets, so
+    loaders can memory-map weights copy-on-write straight out of the
+    artifact (``read_artifact(mmap_arrays=True)``) — a fleet of serving
+    processes shares one page-cache copy per weight.  A flipped byte, a
+    truncated file or a hand-edited entry fails the manifest check and
+    raises :class:`ArtifactError` — a bad artifact is rejected, never
+    replayed.  Version-1 artifacts (one deflated ``arrays.npz``) still
+    load.
 
 Consumers: the two-tier compiled-program cache in
 :mod:`repro.core.pipeline` (program-only artifacts) and the public
@@ -42,8 +48,15 @@ from .npu import NPUConfig
 from .program import ComputeJob, DmaJob, NPUProgram, Tick, TileRef, V2PJob
 from .tiling import ComputeStep, TensorTiles, TilingResult
 
-#: bump when any payload layout changes incompatibly.
-ARTIFACT_VERSION = 1
+#: bump when any payload layout changes incompatibly.  Version 2 stores
+#: each numpy array as its own *uncompressed* ``arrays/<name>.npy`` zip
+#: member (v1 bundled them in one deflated ``arrays.npz``): stored
+#: members sit at a fixed byte offset inside the file, so weights can be
+#: memory-mapped copy-on-write straight out of the artifact — a fleet of
+#: serving processes shares one page-cache copy per weight instead of
+#: each copying every array into RAM.  Version 1 artifacts still load.
+ARTIFACT_VERSION = 2
+_SUPPORTED_VERSIONS = (1, 2)
 ARTIFACT_MAGIC = "repro-npu-artifact"
 
 
@@ -274,19 +287,31 @@ def _json_bytes(obj: Any) -> bytes:
                       separators=(",", ":")).encode("utf-8")
 
 
+def _npy_bytes(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.lib.format.write_array(buf, np.ascontiguousarray(arr),
+                              allow_pickle=False)
+    return buf.getvalue()
+
+
 def write_artifact(path: str, key: dict, payloads: Dict[str, Any],
                    arrays: Optional[Dict[str, np.ndarray]] = None) -> None:
     """Write one artifact file.  ``key`` is the caller's identity record
     (fingerprint / config / options digest / precision …); ``payloads``
     maps component name -> JSON-able payload; ``arrays`` holds every
-    numpy array referenced by the payloads."""
+    numpy array referenced by the payloads.
+
+    JSON payloads are deflated; arrays are **stored** (uncompressed) as
+    individual ``arrays/<name>.npy`` members so loaders can memory-map
+    them in place (see :func:`read_artifact`'s ``mmap_arrays``)."""
     entries: Dict[str, bytes] = {}
+    stored: set = set()
     for name, payload in payloads.items():
         entries[f"{name}.json"] = _json_bytes(payload)
-    if arrays:
-        buf = io.BytesIO()
-        np.savez(buf, **arrays)
-        entries["arrays.npz"] = buf.getvalue()
+    for name, arr in (arrays or {}).items():
+        member = f"arrays/{name}.npy"
+        entries[member] = _npy_bytes(arr)
+        stored.add(member)
     meta = {
         "magic": ARTIFACT_MAGIC,
         "version": ARTIFACT_VERSION,
@@ -297,16 +322,71 @@ def write_artifact(path: str, key: dict, payloads: Dict[str, Any],
     with zipfile.ZipFile(path, "w", zipfile.ZIP_DEFLATED) as zf:
         zf.writestr("meta.json", _json_bytes(meta))
         for name, blob in sorted(entries.items()):
-            zf.writestr(name, blob)
+            zf.writestr(name, blob,
+                        compress_type=zipfile.ZIP_STORED
+                        if name in stored else zipfile.ZIP_DEFLATED)
 
 
-def read_artifact(path: str) -> Tuple[dict, Dict[str, Any],
-                                      Dict[str, np.ndarray]]:
+def _member_data_offset(path: str, zinfo: zipfile.ZipInfo) -> int:
+    """Absolute byte offset of a stored member's data in the zip file.
+    The local file header is 30 bytes + filename + extra (the *local*
+    extra field can differ from the central directory's, so it is read
+    from the header itself)."""
+    with open(path, "rb") as f:
+        f.seek(zinfo.header_offset)
+        hdr = f.read(30)
+    if len(hdr) != 30 or hdr[:4] != b"PK\x03\x04":
+        raise ArtifactError(f"{path}: bad local header for "
+                            f"{zinfo.filename}")
+    fn_len = int.from_bytes(hdr[26:28], "little")
+    extra_len = int.from_bytes(hdr[28:30], "little")
+    return zinfo.header_offset + 30 + fn_len + extra_len
+
+
+def _mmap_npy_member(path: str, zinfo: zipfile.ZipInfo
+                     ) -> Optional[np.ndarray]:
+    """Map one stored ``.npy`` member copy-on-write.  Returns None when
+    the member cannot be mapped (compressed, exotic header, zero-size)
+    — the caller falls back to an in-memory read."""
+    if zinfo.compress_type != zipfile.ZIP_STORED:
+        return None
+    try:
+        data_off = _member_data_offset(path, zinfo)
+        with open(path, "rb") as f:
+            f.seek(data_off)
+            version = np.lib.format.read_magic(f)
+            if version == (1, 0):
+                shape, fortran, dtype = \
+                    np.lib.format.read_array_header_1_0(f)
+            elif version == (2, 0):
+                shape, fortran, dtype = \
+                    np.lib.format.read_array_header_2_0(f)
+            else:
+                return None
+            offset = f.tell()
+    except (OSError, ValueError, ArtifactError):
+        return None
+    if dtype.hasobject or int(np.prod(shape)) == 0:
+        return None
+    # mode "c" (copy-on-write): reads share the OS page cache across
+    # processes; an in-place write (e.g. a spill push-back during
+    # interpretive replay) dirties a private page instead of faulting
+    return np.memmap(path, dtype=dtype, mode="c", offset=offset,
+                     shape=shape, order="F" if fortran else "C")
+
+
+def read_artifact(path: str, mmap_arrays: bool = False
+                  ) -> Tuple[dict, Dict[str, Any], Dict[str, np.ndarray]]:
     """Read + integrity-check one artifact file.
 
     Returns ``(key, payloads, arrays)``.  Raises :class:`ArtifactError`
     on any corruption: bad zip, missing/extra entries vs the manifest,
-    sha256 mismatch, wrong magic or incompatible version."""
+    sha256 mismatch, wrong magic or incompatible version.
+
+    ``mmap_arrays=True`` maps version-2 stored ``.npy`` members
+    copy-on-write instead of materializing them in RAM.  Every member —
+    mapped or not — is still streamed through the full sha256 manifest
+    check first; mapping never weakens the integrity contract."""
     try:
         with zipfile.ZipFile(path, "r") as zf:
             try:
@@ -315,34 +395,52 @@ def read_artifact(path: str) -> Tuple[dict, Dict[str, Any],
                 raise ArtifactError(f"{path}: no meta.json")
             if meta.get("magic") != ARTIFACT_MAGIC:
                 raise ArtifactError(f"{path}: not a repro NPU artifact")
-            if meta.get("version") != ARTIFACT_VERSION:
+            version = meta.get("version")
+            if version not in _SUPPORTED_VERSIONS:
                 raise ArtifactError(
-                    f"{path}: artifact version {meta.get('version')} "
+                    f"{path}: artifact version {version} "
                     f"incompatible with {ARTIFACT_VERSION}")
             manifest = meta.get("manifest", {})
-            entries: Dict[str, bytes] = {}
             names = set(zf.namelist()) - {"meta.json"}
             if names != set(manifest):
                 raise ArtifactError(
                     f"{path}: entry set {sorted(names)} does not match "
                     f"manifest {sorted(manifest)}")
+            payloads: Dict[str, Any] = {}
+            arrays: Dict[str, np.ndarray] = {}
             for name, want in manifest.items():
+                is_array = name.startswith("arrays/") \
+                    and name.endswith(".npy")
+                if is_array and mmap_arrays:
+                    # stream the checksum; never hold the whole blob
+                    h = hashlib.sha256()
+                    with zf.open(name) as fh:
+                        for chunk in iter(lambda: fh.read(1 << 20), b""):
+                            h.update(chunk)
+                    if h.hexdigest() != want:
+                        raise ArtifactError(
+                            f"{path}: checksum mismatch on {name}")
+                    arr = _mmap_npy_member(path, zf.getinfo(name))
+                    if arr is None:
+                        arr = np.lib.format.read_array(
+                            io.BytesIO(zf.read(name)), allow_pickle=False)
+                    arrays[name[7:-4]] = arr
+                    continue
                 blob = zf.read(name)
                 got = hashlib.sha256(blob).hexdigest()
                 if got != want:
                     raise ArtifactError(
                         f"{path}: checksum mismatch on {name}")
-                entries[name] = blob
+                if is_array:
+                    arrays[name[7:-4]] = np.lib.format.read_array(
+                        io.BytesIO(blob), allow_pickle=False)
+                elif name == "arrays.npz":           # version-1 layout
+                    with np.load(io.BytesIO(blob)) as npz:
+                        arrays = {k: npz[k] for k in npz.files}
+                elif name.endswith(".json"):
+                    payloads[name[:-5]] = json.loads(blob)
     except zipfile.BadZipFile as e:
         raise ArtifactError(f"{path}: unreadable artifact ({e})") from e
-    payloads: Dict[str, Any] = {}
-    arrays: Dict[str, np.ndarray] = {}
-    for name, blob in entries.items():
-        if name == "arrays.npz":
-            with np.load(io.BytesIO(blob)) as npz:
-                arrays = {k: npz[k] for k in npz.files}
-        elif name.endswith(".json"):
-            payloads[name[:-5]] = json.loads(blob)
     return meta["key"], payloads, arrays
 
 

@@ -1,0 +1,318 @@
+"""Quantized plan lowering — fused, batch-vectorized integer kernels.
+
+The int8/int4 replay lowers through the same :class:`ExecPlan`
+machinery as the float path (:mod:`repro.core.execplan`) but coalesces
+to **one fused kernel per op** instead of one per program step: the
+interpreter's integer accumulation is order-exact, and every
+dequant→op→requant epilogue is elementwise, so a whole-op kernel
+reproduces the interpreter's per-window stored integers bit for bit
+while collapsing a tile-split op's dozens of Python steps into one.
+
+Everything per-request the interpreter re-derives is resolved once at
+lowering time:
+
+  * weights are pre-gathered and pre-cast — int64 kernels for the
+    conv/fc accumulators (depthwise kernels pre-transposed), int64
+    biases, and the fused rescale vector ``s_x * s_w[c]``;
+  * input zero points, per-tensor qparams, pad geometry and pooling
+    windows are baked into each closure;
+  * the batch dimension runs through every kernel (integer einsum /
+    matmul over ``(B, ...)``), so one replay serves N requests.
+
+Kernel bodies mirror :mod:`repro.quant.ptq`'s integer kernels
+(`q_conv`/`q_fc`/`q_maxpool`/...) exactly — same pad values, same
+int32/int64 accumulation, same float32 epilogue expressions — so plan
+outputs match the interpretive replay's stored integers (the property
+tests in ``tests/test_execplan.py`` pin this at batch 1/3/8 and on
+ragged tails).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.execplan import PlanStep
+from repro.core.ir import Graph, _apply_act
+from repro.core.program import NPUProgram
+from repro.core.tiling import TilingResult
+
+from .ptq import _NEG_SENTINEL, QuantizedModel
+from .qparams import dequantize, quantize
+
+
+def lower_quant_steps(qm: QuantizedModel, g: Graph, tiling: TilingResult,
+                      program: NPUProgram, weights: Dict[str, np.ndarray],
+                      ids: Dict[str, int]) -> Tuple[List[PlanStep], str]:
+    """One fused integer kernel per op, in topological order."""
+    steps: List[PlanStep] = []
+
+    for op in g.topo_ops():
+        a = op.attrs
+        k = op.kind
+        oid = ids[op.outputs[0]]
+        out_qp = qm.qp(op.outputs[0])
+        label = f"{op.name}@op"
+
+        if k in ("conv", "dwconv"):
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            s = a["stride"]
+            pt, pb, pl, pr = a["pad"]
+            fh, fw = a["k"]
+            dw = k == "dwconv"
+            in_qp = qm.qp(x.name)
+            zp = int(np.atleast_1d(in_qp.zero_point)[0])
+            w_q = qm.qweights[op.inputs[1]]
+            # Accumulate in float64 through BLAS: every operand is an
+            # integer (|x - zp| <= 255, |w| <= 127, dot lengths << 2^35),
+            # so every product and partial sum is an exactly-
+            # representable integer < 2^53 — the result equals the
+            # interpreter's int32/int64 accumulation bit for bit,
+            # regardless of summation order, and dgemm vectorizes
+            # across the batch.  The zero point is folded into the bias
+            # ((x - zp)·W == x·W - zp·ΣW), and padding pads the *stored*
+            # int8 values with zp, so no full-size subtract pass runs
+            # per request.
+            if dw:
+                kerf = np.ascontiguousarray(
+                    np.transpose(w_q[:, :, :, 0], (1, 2, 0))
+                    .astype(np.float64).reshape(fh * fw, -1))
+                wsum = kerf.sum(axis=0)                 # (C,)
+                dot_len = fh * fw
+            else:
+                kerf = np.ascontiguousarray(
+                    w_q.astype(np.float64).reshape(w_q.shape[0], -1).T)
+                wsum = kerf.sum(axis=0)                 # (outC,)
+                dot_len = kerf.shape[0]
+            biasf = qm.qweights[op.inputs[2]].astype(np.float64) \
+                if len(op.inputs) > 2 else np.float64(0.0)
+            biasf = biasf - zp * wsum
+            # float32 is exact for integer accumulation while every
+            # partial sum stays below 2^24; short dots (depthwise taps,
+            # small-channel pointwise) qualify and run at half the
+            # memory bandwidth of float64.  |x - zp| <= 255, |w| <= 127.
+            max_bias = float(np.max(np.abs(np.atleast_1d(biasf))))
+            if dot_len * 255 * 127 + max_bias < 2.0 ** 24:
+                fdt = np.float32
+            else:
+                fdt = np.float64
+            kerf = kerf.astype(fdt)
+            biasf = np.asarray(biasf, dtype=fdt)
+            s_x = float(np.atleast_1d(in_qp.scale)[0])
+            s_w = np.atleast_1d(qm.qp(op.inputs[1]).scale) \
+                .astype(np.float32)
+            sc = s_x * s_w
+            act = a.get("act", "none")
+            oh, ow = g.tensors[op.outputs[0]].shape[:2]
+
+            pointwise = fh == 1 and fw == 1 and not dw \
+                and (pt, pb, pl, pr) == (0, 0, 0, 0)
+
+            def run(bufs, n, xid=xid, oid=oid, zp=zp, pt=pt, pb=pb,
+                    pl=pl, pr=pr, fh=fh, fw=fw, s=s, kerf=kerf,
+                    biasf=biasf, sc=sc, act=act, out_qp=out_qp,
+                    dw=dw, oh=oh, ow=ow, pointwise=pointwise, fdt=fdt):
+                xq = bufs[xid][:n]
+                if pointwise:
+                    # 1x1 stride-s conv == strided gemm, no im2col
+                    xs_ = xq[:, ::s, ::s, :] if s != 1 else xq
+                    acc = xs_.reshape(-1, xs_.shape[-1]).astype(fdt) @ kerf
+                    acc = acc.reshape(n, oh, ow, -1)
+                else:
+                    xp = np.pad(xq, ((0, 0), (pt, pb), (pl, pr), (0, 0)),
+                                constant_values=zp)
+                    C = xp.shape[-1]
+                    if dw:
+                        # tap-by-tap accumulation straight off the padded
+                        # input (no im2col materialization)
+                        xpf = xp.astype(fdt)
+                        acc = np.zeros((n, oh, ow, C), dtype=fdt)
+                        for i in range(fh):
+                            for j in range(fw):
+                                acc += xpf[:, i:i + oh * s:s,
+                                           j:j + ow * s:s, :] \
+                                    * kerf[i * fw + j]
+                    else:
+                        cols = np.empty((n, oh, ow, fh * fw, C),
+                                        dtype=fdt)
+                        for i in range(fh):
+                            for j in range(fw):
+                                cols[:, :, :, i * fw + j, :] = \
+                                    xp[:, i:i + oh * s:s,
+                                       j:j + ow * s:s, :]
+                        acc = cols.reshape(n * oh * ow, fh * fw * C) @ kerf
+                        acc = acc.reshape(n, oh, ow, -1)
+                acc += biasf
+                y = acc.astype(np.float32) * sc
+                bufs[oid][:n] = quantize(_apply_act(y, act), out_qp)
+            reads = (xid,)
+        elif k == "fc":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            in_qp = qm.qp(x.name)
+            zp = int(np.atleast_1d(in_qp.zero_point)[0])
+            # float64 dgemm accumulation — exact for integer operands
+            # (see the conv kernel note)
+            wT = np.ascontiguousarray(
+                qm.qweights[op.inputs[1]][:, 0, 0, :]
+                .astype(np.float64).T)
+            biasf = qm.qweights[op.inputs[2]].astype(np.float64) \
+                if len(op.inputs) > 2 else np.float64(0.0)
+            biasf = biasf - zp * wT.sum(axis=0)   # zp folded (exact ints)
+            s_x = float(np.atleast_1d(in_qp.scale)[0])
+            s_w = np.atleast_1d(qm.qp(op.inputs[1]).scale) \
+                .astype(np.float32)
+            sc = s_x * s_w
+            act = a.get("act", "none")
+
+            def run(bufs, n, xid=xid, oid=oid, wT=wT,
+                    biasf=biasf, sc=sc, act=act, out_qp=out_qp):
+                xi = bufs[xid][:n].reshape(n, -1).astype(np.float64)
+                acc = xi @ wT
+                acc += biasf
+                y = acc.astype(np.float32) * sc
+                q = quantize(_apply_act(y, act), out_qp)
+                bufs[oid][:n] = q.reshape(n, 1, 1, -1)
+            reads = (xid,)
+        elif k in ("add", "mul"):
+            xs = g.act_inputs(op)
+            i0, i1 = ids[xs[0].name], ids[xs[1].name]
+            qp0, qp1 = qm.qp(xs[0].name), qm.qp(xs[1].name)
+            act = a.get("act", "none")
+            is_add = k == "add"
+
+            def run(bufs, n, i0=i0, i1=i1, qp0=qp0, qp1=qp1, act=act,
+                    is_add=is_add, oid=oid, out_qp=out_qp):
+                a0 = dequantize(bufs[i0][:n], qp0)
+                a1 = dequantize(bufs[i1][:n], qp1)
+                y = _apply_act(a0 + a1, act) if is_add else a0 * a1
+                bufs[oid][:n] = quantize(y, out_qp)
+            reads = (i0, i1)
+        elif k == "scalar":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            in_qp = qm.qp(x.name)
+            v = a["value"]
+            sop = a["op"]
+
+            def run(bufs, n, xid=xid, in_qp=in_qp, v=v, sop=sop,
+                    oid=oid, out_qp=out_qp):
+                xv = dequantize(bufs[xid][:n], in_qp)
+                y = {"add": xv + v, "mul": xv * v, "div": xv / v}[sop]
+                bufs[oid][:n] = quantize(y, out_qp)
+            reads = (xid,)
+        elif k == "act":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            in_qp = qm.qp(x.name)
+            act = a["act"]
+
+            def run(bufs, n, xid=xid, in_qp=in_qp, act=act, oid=oid,
+                    out_qp=out_qp):
+                y = _apply_act(dequantize(bufs[xid][:n], in_qp), act)
+                bufs[oid][:n] = quantize(y, out_qp)
+            reads = (xid,)
+        elif k == "maxpool":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            in_qp = qm.qp(x.name)
+            kk, s = a["k"], a["stride"]
+            pt, pb, pl, pr = a["pad"]
+
+            def run(bufs, n, xid=xid, in_qp=in_qp, kk=kk, s=s, pt=pt,
+                    pb=pb, pl=pl, pr=pr, oid=oid, out_qp=out_qp):
+                xp = np.pad(bufs[xid][:n].astype(np.int32),
+                            ((0, 0), (pt, pb), (pl, pr), (0, 0)),
+                            constant_values=_NEG_SENTINEL)
+                H, W = xp.shape[1:3]
+                oh = (H - kk) // s + 1
+                ow = (W - kk) // s + 1
+                y = np.full((n, oh, ow, xp.shape[-1]), _NEG_SENTINEL,
+                            dtype=np.int32)
+                for i in range(kk):
+                    for j in range(kk):
+                        y = np.maximum(
+                            y, xp[:, i:i + oh * s:s, j:j + ow * s:s, :])
+                bufs[oid][:n] = quantize(dequantize(y, in_qp), out_qp)
+            reads = (xid,)
+        elif k == "avgpool":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            in_qp = qm.qp(x.name)
+            zp = int(np.atleast_1d(in_qp.zero_point)[0])
+            s_x = float(np.atleast_1d(in_qp.scale)[0])
+            if a["k"] == 0:
+                def run(bufs, n, xid=xid, zp=zp, s_x=s_x, oid=oid,
+                        out_qp=out_qp):
+                    xq = bufs[xid][:n]
+                    acc = (xq.astype(np.int64) - zp).sum(
+                        axis=(1, 2), keepdims=True)
+                    m = xq.shape[1] * xq.shape[2]
+                    bufs[oid][:n] = quantize(
+                        acc.astype(np.float32) * (s_x / m), out_qp)
+            else:
+                kk, s = a["k"], a["stride"]
+                pt, pb, pl, pr = a["pad"]
+
+                def run(bufs, n, xid=xid, zp=zp, s_x=s_x, kk=kk, s=s,
+                        pt=pt, pb=pb, pl=pl, pr=pr, oid=oid,
+                        out_qp=out_qp):
+                    xi = bufs[xid][:n].astype(np.int64) - zp
+                    xp = np.pad(xi, ((0, 0), (pt, pb), (pl, pr), (0, 0)))
+                    H, W = xp.shape[1:3]
+                    oh = (H - kk) // s + 1
+                    ow = (W - kk) // s + 1
+                    acc = np.zeros((n, oh, ow, xp.shape[-1]),
+                                   dtype=np.int64)
+                    for i in range(kk):
+                        for j in range(kk):
+                            acc += xp[:, i:i + oh * s:s, j:j + ow * s:s, :]
+                    bufs[oid][:n] = quantize(
+                        acc.astype(np.float32) * (s_x / (kk * kk)), out_qp)
+            reads = (xid,)
+        elif k == "resize":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            in_qp = qm.qp(x.name)
+            f = a["factor"]
+
+            def run(bufs, n, xid=xid, in_qp=in_qp, f=f, oid=oid,
+                    out_qp=out_qp):
+                rep = np.repeat(np.repeat(bufs[xid][:n], f, axis=1),
+                                f, axis=2)
+                bufs[oid][:n] = quantize(dequantize(rep, in_qp), out_qp)
+            reads = (xid,)
+        elif k == "concat":
+            xs = g.act_inputs(op)
+            xids = tuple(ids[x.name] for x in xs)
+            qps = tuple(qm.qp(x.name) for x in xs)
+
+            def run(bufs, n, xids=xids, qps=qps, oid=oid, out_qp=out_qp):
+                y = np.concatenate(
+                    [dequantize(bufs[i][:n], qp)
+                     for i, qp in zip(xids, qps)], axis=-1)
+                bufs[oid][:n] = quantize(y, out_qp)
+            reads = xids
+        elif k == "split":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            in_qp = qm.qp(x.name)
+            oids = tuple(ids[o] for o in op.outputs)
+            oqps = tuple(qm.qp(o) for o in op.outputs)
+            sections = a["sections"]
+
+            def run(bufs, n, xid=xid, in_qp=in_qp, oids=oids, oqps=oqps,
+                    sections=sections):
+                parts = np.split(dequantize(bufs[xid][:n], in_qp),
+                                 sections, axis=-1)
+                for o, qp, p in zip(oids, oqps, parts):
+                    bufs[o][:n] = quantize(p, qp)
+            steps.append(PlanStep(label, (xid,), oids, run))
+            continue
+        else:  # pragma: no cover
+            raise NotImplementedError(k)
+
+        steps.append(PlanStep(label, reads, (oid,), run))
+
+    return steps, "op"

@@ -68,6 +68,28 @@ class QuantSemantics(ExecSemantics):
             sem.float_atol_steps = float(meta["float_atol_steps"])
         return sem
 
+    # -- plan lowering hooks (repro.core.execplan) --------------------------
+    def plan_lowerer(self):
+        """Quantized plans coalesce to one fused integer kernel per op
+        (integer accumulation is order-exact, so whole-op kernels
+        reproduce the per-step interpreter's stored integers)."""
+        import functools
+
+        from .execplan import lower_quant_steps
+        return functools.partial(lower_quant_steps, self.qm)
+
+    def plan_dtype(self, tensor) -> np.dtype:
+        # activations are stored int8 (the same bytes the interpreter's
+        # DRAM/TCM hold); params never enter the arena — they are baked
+        # into the kernels at lowering time
+        return np.dtype(np.int8)
+
+    def encode_input(self, name: str, arr) -> np.ndarray:
+        return quantize(np.asarray(arr, np.float32), self.qm.qp(name))
+
+    def plan_parity_tol(self, tensor: str) -> float:
+        return self._scale(tensor) + 1e-7   # one output quant step
+
     # -- replay hooks -------------------------------------------------------
     def dram_init(self, g: Graph, inputs, weights) -> Dict[str, np.ndarray]:
         dram: Dict[str, np.ndarray] = {}

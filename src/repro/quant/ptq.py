@@ -32,7 +32,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.ir import Graph, QParams, _apply_act, reference_execute
+from repro.core.ir import (Graph, QParams, _apply_act, cached_einsum,
+                           reference_execute)
 
 from .observers import PerChannelMinMaxObserver, make_observer
 from .qparams import (dequantize, pack_int4, qparams_from_range,
@@ -227,10 +228,10 @@ def _conv2d_int(xi: np.ndarray, w: np.ndarray, stride: int,
                                      j:j + ow * stride:stride, :]
     if depthwise:
         ker = np.transpose(w[:, :, :, 0], (1, 2, 0)).astype(np.int64)
-        return np.einsum("hwijc,ijc->hwc", cols, ker, optimize=True)
-    return np.einsum("hwijc,oijc->hwo",
-                     cols.reshape(oh, ow, fh, fw, ic),
-                     w.astype(np.int64), optimize=True)
+        return cached_einsum("hwijc,ijc->hwc", cols, ker)
+    return cached_einsum("hwijc,oijc->hwo",
+                         cols.reshape(oh, ow, fh, fw, ic),
+                         w.astype(np.int64))
 
 
 def q_conv(xq: np.ndarray, in_qp: QParams, w_q: np.ndarray,

@@ -48,6 +48,17 @@ def quantize(x: np.ndarray, qp: QParams) -> np.ndarray:
     is what the DMA byte accounting charges)."""
     x = np.asarray(x, dtype=np.float32)
     s, z = _broadcast(qp, x.ndim)
+    if s.ndim == 0:
+        # per-tensor hot path: python scalars keep the whole pipeline in
+        # float32 (a 0-d int32 zero point would promote the add — and
+        # every pass after it — to float64).  Bit-identical: round(x/s)
+        # is integer-valued, the add is exact below 2^24, and anything
+        # past 2^24 is far outside the clip range either way.
+        q = x / float(s)
+        np.round(q, out=q)
+        q += int(z)
+        np.clip(q, qp.qmin, qp.qmax, out=q)
+        return q.astype(np.int32 if qp.bits > 8 else np.int8)
     q = np.round(x / s) + z
     q = np.clip(q, qp.qmin, qp.qmax)
     return q.astype(np.int32 if qp.bits > 8 else np.int8)

@@ -1,0 +1,449 @@
+"""Compiled replay engine: ExecPlan lowering parity vs the interpretive
+executor (bit-exact float32 / one-quant-step int8 and int4, batched and
+ragged), plan-cache keying, Session micro-batching, program-cache
+pinning, and the mmap-friendly artifact layout."""
+import os
+import zipfile
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core import (program_cache_clear, program_cache_configure,
+                        program_cache_info, program_cache_pin,
+                        program_cache_unpin)
+from repro.core.execplan import assign_slots, lower_plan
+from repro.core.executor import ExecutionError, execute
+from repro.core.ir import GraphBuilder
+from repro.core.serialize import ArtifactError
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache():
+    saved = program_cache_info()
+    program_cache_clear()
+    program_cache_configure(max_entries=64, max_bytes=None, disk_dir=None)
+    yield
+    program_cache_clear()
+    program_cache_configure(max_entries=saved["max_entries"],
+                            max_bytes=saved["max_bytes"],
+                            disk_dir=saved["disk_dir"])
+
+
+# --------------------------------------------------------------------------
+# randomized graph generator (deterministic per seed)
+# --------------------------------------------------------------------------
+
+
+def random_graph(seed: int):
+    """A random small conv net exercising conv/dwconv/add/mul/pool/
+    resize/concat/split/scalar/act/fc on a deterministic draw."""
+    rng = np.random.default_rng(seed)
+    b = GraphBuilder(f"rand{seed}", seed=seed)
+    h = int(rng.choice([12, 16, 20]))
+    c = int(rng.choice([4, 8]))
+    x = b.input((h, h, c))
+    x = b.conv(x, int(rng.choice([8, 12])), k=3,
+               act=str(rng.choice(["relu", "relu6", "none"])))
+    for _ in range(int(rng.integers(2, 5))):
+        kind = rng.choice(["conv", "dwconv", "add", "pool", "scalar",
+                           "act", "split", "resize"])
+        cur_c = b.g.tensors[x].hwc[2]
+        if kind == "conv":
+            x = b.conv(x, int(rng.choice([8, 12, 16])),
+                       k=int(rng.choice([1, 3])),
+                       s=int(rng.choice([1, 2])),
+                       act=str(rng.choice(["relu", "silu", "none"])))
+        elif kind == "dwconv":
+            x = b.dwconv(x, k=3, act="relu6")
+        elif kind == "add":
+            y = b.dwconv(x, k=3)
+            x = b.add(x, y, act=str(rng.choice(["relu", "none"])))
+        elif kind == "pool" and b.g.tensors[x].hwc[0] >= 4:
+            x = b.maxpool(x, k=2)
+        elif kind == "scalar":
+            x = b.scalar(x, str(rng.choice(["add", "mul"])), 0.5)
+        elif kind == "act":
+            x = b.activation(x, str(rng.choice(["hswish", "sigmoid"])))
+        elif kind == "split" and cur_c % 2 == 0:
+            lo, hi = b.split(x, 2)
+            x = b.concat([lo, hi])
+        elif kind == "resize" and b.g.tensors[x].hwc[0] <= 12:
+            x = b.resize(x, 2)
+    x = b.global_avgpool(x)
+    x = b.fc(x, 7)
+    b.mark_output(x)
+    return b.build(), b
+
+
+def _inputs(g, n, seed=0):
+    rng = np.random.default_rng(seed + 1000)
+    t = g.inputs[0]
+    return [rng.normal(size=t.shape).astype(np.float32) for _ in range(n)]
+
+
+def _interp_outputs(m, x):
+    return m(x, engine="interp")
+
+
+# --------------------------------------------------------------------------
+# parity properties: plan replay vs the interpretive executor
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_plan_float32_bit_exact_randomized(seed):
+    m = api.compile(random_graph(seed), cache=False)
+    for batch in (1, 3, 8):
+        xs = _inputs(m.graph, batch, seed)
+        plan_outs = m.run_many(xs)
+        for x, got in zip(xs, plan_outs):
+            want = _interp_outputs(m, x)
+            for name in want:
+                assert np.array_equal(got[name], want[name]), \
+                    f"seed {seed} batch {batch}: {name} not bit-exact"
+
+
+@pytest.mark.fast
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("weight_dtype", ["int8", "int4"])
+def test_plan_quant_one_step_exact_randomized(seed, weight_dtype):
+    m = api.compile(random_graph(seed), precision="int8",
+                    weight_dtype=weight_dtype, cache=False)
+    for batch in (1, 3, 8):
+        xs = _inputs(m.graph, batch, seed)
+        plan_outs = m.run_many(xs)
+        for x, got in zip(xs, plan_outs):
+            want = _interp_outputs(m, x)
+            for name in want:
+                err = float(np.max(np.abs(got[name] - want[name])))
+                tol = m.semantics.plan_parity_tol(name)
+                assert err <= tol, (
+                    f"seed {seed} batch {batch} [{weight_dtype}]: "
+                    f"{name} err {err} > one quant step {tol}")
+
+
+@pytest.mark.fast
+def test_plan_ragged_final_batch():
+    """5 requests through bucket-8 plans: the ragged tail must match
+    per-sample interpretive replay exactly."""
+    m = api.compile(random_graph(3), precision="int8", cache=False)
+    xs = _inputs(m.graph, 5, 3)
+    outs = m.run_many(xs)
+    assert len(outs) == 5
+    for x, got in zip(xs, outs):
+        want = _interp_outputs(m, x)
+        for name in want:
+            err = float(np.max(np.abs(got[name] - want[name])))
+            assert err <= m.semantics.plan_parity_tol(name)
+
+
+@pytest.mark.fast
+def test_plan_batched_call_matches_per_sample():
+    m = api.compile(random_graph(1), cache=False)
+    xs = np.stack(_inputs(m.graph, 3, 1))
+    batched = m(xs)                       # plan engine, batch axis
+    for i in range(3):
+        want = _interp_outputs(m, xs[i])
+        for name in want:
+            assert np.array_equal(batched[name][i], want[name])
+
+
+@pytest.mark.fast
+def test_plan_arena_reuse_no_stale_state():
+    """Back-to-back different requests through one plan instance —
+    arena slot reuse must never leak values between requests."""
+    m = api.compile(random_graph(2), precision="int8", cache=False)
+    xs = _inputs(m.graph, 4, 2)
+    first = [m(x) for x in xs]
+    again = [m(x) for x in xs]            # same plan, reused arena
+    for a, b in zip(first, again):
+        for name in a:
+            assert np.array_equal(a[name], b[name])
+
+
+@pytest.mark.fast
+def test_verify_exercises_both_paths():
+    m = api.compile(random_graph(0), precision="int8", cache=False)
+    x = _inputs(m.graph, 1, 0)[0]
+    rep = m.verify(x)
+    assert rep.ok and rep.engine == "interp"
+    assert m.plan_cache_info()["builds"] >= 1   # plan path really ran
+    # a poisoned plan kernel must be caught by verify's parity assert
+    plan = m.plan_for(1)
+    orig = plan.steps[-1].run
+
+    def poisoned(bufs, n):
+        orig(bufs, n)
+        out_id = plan.ids[m.graph.outputs[0].name]
+        bufs[out_id][:n] += 16            # > one quant step
+    plan.steps[-1] = plan.steps[-1].__class__(
+        plan.steps[-1].label, plan.steps[-1].reads,
+        plan.steps[-1].writes, poisoned)
+    with pytest.raises(ExecutionError):
+        m.verify(x)
+
+
+# --------------------------------------------------------------------------
+# plan cache keying + DDR accounting
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_plan_cache_keys_dtype_bucket_fingerprint():
+    mf = api.compile(random_graph(0), cache=False)
+    mq = api.compile(random_graph(0), precision="int8", cache=False)
+    xs = _inputs(mf.graph, 3, 0)
+    mf(xs[0]); mf.run_many(xs)            # buckets 1 and 4
+    mq(xs[0])
+    f_keys = mf.plan_cache_info()["plans"]
+    q_keys = mq.plan_cache_info()["plans"]
+    assert {k[1] for k in f_keys} == {"float32"}
+    assert {k[1] for k in q_keys} == {"int8"}
+    assert {k[2] for k in f_keys} == {1, 4}   # batch-3 -> bucket 4
+    # quantization changes the graph fingerprint -> different plan keys
+    assert {k[0] for k in f_keys}.isdisjoint({k[0] for k in q_keys})
+    # bucket reuse is a hit, not a rebuild
+    before = mf.plan_cache_info()["builds"]
+    mf.run_many(xs)
+    assert mf.plan_cache_info()["builds"] == before
+
+
+@pytest.mark.fast
+def test_plan_report_ddr_is_per_request():
+    m = api.compile(random_graph(1), precision="int8", cache=False)
+    x = _inputs(m.graph, 1, 1)[0]
+    interp_rep = execute(m.program, m.graph, m.tiling,
+                         {m.graph.inputs[0].name: x}, m.weights,
+                         check=False, semantics=m.semantics)
+    plan = m.plan_for(8)
+    rep = plan.execution_report({}, n=8)
+    assert rep.batch == 8 and rep.engine == "plan"
+    # batched plan reports the same per-request DDR as the interpreter
+    assert rep.ddr_bytes == interp_rep.ddr_bytes
+    assert rep.ticks == interp_rep.ticks
+
+
+@pytest.mark.fast
+def test_assign_slots_reuses_disjoint_lifetimes():
+    sizes = [100, 100, 100]
+    # 0 and 2 are disjoint in time -> may share; 1 overlaps both
+    offsets, total = assign_slots(sizes, [(0, 2), (1, 5), (3, 6)])
+    assert offsets[0] == offsets[2]
+    assert offsets[1] != offsets[0]
+    assert total < sum(128 for _ in sizes)
+    # overlapping intervals never share bytes
+    offsets, _ = assign_slots(sizes, [(0, 3), (1, 5), (2, 6)])
+    assert len({offsets[0], offsets[1], offsets[2]}) == 3
+
+
+# --------------------------------------------------------------------------
+# Session: micro-batching queue + admission policy
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_session_run_many_and_queue():
+    sess = api.Session(max_batch=4)
+    sess.add(random_graph(0), name="m0", precision="int8")
+    sess.add(random_graph(1), name="m1")
+    xs = _inputs(sess["m0"].graph, 6, 0)
+    outs = sess.run_many("m0", xs)
+    assert len(outs) == 6
+    st = sess.stats()["models"]["m0"]
+    assert st["batches"] == 2 and st["batched_requests"] == 6
+    assert st["max_batch_seen"] == 4
+
+    t0 = sess.submit("m0", xs[0])
+    t1 = sess.submit("m1", _inputs(sess["m1"].graph, 1, 1)[0])
+    t2 = sess.submit("m0", xs[1])
+    assert sess.queue_depth == 3 and not t0.done
+    r0 = t0.result()                      # auto-flush
+    assert t1.done and t2.done and sess.queue_depth == 0
+    want = sess["m0"](xs[0], engine="interp")
+    for name in want:
+        err = float(np.max(np.abs(r0[name] - want[name])))
+        assert err <= sess["m0"].semantics.plan_parity_tol(name)
+    with pytest.raises(KeyError):
+        sess.submit("nope", xs[0])
+
+
+@pytest.mark.fast
+def test_session_flush_failure_isolated_per_model():
+    """A bad request failing one model's batch must fail only that
+    model's tickets; other models' queued work still executes."""
+    sess = api.Session(max_batch=4)
+    sess.add(random_graph(0), name="good", precision="int8")
+    sess.add(random_graph(1), name="bad")
+    ok_x = _inputs(sess["good"].graph, 1, 0)[0]
+    bad_x = np.zeros((3, 3, 1), dtype=np.float32)   # wrong shape
+    t_bad = sess.submit("bad", bad_x)
+    t_good = sess.submit("good", ok_x)
+    with pytest.raises(Exception):
+        sess.flush()
+    # the failed batch's ticket re-raises; the good one still ran or
+    # remains queued and resolves on its own flush
+    with pytest.raises(Exception):
+        t_bad.result()
+    out = t_good.result()
+    want = sess["good"](ok_x, engine="interp")
+    for name in want:
+        err = float(np.max(np.abs(out[name] - want[name])))
+        assert err <= sess["good"].semantics.plan_parity_tol(name)
+    assert sess.queue_depth == 0
+
+
+@pytest.mark.fast
+def test_plan_buckets_share_lowered_steps():
+    """Step lowering (weight constants included) runs once per model;
+    each batch bucket only adds its own arena."""
+    m = api.compile(random_graph(0), precision="int8", cache=False)
+    p1 = m.plan_for(1)
+    p8 = m.plan_for(8)
+    assert p1.steps is p8.steps          # shared, not re-lowered
+    assert p1.capacity == 1 and p8.capacity == 8
+
+
+@pytest.mark.fast
+def test_session_pin_survives_eviction():
+    program_cache_configure(max_entries=1)
+    sess = api.Session()
+    sess.add(random_graph(0), name="hot", precision="int8", pin=True)
+    assert sess.pinned() == ["hot"]
+    info = program_cache_info()
+    assert info["pinned_entries"] == 1 and info["pinned_fps"] == 1
+    # a second compile would evict the only entry — but it is pinned,
+    # so the new entry is the one turned away at the cap instead
+    sess.add(random_graph(1), name="cold")
+    info = program_cache_info()
+    assert info["pinned_entries"] == 1
+    # pinned program still served from memory
+    m = api.compile(random_graph(0), precision="int8")
+    assert m.cache_tier == "memory"
+    sess.unpin("hot")
+    assert program_cache_info()["pinned_fps"] == 0
+    program_cache_unpin("nonexistent")    # no-op, never raises
+
+
+@pytest.mark.fast
+def test_pin_unpin_eviction_order():
+    program_cache_configure(max_entries=2)
+    m0 = api.compile(random_graph(0))
+    program_cache_pin(m0.fingerprint)
+    api.compile(random_graph(1))
+    api.compile(random_graph(2))          # evicts graph 1, not pinned 0
+    assert api.compile(random_graph(0)).cache_tier == "memory"
+    assert api.compile(random_graph(2)).cache_tier == "memory"
+    program_cache_unpin(m0.fingerprint)
+
+
+# --------------------------------------------------------------------------
+# mmap-friendly artifact layout (version 2)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_artifact_v2_mmap_round_trip(tmp_path):
+    m = api.compile(random_graph(0), precision="int8", cache=False)
+    p = str(tmp_path / "m.rpa")
+    m.save(p)
+    # weight members are STORED (uncompressed) .npy files
+    with zipfile.ZipFile(p) as zf:
+        members = [i for i in zf.infolist()
+                   if i.filename.startswith("arrays/")]
+        assert members and all(i.compress_type == zipfile.ZIP_STORED
+                               for i in members)
+    m2 = api.CompiledModel.load(p, mmap=True)
+    assert any(isinstance(w, np.memmap) for w in m2.weights.values())
+    x = _inputs(m.graph, 1, 0)[0]
+    a, b = m(x), m2(x)
+    for name in a:
+        assert np.array_equal(a[name], b[name])
+    # interpretive replay works off mmapped weights too (copy-on-write)
+    assert m2.verify(x).ok
+    # non-mmap load still bit-exact
+    m3 = api.CompiledModel.load(p)
+    c = m3(x)
+    for name in a:
+        assert np.array_equal(a[name], c[name])
+
+
+@pytest.mark.fast
+def test_artifact_v2_corruption_still_rejected(tmp_path):
+    m = api.compile(random_graph(1), cache=False)
+    p = str(tmp_path / "m.rpa")
+    m.save(p)
+    # flip one byte inside a *stored* array member
+    with zipfile.ZipFile(p) as zf:
+        info = next(i for i in zf.infolist()
+                    if i.filename.startswith("arrays/"))
+        data_start = info.header_offset + 30 + len(info.filename)
+    blob = bytearray(open(p, "rb").read())
+    blob[data_start + 100] ^= 0xFF
+    open(p, "wb").write(bytes(blob))
+    with pytest.raises(ArtifactError):
+        api.CompiledModel.load(p, mmap=True)
+    with pytest.raises(ArtifactError):
+        api.CompiledModel.load(p)
+
+
+@pytest.mark.fast
+def test_artifact_v1_backward_compatible(tmp_path):
+    """A version-1 artifact (single deflated arrays.npz) still loads."""
+    import hashlib
+    import io
+    import json as _json
+
+    from repro.core import serialize
+
+    m = api.compile(random_graph(2), cache=False)
+    p2 = str(tmp_path / "v2.rpa")
+    m.save(p2)
+    # rewrite as a v1 container: same payloads, arrays bundled in npz
+    key, payloads, arrays = serialize.read_artifact(p2)
+    entries = {f"{n}.json": _json.dumps(
+        pl, sort_keys=True, separators=(",", ":")).encode()
+        for n, pl in payloads.items()}
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    entries["arrays.npz"] = buf.getvalue()
+    meta = {"magic": serialize.ARTIFACT_MAGIC, "version": 1, "key": key,
+            "manifest": {n: hashlib.sha256(b).hexdigest()
+                         for n, b in sorted(entries.items())}}
+    p1 = str(tmp_path / "v1.rpa")
+    with zipfile.ZipFile(p1, "w", zipfile.ZIP_DEFLATED) as zf:
+        zf.writestr("meta.json", _json.dumps(
+            meta, sort_keys=True, separators=(",", ":")).encode())
+        for n, b in sorted(entries.items()):
+            zf.writestr(n, b)
+    m1 = api.CompiledModel.load(p1)
+    x = _inputs(m.graph, 1, 2)[0]
+    a, b = m(x), m1(x)
+    for name in a:
+        assert np.array_equal(a[name], b[name])
+    # unknown future versions are still rejected
+    meta["version"] = 99
+    with zipfile.ZipFile(p1, "w", zipfile.ZIP_DEFLATED) as zf:
+        zf.writestr("meta.json", _json.dumps(
+            meta, sort_keys=True, separators=(",", ":")).encode())
+        for n, b in sorted(entries.items()):
+            zf.writestr(n, b)
+    with pytest.raises(ArtifactError):
+        api.CompiledModel.load(p1)
+
+
+@pytest.mark.fast
+def test_session_load_mmap(tmp_path):
+    m = api.compile(random_graph(0), precision="int8", cache=False)
+    p = str(tmp_path / "m.rpa")
+    m.save(p)
+    sess = api.Session()
+    m2 = sess.load(p, name="frommap", pin=True)
+    assert any(isinstance(w, np.memmap) for w in m2.weights.values())
+    assert "frommap" in sess.pinned()
+    x = _inputs(m.graph, 1, 0)[0]
+    out = sess.run("frommap", x)
+    want = m(x)
+    for name in want:
+        assert np.array_equal(out[name], want[name])
