@@ -22,6 +22,7 @@ def main(argv=None):
     ap.add_argument("--skip-quant", action="store_true")
     ap.add_argument("--skip-fusion", action="store_true")
     ap.add_argument("--skip-serve", action="store_true")
+    ap.add_argument("--skip-robust", action="store_true")
     ap.add_argument("--cache-dir", default=None,
                     help="enable the on-disk program-cache tier at this "
                          "directory (CI keys its cache on it; a warm dir "
@@ -47,8 +48,8 @@ def main(argv=None):
         import subprocess
         import sys as _sys
         print("=" * 72)
-        print("QUICK SMOKE (pytest -m fast + compile/quant/fusion/serve "
-              "benches --quick)")
+        print("QUICK SMOKE (pytest -m fast + compile/quant/fusion/serve/"
+              "robust benches --quick)")
         print("=" * 72)
         rc = subprocess.call(
             [_sys.executable, "-m", "pytest", "-q", "-m", "fast"])
@@ -64,6 +65,9 @@ def main(argv=None):
         from . import serve_bench
         rc |= serve_bench.main(["--quick",
                                 "--out", "BENCH_serve_quick.json"])
+        from . import robust_bench
+        rc |= robust_bench.main(["--quick",
+                                 "--out", "BENCH_robust_quick.json"])
         if args.cache_dir:
             # exercise the disk tier with real programs: cold CI solves
             # and writes artifacts; a restored cache dir serves them in
@@ -132,6 +136,16 @@ def main(argv=None):
         rc |= serve_bench.main(["--quick", "--out",
                                 "BENCH_serve_quick.json"]
                                if args.fast else [])
+
+    if not args.skip_robust:
+        print("=" * 72)
+        print("SERVING ROBUSTNESS (fault injection: stalls/poison/"
+              "corrupt/skew, BENCH_robust.json)")
+        print("=" * 72)
+        from . import robust_bench
+        rc |= robust_bench.main(["--quick", "--out",
+                                 "BENCH_robust_quick.json"]
+                                if args.fast else [])
 
     if not args.skip_roofline:
         print("=" * 72)

@@ -34,12 +34,19 @@ from repro.core.npu import NEUTRON_2TOPS, NPUConfig
 from repro.core.pipeline import CompilerOptions, compile_graph
 from repro.core.serialize import ArtifactError
 
+from repro.runtime.serving import (CircuitBreaker, DeadlineExceeded,
+                                   FlushError, Overloaded, ServingError,
+                                   Ticket, WorkerLost)
+
 from .compiled import CompiledModel, resolve_semantics
 from .session import Session
 
 __all__ = [
     "compile", "CompiledModel", "Session", "ArtifactError",
     "CompilerOptions", "resolve_semantics",
+    # serving robustness surface
+    "ServingError", "Overloaded", "DeadlineExceeded", "FlushError",
+    "WorkerLost", "Ticket", "CircuitBreaker",
 ]
 
 Source = Union[str, Graph, GraphBuilder, Tuple[Graph, GraphBuilder],

@@ -170,18 +170,23 @@ class CompiledModel:
                 for name, arr in rep.outputs.items()}
 
     # -- compiled replay plans ---------------------------------------------
-    def plan_for(self, batch: int = 1) -> ExecPlan:
+    def plan_for(self, batch: int = 1, owner=None) -> ExecPlan:
         """The compiled replay plan serving a ``batch``-request group:
         lowered lazily, cached per batch-size bucket (and per execution
         dtype — an int8 model's plans never alias a float32 model's,
         the graph fingerprint is part of the key).  Step lowering —
         with its pre-gathered, pre-cast weight constants — runs once
         per model and is shared across buckets; only the arena is
-        per-bucket."""
+        per-bucket.
+
+        ``owner`` keys an additional arena dimension: a plan's arena is
+        single-threaded state, so each serving-pool worker passes its
+        worker id to get its *own* arena while still sharing the
+        one-time step lowering with every other worker."""
         self._require_semantics()
         bucket = next((b for b in PLAN_BUCKETS if b >= batch),
                       PLAN_BUCKETS[-1])
-        key = (self.fingerprint, self.semantics.name, bucket)
+        key = (self.fingerprint, self.semantics.name, bucket, owner)
         plan = self._plans.get(key)
         if plan is None:
             lowered = getattr(self, "_lowered_steps", None)
@@ -205,25 +210,34 @@ class CompiledModel:
     def plan_cache_info(self) -> Dict[str, object]:
         info = dict(self._plan_stats)
         info["plans"] = sorted(
-            (fp[:12], sem, bucket)
-            for fp, sem, bucket in self._plans)
+            (fp[:12], sem, bucket, "-" if owner is None else str(owner))
+            for fp, sem, bucket, owner in self._plans)
         return info
 
-    def _run_plan_batch(self, stacked: Dict[str, np.ndarray], n: int
-                        ) -> Dict[str, np.ndarray]:
+    def invalidate_plans(self) -> None:
+        """Drop every cached replay plan *and* the shared lowered step
+        list, forcing a fresh re-lower on the next request.  The
+        serving runtime's circuit-breaker recovery path calls this: if
+        a plan (or its pre-gathered constants) went bad, the rebuilt
+        one must not share any state with it."""
+        self._plans.clear()
+        self._lowered_steps = None
+
+    def _run_plan_batch(self, stacked: Dict[str, np.ndarray], n: int,
+                        owner=None) -> Dict[str, np.ndarray]:
         """Run ``n`` stacked requests through bucketed plans (chunking
         past the largest bucket)."""
         cap = PLAN_BUCKETS[-1]
         self._plan_stats["plan_requests"] += n
         if n <= cap:
             self._plan_stats["plan_batches"] += 1
-            return self.plan_for(n).run(stacked, n=n)
+            return self.plan_for(n, owner=owner).run(stacked, n=n)
         outs: Dict[str, list] = {}
         for i in range(0, n, cap):
             j = min(i + cap, n)
             chunk = {k: v[i:j] for k, v in stacked.items()}
             self._plan_stats["plan_batches"] += 1
-            res = self.plan_for(j - i).run(chunk, n=j - i)
+            res = self.plan_for(j - i, owner=owner).run(chunk, n=j - i)
             for name, val in res.items():
                 outs.setdefault(name, []).append(val)
         return {name: np.concatenate(vals) for name, vals in outs.items()}
@@ -272,12 +286,14 @@ class CompiledModel:
                 outs.setdefault(name, []).append(val)
         return {name: np.stack(vals) for name, vals in outs.items()}
 
-    def run_many(self, requests: List[Inputs], check: bool = False
-                 ) -> List[Dict[str, np.ndarray]]:
+    def run_many(self, requests: List[Inputs], check: bool = False,
+                 owner=None) -> List[Dict[str, np.ndarray]]:
         """Execute a group of independent requests as one (or a few)
         batched plan replays; returns one output dict per request in
         order.  ``check=True`` falls back to per-sample interpretive
-        oracle replay."""
+        oracle replay.  ``owner`` selects a per-caller plan arena (see
+        :meth:`plan_for` — serving-pool workers pass their id so
+        concurrent batches never share an arena)."""
         if not requests:
             return []
         feeds = [self._normalize(r) for r in requests]
@@ -291,7 +307,7 @@ class CompiledModel:
         self._require_semantics()
         stacked = {t.name: np.stack([f[t.name] for f in feeds])
                    for t in self.graph.inputs}
-        res = self._run_plan_batch(stacked, len(feeds))
+        res = self._run_plan_batch(stacked, len(feeds), owner=owner)
         return [{name: vals[i] for name, vals in res.items()}
                 for i in range(len(feeds))]
 
@@ -362,7 +378,7 @@ class CompiledModel:
         ]
         ps = self._plan_stats
         if self._plans:
-            buckets = sorted({b for (_, _, b) in self._plans})
+            buckets = sorted({b for (_, _, b, _) in self._plans})
             kernels = sum(len(p.steps) for p in self._plans.values())
             arena = max(p.arena_bytes for p in self._plans.values())
             lines.append(

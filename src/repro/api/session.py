@@ -1,4 +1,5 @@
-"""Multi-model serving session: micro-batching + admission policy.
+"""Multi-model serving session: micro-batching, deadlines, fault
+tolerance.
 
 A :class:`Session` is the fleet-facing object: a registry of
 :class:`~repro.api.compiled.CompiledModel` instances (each with its own
@@ -6,27 +7,45 @@ precision) behind one hardware config, one options baseline and one
 two-tier (in-process LRU + on-disk artifact) compiled-program cache.
 Typical serving flow:
 
-    sess = Session(cache_dir="/var/cache/neutron", max_batch=8)
+    sess = Session(cache_dir="/var/cache/neutron", max_batch=8,
+                   workers=2)                         # worker pool
     sess.add("mobilenet_v2", precision="int8", pin=True)  # hot model
     sess.add("yolov8n_det")                               # float32
     out = sess.run("mobilenet_v2", image)         # single request
     outs = sess.run_many("mobilenet_v2", images)  # one plan replay
 
-    t1 = sess.submit("mobilenet_v2", img_a)       # coalescing queue
-    t2 = sess.submit("mobilenet_v2", img_b)
-    sess.flush()                                  # one batched replay
-    t1.result(), t2.result()
+    t1 = sess.submit("mobilenet_v2", img_a, deadline_ms=50)
+    t2 = sess.submit("mobilenet_v2", img_b, deadline_ms=50)
+    t1.result(), t2.result()                      # latency-bounded
 
 Requests execute on each model's **compiled replay plan** (lowered
 once, batch-vectorized — see :mod:`repro.core.execplan`); the
 request-coalescing queue groups same-model submissions into one plan
-execution of up to ``max_batch`` requests.  ``pin()`` marks a model's
-compiled program exempt from the in-process LRU eviction (the
-admission policy for hot models); pinned counts are surfaced in
-``program_cache_info()`` / :meth:`stats`.
+execution of up to ``max_batch`` requests.
+
+**Robustness contract** (see :mod:`repro.runtime.serving`): every
+submitted ticket terminates with a result or a *typed* error.  The
+bounded per-model queue sheds load with :class:`~repro.runtime.serving.
+Overloaded` (retry-after hint included); tickets whose deadline passes
+before execution fail with ``DeadlineExceeded`` instead of running
+stale work; a failing plan execution fails only its own batch's
+tickets, is retried once (transient faults), and after
+``breaker_threshold`` consecutive failures the model's circuit breaker
+trips — requests degrade to the interpretive oracle engine (slow but
+correct) while a re-lower probe attempts recovery.  With ``workers >
+0`` a :class:`~repro.runtime.serving.ServerPool` serves the queues:
+per-worker plan arenas, deadline-driven auto-flush, heartbeat-based
+hang detection with in-flight re-dispatch and worker recycling.
+
+``pin()`` marks a model's compiled program exempt from the in-process
+LRU eviction (the admission policy for hot models); pinned counts are
+surfaced in ``program_cache_info()`` / :meth:`stats`, which also grows
+per-model p50/p99 latency histograms, shed/deadline-miss/degraded
+counters and per-worker health.
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Dict, List, Optional
 
@@ -34,41 +53,16 @@ from repro.core.npu import NEUTRON_2TOPS, NPUConfig
 from repro.core.pipeline import (CompilerOptions, program_cache_configure,
                                  program_cache_info, program_cache_pin,
                                  program_cache_unpin)
+from repro.runtime import chaos as _chaos
+from repro.runtime.serving import (CircuitBreaker, DeadlineExceeded,
+                                   FlushError, LatencyHistogram,
+                                   Overloaded, ServerPool, Ticket)
 
 from .compiled import CompiledModel, Inputs
 
-
-class Ticket:
-    """Handle for one queued request.  ``result()`` flushes the owning
-    session's queue if the request has not been executed yet, and
-    re-raises the execution error if its batch failed."""
-
-    __slots__ = ("_session", "_done", "_value", "_error")
-
-    def __init__(self, session: "Session"):
-        self._session = session
-        self._done = False
-        self._value = None
-        self._error = None
-
-    def _fulfill(self, value) -> None:
-        self._done = True
-        self._value = value
-
-    def _fail(self, error: BaseException) -> None:
-        self._done = True
-        self._error = error
-
-    @property
-    def done(self) -> bool:
-        return self._done
-
-    def result(self):
-        if not self._done:
-            self._session.flush()
-        if self._error is not None:
-            raise self._error
-        return self._value
+#: request errors that are the *caller's* fault (bad shape, bad name):
+#: not retried, never counted against the model's circuit breaker.
+_CLIENT_ERRORS = (ValueError, TypeError, KeyError)
 
 
 class Session:
@@ -79,10 +73,21 @@ class Session:
                  cache_dir: Optional[str] = None,
                  max_entries: Optional[int] = None,
                  max_bytes: Optional[int] = None,
-                 max_batch: int = 8):
+                 max_batch: int = 8,
+                 workers: int = 0,
+                 max_queue: int = 256,
+                 linger_ms: float = 2.0,
+                 heartbeat_timeout_s: float = 0.5,
+                 breaker_threshold: int = 3,
+                 breaker_cooldown_s: float = 2.0,
+                 retry_backoff_ms: float = 10.0):
         self.cfg = config or NEUTRON_2TOPS
         self.options = options
         self.max_batch = int(max_batch)
+        self.max_queue = int(max_queue)
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        self.retry_backoff_s = float(retry_backoff_ms) / 1e3
         # only forward knobs the caller actually set — the store is
         # process-wide and an omitted knob must not reset prior config
         if cache_dir is not None:
@@ -93,10 +98,36 @@ class Session:
             program_cache_configure(max_bytes=max_bytes)
         self._models: Dict[str, CompiledModel] = {}
         self._stats: Dict[str, dict] = {}
+        self._stats_lock = threading.Lock()
         self._pinned: set = set()
-        #: request-coalescing queue: model name -> [(feed, ticket), ...]
+        self._breakers: Dict[str, CircuitBreaker] = {}
+        self._hists: Dict[str, LatencyHistogram] = {}
+        #: synchronous-mode coalescing queue: name -> [(feed, ticket)]
         self._queue: Dict[str, List[tuple]] = {}
         self._queue_depth = 0
+        self._pool: Optional[ServerPool] = None
+        self.closed = False
+        if workers:
+            self._pool = ServerPool(
+                self._execute_entries, workers=int(workers),
+                max_batch=self.max_batch, max_queue=self.max_queue,
+                linger_ms=linger_ms,
+                heartbeat_timeout_s=heartbeat_timeout_s)
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        """Shut the session down: queued-but-unexecuted tickets fail
+        with a typed ``WorkerLost`` error (never silently lost)."""
+        if self.closed:
+            return
+        self.closed = True
+        if self._pool is not None:
+            self._pool.close()
 
     def _model_stats(self, name: str) -> dict:
         return self._stats.setdefault(name, {
@@ -104,7 +135,29 @@ class Session:
             "batched_requests": 0, "batches": 0, "max_batch_seen": 0,
             "compiles": {"solved": 0, "memory": 0, "disk": 0,
                          "artifact": 0},
+            # robustness counters
+            "shed": 0, "deadline_misses": 0, "degraded_requests": 0,
+            "retries": 0, "plan_failures": 0, "breaker_trips": 0,
+            "recoveries": 0, "failed_recoveries": 0,
         })
+
+    def _count(self, name: str, counter: str, n: int = 1) -> None:
+        with self._stats_lock:
+            self._model_stats(name)[counter] += n
+
+    def _breaker(self, name: str) -> CircuitBreaker:
+        br = self._breakers.get(name)
+        if br is None:
+            br = self._breakers[name] = CircuitBreaker(
+                threshold=self.breaker_threshold,
+                cooldown_s=self.breaker_cooldown_s)
+        return br
+
+    def _hist(self, name: str) -> LatencyHistogram:
+        h = self._hists.get(name)
+        if h is None:
+            h = self._hists[name] = LatencyHistogram()
+        return h
 
     # -- registry -----------------------------------------------------------
     def add(self, source, name: Optional[str] = None,
@@ -204,9 +257,12 @@ class Session:
         model = self._get(name)
         t0 = time.monotonic()
         out = model(inputs, check=check)
-        st = self._stats[name]
-        st["requests"] += 1
-        st["run_s"] += time.monotonic() - t0
+        dt = time.monotonic() - t0
+        with self._stats_lock:
+            st = self._model_stats(name)
+            st["requests"] += 1
+            st["run_s"] += dt
+        self._hist(name).record(dt * 1e3)
         return out
 
     def run_many(self, name: str, requests: List[Inputs],
@@ -214,70 +270,250 @@ class Session:
         """Execute a group of same-model requests as chunked plan
         replays of at most ``max_batch`` requests each."""
         model = self._get(name)
-        st = self._stats[name]
         out: List[dict] = []
         t0 = time.monotonic()
+        nb = nr = 0
+        mx = 0
         for i in range(0, len(requests), self.max_batch):
             group = requests[i:i + self.max_batch]
             out.extend(model.run_many(group, check=check))
-            st["batches"] += 1
-            st["batched_requests"] += len(group)
-            st["max_batch_seen"] = max(st["max_batch_seen"], len(group))
-        st["requests"] += len(requests)
-        st["run_s"] += time.monotonic() - t0
+            nb += 1
+            nr += len(group)
+            mx = max(mx, len(group))
+        dt = time.monotonic() - t0
+        with self._stats_lock:
+            st = self._model_stats(name)
+            st["batches"] += nb
+            st["batched_requests"] += nr
+            st["max_batch_seen"] = max(st["max_batch_seen"], mx)
+            st["requests"] += len(requests)
+            st["run_s"] += dt
         return out
 
-    def submit(self, name: str, inputs: Inputs) -> Ticket:
-        """Queue one request for micro-batching.  The request executes
-        at the next :meth:`flush` (or transparently when its ticket's
-        ``result()`` is read), grouped with every other queued request
-        for the same model."""
+    def submit(self, name: str, inputs: Inputs,
+               deadline_ms: Optional[float] = None) -> Ticket:
+        """Queue one request for micro-batching and return its
+        :class:`Ticket`.
+
+        ``deadline_ms`` bounds end-to-end latency: the batch carrying
+        this request auto-flushes early enough to make the deadline
+        (pooled sessions), and a ticket whose deadline passes before it
+        executes fails with ``DeadlineExceeded`` instead of running
+        stale work.  When the model's bounded queue (``max_queue``) is
+        full the request is shed with :class:`Overloaded` carrying a
+        retry-after hint."""
         self._get(name)                       # fail fast on bad names
-        ticket = Ticket(self)
-        self._queue.setdefault(name, []).append((inputs, ticket))
+        now = _chaos.now()
+        deadline = None
+        if deadline_ms is not None:
+            deadline = now + float(deadline_ms) / 1e3
+        ticket = Ticket(self, name, deadline)
+        if deadline is not None and deadline <= now:
+            self._count(name, "deadline_misses")
+            ticket._fail(DeadlineExceeded(name, 0.0))
+            return ticket
+        if self._pool is not None:
+            # the pool counts shed/deadline misses itself; stats() merges
+            self._pool.submit(name, inputs, ticket)
+            return ticket
+        q = self._queue.setdefault(name, [])
+        if len(q) >= self.max_queue:
+            self._count(name, "shed")
+            st = self._stats.get(name) or {}
+            est = st.get("latency_ms", 10.0) or 10.0
+            raise Overloaded(name, len(q), max(
+                1.0, est * (len(q) / max(1, self.max_batch))))
+        q.append((inputs, ticket))
         self._queue_depth += 1
         return ticket
 
-    def flush(self) -> int:
-        """Drain the coalescing queue: one ``run_many`` per model with
-        queued work.  Returns the number of requests executed.
+    def _resolve(self, ticket: Ticket, timeout: Optional[float]) -> None:
+        """Block until a ticket terminates: waits on the worker pool, or
+        drains *only that ticket's model* in synchronous mode (a slow
+        unrelated model never blocks an independent result)."""
+        if self._pool is not None:
+            ticket._event.wait(timeout)
+            return
+        try:
+            self.flush(ticket.name)
+        except FlushError:
+            pass          # the ticket's own stored error is re-raised
 
-        One model's batch failing fails only *its* tickets (the error
-        is stored and re-raised both here and from each ``result()``);
-        every other model's requests stay queued for the next flush."""
-        executed = 0
-        while self._queue:
-            name = next(iter(self._queue))
-            entries = self._queue.pop(name)
-            self._queue_depth -= len(entries)
+    # -- robust batch execution (shared by sync flush and the pool) ---------
+    def _plan_run(self, name: str, model: CompiledModel, feeds,
+                  worker=None):
+        c = _chaos.active()
+        if c is not None:
+            c.check_plan(name)
+        return model.run_many(feeds, owner=worker)
+
+    def _maybe_recover(self, name: str, model: CompiledModel,
+                       br: CircuitBreaker) -> None:
+        """Half-open probe: re-lower the plan from scratch and verify it
+        against the interpretive oracle; success closes the breaker."""
+        if not br.try_probe():
+            return
+        import numpy as np
+        try:
+            c = _chaos.active()
+            if c is not None:
+                c.check_plan(name)
+            model.invalidate_plans()
+            feed = {t.name: np.zeros(t.shape, dtype=np.float32)
+                    for t in model.graph.inputs}
+            model.verify(feed)
+        except Exception:
+            br.probe_failed()
+            self._count(name, "failed_recoveries")
+        else:
+            br.probe_succeeded()
+            self._count(name, "recoveries")
+
+    def _execute_entries(self, name: str, entries, worker=None
+                         ) -> Optional[BaseException]:
+        """Execute one claimed batch, fulfilling or failing every ticket
+        in ``entries``; never raises.  The degradation ladder: plan
+        engine -> one retry with backoff (transient faults) -> circuit
+        breaker trips after K consecutive batch failures -> interpretive
+        oracle engine (slow but correct) until a re-lower probe
+        recovers.  Returns the batch error, if any."""
+        model = self._models[name]
+        br = self._breaker(name)
+        self._maybe_recover(name, model, br)
+        feeds = [feed for feed, _ in entries]
+        outs = None
+        err: Optional[BaseException] = None
+        engine = "plan"
+        t0 = time.monotonic()
+        if br.allow_plan():
             try:
-                outs = self.run_many(name, [feed for feed, _ in entries])
+                outs = self._plan_run(name, model, feeds, worker)
+            except _CLIENT_ERRORS as e:
+                err = e
             except Exception as e:
-                for _, ticket in entries:
-                    ticket._fail(e)
-                raise
-            for (_, ticket), out in zip(entries, outs):
-                ticket._fulfill(out)
-            executed += len(entries)
+                # transient server-side fault: one retry with backoff
+                self._count(name, "retries")
+                time.sleep(self.retry_backoff_s)
+                try:
+                    outs = self._plan_run(name, model, feeds, worker)
+                except Exception as e2:
+                    err = e2
+            if outs is not None:
+                br.record_success()
+            elif not isinstance(err, _CLIENT_ERRORS):
+                self._count(name, "plan_failures")
+                if br.record_failure():
+                    self._count(name, "breaker_trips")
+        else:
+            # breaker open: serve correct (oracle) outputs, slowly,
+            # instead of failing — graceful degradation
+            engine = "interp"
+            try:
+                outs = [model(f, engine="interp") for f in feeds]
+                self._count(name, "degraded_requests", len(feeds))
+            except _CLIENT_ERRORS as e:
+                err = e
+            except Exception as e:
+                err = e
+                br.record_failure()
+        dt = time.monotonic() - t0
+        with self._stats_lock:
+            st = self._model_stats(name)
+            st["batches"] += 1
+            st["batched_requests"] += len(entries)
+            st["max_batch_seen"] = max(st["max_batch_seen"], len(entries))
+            st["requests"] += len(entries)
+            st["run_s"] += dt
+            st["engine"] = engine
+        if err is not None:
+            for _, ticket in entries:
+                ticket._fail(err)
+            return err
+        hist = self._hist(name)
+        done_t = time.monotonic()
+        for (_, ticket), out in zip(entries, outs):
+            if ticket._fulfill(out):
+                hist.record((done_t - ticket.submitted_at) * 1e3)
+        return None
+
+    def flush(self, name: Optional[str] = None, timeout: float = 60.0
+              ) -> int:
+        """Drain the coalescing queue — all models, or just ``name``.
+        Returns the number of requests executed.
+
+        Every model's queue is drained even when an earlier model's
+        batch fails: one aggregated :class:`FlushError` (mapping each
+        failed model to its typed error) is raised *after* the drain,
+        so one bad model never strands another model's tickets.
+        Expired tickets fail with ``DeadlineExceeded`` without
+        executing.  On pooled sessions this is a barrier: it waits for
+        the workers to drain the selected queues."""
+        if self._pool is not None:
+            if not self._pool.drain(None if name is None else {name},
+                                    timeout=timeout):
+                raise FlushError({name or "*": TimeoutError(
+                    f"pool did not drain within {timeout}s")})
+            return 0
+        executed = 0
+        errors: Dict[str, BaseException] = {}
+        names = list(self._queue) if name is None else \
+            ([name] if name in self._queue else [])
+        for n in names:
+            entries = self._queue.pop(n, [])
+            self._queue_depth -= len(entries)
+            now = _chaos.now()
+            live = []
+            for feed, ticket in entries:
+                if ticket.deadline is not None and now > ticket.deadline:
+                    self._count(n, "deadline_misses")
+                    ticket._fail(DeadlineExceeded(
+                        n, (now - ticket.deadline) * 1e3))
+                else:
+                    live.append((feed, ticket))
+            for i in range(0, len(live), self.max_batch):
+                group = live[i:i + self.max_batch]
+                err = self._execute_entries(n, group)
+                if err is not None:
+                    errors[n] = err
+                else:
+                    executed += len(group)
+        if errors:
+            raise FlushError(errors)
         return executed
 
     @property
     def queue_depth(self) -> int:
+        if self._pool is not None:
+            return self._pool.queue_depth()
         return self._queue_depth
 
     # -- reporting ----------------------------------------------------------
     def stats(self) -> dict:
+        pool = self._pool
         models = {}
-        for n, s in self._stats.items():
-            d = dict(s)
+        with self._stats_lock:
+            snap = {n: dict(s) for n, s in self._stats.items()}
+        for n, d in snap.items():
             if n in self._models:
                 d["plan"] = self._models[n].plan_cache_info()
+            if n in self._breakers:
+                d["breaker"] = self._breakers[n].snapshot()
+            if n in self._hists:
+                d["latency"] = self._hists[n].snapshot()
+            if pool is not None:
+                d["shed"] += pool.shed.get(n, 0)
+                d["deadline_misses"] += pool.deadline_misses.get(n, 0)
             models[n] = d
-        return {"models": models,
-                "pinned": self.pinned(),
-                "queue_depth": self._queue_depth,
-                "max_batch": self.max_batch,
-                "program_cache": program_cache_info()}
+        out = {"models": models,
+               "pinned": self.pinned(),
+               "queue_depth": self.queue_depth,
+               "max_batch": self.max_batch,
+               "max_queue": self.max_queue,
+               "program_cache": program_cache_info()}
+        if pool is not None:
+            out["pool"] = pool.stats()
+            out["workers"] = pool.worker_health()
+        return out
 
     def report(self) -> str:
         cache = program_cache_info()
@@ -286,7 +522,8 @@ class Session:
                  f"({cache['pinned_entries']} pinned)"
                  + (f", disk tier at {cache['disk_dir']}"
                     if cache["disk_dir"] else ", no disk tier")]
-        for n, st in self._stats.items():
+        stats = self.stats()["models"]
+        for n, st in stats.items():
             tiers = st["compiles"]
             pin_mark = "*" if n in self._pinned else " "
             lines.append(
@@ -297,4 +534,25 @@ class Session:
                 f"compiles solved/mem/disk/artifact = "
                 f"{tiers['solved']}/{tiers['memory']}/{tiers['disk']}"
                 f"/{tiers['artifact']}")
+            lat = st.get("latency")
+            br = st.get("breaker")
+            if lat and lat["count"]:
+                lines.append(
+                    f"   {'':24} served p50 {lat['p50_ms']:.2f} ms / "
+                    f"p99 {lat['p99_ms']:.2f} ms"
+                    + (f"  breaker {br['state']}"
+                       f" (trips {br['trips']})" if br else "")
+                    + (f"  shed {st['shed']}" if st["shed"] else "")
+                    + (f"  deadline-miss {st['deadline_misses']}"
+                       if st["deadline_misses"] else "")
+                    + (f"  degraded {st['degraded_requests']}"
+                       if st["degraded_requests"] else ""))
+        if self._pool is not None:
+            ps = self._pool.stats()
+            lines.append(
+                f"  pool: {ps['workers']} workers, "
+                f"{ps['dispatched_batches']} batches dispatched, "
+                f"{ps['recycled_workers']} recycled, "
+                f"{ps['redispatched_batches']} re-dispatched, "
+                f"{ps['speculative_backups']} speculative backups")
         return "\n".join(lines)

@@ -201,8 +201,20 @@ class ExecPlan:
                     f"{self.name}: input {t.name} has shape {arr.shape}, "
                     f"expected {(n,) + t.shape}")
             bufs[ids[t.name]][:n] = sem.encode_input(t.name, arr)
-        for st in self.steps:
-            st.run(bufs, n)
+        st = None
+        try:
+            for st in self.steps:
+                st.run(bufs, n)
+        except Exception as e:
+            # typed, attributable kernel failure: the serving layer's
+            # circuit breaker keys off PlanError, and the label tells a
+            # human (and the re-lower probe) exactly which lowered
+            # kernel went bad — poisoned plan, corrupted arena slot,
+            # decode error alike
+            raise PlanError(
+                f"{self.name}: lowered kernel "
+                f"{st.label if st is not None else '?'} failed: "
+                f"{type(e).__name__}: {e}") from e
         outs: Dict[str, np.ndarray] = {}
         for t in self.graph.outputs:
             raw = bufs[ids[t.name]][:n]

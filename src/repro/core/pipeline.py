@@ -292,6 +292,22 @@ def _bump(counter: str, n: int = 1) -> None:
         _CACHE_STATS[counter] += n
 
 
+#: fault-injection hook for the disk tier (see repro.runtime.chaos):
+#: called with the artifact path before every disk read; raising
+#: ArtifactError exercises the reject-and-recompile path.  None in
+#: production.
+_DISK_READ_HOOK = None
+
+
+def set_disk_read_hook(fn):
+    """Install (or clear, with None) the disk-read fault-injection
+    hook; returns the previous hook so callers can restore it."""
+    global _DISK_READ_HOOK
+    prev = _DISK_READ_HOOK
+    _DISK_READ_HOOK = fn
+    return prev
+
+
 def _disk_dir_snapshot() -> Optional[str]:
     with _CACHE_LOCK:
         return _CACHE_DISK_DIR
@@ -344,6 +360,8 @@ def _disk_get(disk_dir: str, fp: str, cfg: NPUConfig,
         return None
     t = time.monotonic()
     try:
+        if _DISK_READ_HOOK is not None:
+            _DISK_READ_HOOK(path)
         key, payloads, _ = serialize.read_artifact(path)
         if (key.get("fingerprint") != fp or
                 key.get("cfg") != serialize.config_to_payload(cfg) or

@@ -50,9 +50,15 @@ class FaultMonitor:
 
     def beat(self, host_id: int, step: int,
              step_time_s: Optional[float] = None) -> None:
-        self.beats[host_id].beat(step)
+        hb = self.beats.get(host_id)
+        if hb is None:
+            # tolerate (and auto-register) hosts that joined after
+            # construction — replacement workers recycled into a serving
+            # pool beat with fresh ids
+            hb = self.beats[host_id] = Heartbeat(host_id)
+        hb.beat(step)
         if step_time_s is not None:
-            t = self.step_times[host_id]
+            t = self.step_times.setdefault(host_id, [])
             t.append(step_time_s)
             if len(t) > 64:
                 del t[:-64]
@@ -60,8 +66,17 @@ class FaultMonitor:
     def mark_failed(self, host_id: int) -> None:
         self.failed.add(host_id)
 
+    def retire(self, host_id: int) -> None:
+        """Forget a host entirely (a recycled worker): it no longer
+        counts as dead, healthy or a straggler."""
+        self.beats.pop(host_id, None)
+        self.step_times.pop(host_id, None)
+        self.failed.discard(host_id)
+
     def dead_hosts(self, now: Optional[float] = None) -> List[int]:
-        now = now or time.monotonic()
+        # `now if ... else` — not `now or`: now=0.0 is a legitimate
+        # simulated-clock value, not "unset"
+        now = time.monotonic() if now is None else now
         dead = [h for h, b in self.beats.items()
                 if h not in self.failed
                 and now - b.last_beat > self.timeout_s]

@@ -1,0 +1,618 @@
+"""Fault-tolerant serving runtime: deadlines, backpressure, worker pool.
+
+The paper's thesis — sustained utilization under *real* workloads, not
+peak TOPS — extends to the serving layer: real traffic is bursty, real
+workers hang, real plans go bad.  This module is the robustness layer
+around :class:`repro.api.Session`:
+
+* **typed request outcomes** — every submitted :class:`Ticket`
+  terminates with a result or a typed error (:class:`Overloaded` with a
+  retry-after hint when admission control sheds load,
+  :class:`DeadlineExceeded` when a ticket expires before execution,
+  :class:`FlushError` aggregating per-model batch failures).  Nothing
+  is ever silently dropped.
+* **:class:`ServerPool`** — N worker threads, each owning its *own*
+  lowered-plan arena (``CompiledModel.plan_for(owner=worker)``), fed by
+  bounded per-model queues with a deadline-driven auto-flush: a batch
+  dispatches when it fills, when its oldest entry has lingered
+  ``linger_ms``, or when its earliest deadline minus the model's
+  recent batch time comes due — latency-bounded, not cooperative.
+* **fault detection + re-dispatch** — workers heartbeat a
+  :class:`repro.runtime.fault.FaultMonitor`; a supervisor recycles
+  workers whose beats stop (hung kernel), re-dispatches their in-flight
+  batch to a healthy worker (recorded on a
+  :class:`~repro.runtime.fault.BackupDispatcher`), and issues
+  speculative backups for stragglers.  Tickets are idempotent — the
+  first fulfillment wins, duplicated work is dropped.
+* **:class:`CircuitBreaker`** + :class:`LatencyHistogram` — the
+  per-model trip/half-open/recover state machine and the p50/p99
+  surface ``Session.stats()`` reports.
+
+Fault injection for all of the above lives in
+:mod:`repro.runtime.chaos`; the open-loop traffic harness in
+``benchmarks/robust_bench.py``.
+"""
+from __future__ import annotations
+
+import math
+import threading
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .fault import BackupDispatcher, FaultMonitor
+from . import chaos as _chaos
+
+
+# --------------------------------------------------------------------------
+# Typed errors
+# --------------------------------------------------------------------------
+
+
+class ServingError(RuntimeError):
+    """Base class of the serving runtime's typed request errors."""
+
+
+class Overloaded(ServingError):
+    """Admission control shed this request: the model's bounded queue
+    is full.  ``retry_after_ms`` estimates when capacity frees up."""
+
+    def __init__(self, model: str, depth: int, retry_after_ms: float):
+        self.model = model
+        self.queue_depth = depth
+        self.retry_after_ms = float(retry_after_ms)
+        super().__init__(
+            f"{model}: queue full ({depth} queued) — retry in "
+            f"~{self.retry_after_ms:.0f} ms")
+
+
+class DeadlineExceeded(ServingError):
+    """The ticket's deadline passed before its batch executed; the
+    stale work was dropped instead of run."""
+
+    def __init__(self, model: str, late_ms: float = 0.0):
+        self.model = model
+        self.late_ms = float(late_ms)
+        super().__init__(f"{model}: deadline exceeded "
+                         f"({self.late_ms:.1f} ms late)")
+
+
+class WorkerLost(ServingError):
+    """The session shut down (or a worker died unrecoverably) with this
+    request still queued — the terminal error of a drained ticket."""
+
+
+class FlushError(ServingError):
+    """One or more models' batches failed during a drain.  Every other
+    model's requests were still executed; ``errors`` maps each failed
+    model to its (typed) batch error."""
+
+    def __init__(self, errors: Dict[str, BaseException]):
+        self.errors = dict(errors)
+        super().__init__("; ".join(
+            f"{n}: {type(e).__name__}: {e}" for n, e in errors.items()))
+
+
+# --------------------------------------------------------------------------
+# Ticket
+# --------------------------------------------------------------------------
+
+
+class Ticket:
+    """Handle for one queued request.
+
+    Terminates exactly once — with a value or a typed error — no matter
+    how many workers race to complete it (re-dispatched and speculative
+    backup executions settle by first-fulfillment-wins).  ``result()``
+    blocks on the worker pool (pooled sessions) or drains *only this
+    model's* queue (synchronous sessions) — a slow unrelated model never
+    blocks an independent ticket."""
+
+    __slots__ = ("name", "deadline", "submitted_at", "_session", "_event",
+                 "_lock", "_done", "_value", "_error")
+
+    def __init__(self, session, name: str,
+                 deadline: Optional[float] = None):
+        self._session = session
+        self.name = name
+        self.deadline = deadline          # chaos-clock absolute seconds
+        self.submitted_at = time.monotonic()
+        self._event = threading.Event()
+        self._lock = threading.Lock()
+        self._done = False
+        self._value = None
+        self._error: Optional[BaseException] = None
+
+    def _fulfill(self, value) -> bool:
+        with self._lock:
+            if self._done:
+                return False
+            self._done = True
+            self._value = value
+        self._event.set()
+        return True
+
+    def _fail(self, error: BaseException) -> bool:
+        with self._lock:
+            if self._done:
+                return False
+            self._done = True
+            self._error = error
+        self._event.set()
+        return True
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    @property
+    def error(self) -> Optional[BaseException]:
+        return self._error
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._done:
+            self._session._resolve(self, timeout)
+        if not self._done:
+            raise TimeoutError(
+                f"{self.name}: ticket unresolved after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+# --------------------------------------------------------------------------
+# Latency histogram (p50/p99 without storing samples)
+# --------------------------------------------------------------------------
+
+
+class LatencyHistogram:
+    """Log-spaced latency histogram: O(1) record, ~5% quantile
+    resolution, fixed memory.  Thread-safe."""
+
+    def __init__(self, lo_ms: float = 0.05, hi_ms: float = 120_000.0,
+                 per_decade: int = 48):
+        self._lo = lo_ms
+        self._log_ratio = math.log(10.0) / per_decade
+        self._n = int(math.log(hi_ms / lo_ms) / self._log_ratio) + 2
+        self._counts = [0] * self._n
+        self._lock = threading.Lock()
+        self.count = 0
+        self.sum_ms = 0.0
+        self.max_ms = 0.0
+
+    def record(self, ms: float) -> None:
+        ms = max(ms, 0.0)
+        idx = 0 if ms <= self._lo else min(
+            self._n - 1, 1 + int(math.log(ms / self._lo) / self._log_ratio))
+        with self._lock:
+            self._counts[idx] += 1
+            self.count += 1
+            self.sum_ms += ms
+            self.max_ms = max(self.max_ms, ms)
+
+    def percentile(self, p: float) -> float:
+        """Upper edge of the bucket holding the p-th percentile (0 when
+        empty)."""
+        with self._lock:
+            if not self.count:
+                return 0.0
+            target = p / 100.0 * self.count
+            seen = 0
+            for i, c in enumerate(self._counts):
+                seen += c
+                if seen >= target:
+                    return self._lo * math.exp(i * self._log_ratio)
+            return self.max_ms
+
+    def snapshot(self) -> Dict[str, float]:
+        p50, p99 = self.percentile(50), self.percentile(99)
+        with self._lock:
+            return {"count": self.count,
+                    "mean_ms": self.sum_ms / self.count if self.count
+                    else 0.0,
+                    "p50_ms": p50, "p99_ms": p99,
+                    "max_ms": self.max_ms}
+
+
+# --------------------------------------------------------------------------
+# Circuit breaker (per model)
+# --------------------------------------------------------------------------
+
+
+class CircuitBreaker:
+    """K-consecutive-failure breaker with half-open recovery.
+
+    ``closed`` — plan path; ``open`` — degraded to the interpretive
+    oracle engine (slow but correct) until ``cooldown_s`` elapses;
+    ``half_open`` — a re-lower probe is in flight; its outcome closes
+    or re-opens the breaker."""
+
+    def __init__(self, threshold: int = 3, cooldown_s: float = 2.0):
+        self.threshold = int(threshold)
+        self.cooldown_s = float(cooldown_s)
+        self.state = "closed"
+        self.failures = 0                 # consecutive
+        self.trips = 0
+        self.recoveries = 0
+        self.opened_at = 0.0
+        self._lock = threading.Lock()
+
+    def allow_plan(self) -> bool:
+        with self._lock:
+            return self.state == "closed"
+
+    def record_success(self) -> None:
+        with self._lock:
+            self.failures = 0
+            if self.state == "half_open":
+                self.state = "closed"
+                self.recoveries += 1
+
+    def record_failure(self, now: Optional[float] = None) -> bool:
+        """Returns True when this failure trips the breaker open."""
+        now = _chaos.now() if now is None else now
+        with self._lock:
+            self.failures += 1
+            if self.state == "closed" and self.failures >= self.threshold:
+                self.state = "open"
+                self.opened_at = now
+                self.trips += 1
+                return True
+            return False
+
+    def try_probe(self, now: Optional[float] = None) -> bool:
+        """Claim the half-open recovery probe once the cooldown has
+        elapsed (only one caller wins per cooldown window)."""
+        now = _chaos.now() if now is None else now
+        with self._lock:
+            if self.state == "open" and \
+                    now - self.opened_at >= self.cooldown_s:
+                self.state = "half_open"
+                return True
+            return False
+
+    def probe_failed(self, now: Optional[float] = None) -> None:
+        now = _chaos.now() if now is None else now
+        with self._lock:
+            self.state = "open"
+            self.opened_at = now
+
+    def probe_succeeded(self) -> None:
+        with self._lock:
+            self.state = "closed"
+            self.failures = 0
+            self.recoveries += 1
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            return {"state": self.state, "failures": self.failures,
+                    "trips": self.trips, "recoveries": self.recoveries,
+                    "threshold": self.threshold}
+
+
+# --------------------------------------------------------------------------
+# Worker pool
+# --------------------------------------------------------------------------
+
+
+class _InFlight:
+    __slots__ = ("name", "entries", "started", "seq", "backed_up")
+
+    def __init__(self, name, entries, started, seq):
+        self.name = name
+        self.entries = entries
+        self.started = started
+        self.seq = seq
+        self.backed_up = False
+
+
+class _Worker:
+    __slots__ = ("wid", "thread", "abandoned", "batches", "requests",
+                 "started_at", "seq")
+
+    def __init__(self, wid: int):
+        self.wid = wid
+        self.thread: Optional[threading.Thread] = None
+        self.abandoned = False
+        self.batches = 0
+        self.requests = 0
+        self.started_at = time.monotonic()
+        self.seq = 0
+
+
+class ServerPool:
+    """N serving workers over bounded per-model queues.
+
+    ``execute(name, entries, worker_id)`` is the session's robust batch
+    executor: it must fulfill or fail every ticket in ``entries`` and
+    never raise (the pool still backstops it).  The pool owns admission
+    control, deadline-driven dispatch, heartbeat-based failure
+    detection, in-flight re-dispatch and worker recycling."""
+
+    def __init__(self, execute: Callable, *, workers: int = 2,
+                 max_batch: int = 8, max_queue: int = 64,
+                 linger_ms: float = 2.0,
+                 heartbeat_timeout_s: float = 0.5,
+                 straggler_backup_after_s: Optional[float] = None):
+        self._execute = execute
+        self.max_batch = int(max_batch)
+        self.max_queue = int(max_queue)
+        self.linger_s = float(linger_ms) / 1e3
+        self.heartbeat_timeout_s = float(heartbeat_timeout_s)
+        self.backup_after_s = (straggler_backup_after_s
+                               if straggler_backup_after_s is not None
+                               else 4 * self.heartbeat_timeout_s)
+        self.monitor = FaultMonitor(n_hosts=workers,
+                                    timeout_s=heartbeat_timeout_s)
+        self.dispatcher = BackupDispatcher(self.monitor)
+
+        self._cv = threading.Condition()
+        self._queues: Dict[str, deque] = {}
+        self._inflight: Dict[int, _InFlight] = {}
+        self._workers: Dict[int, _Worker] = {}
+        self._ewma_ms: Dict[str, float] = {}
+        self._running = True
+        self._next_wid = workers
+        self._seq = 0
+        self.counters = {"dispatched_batches": 0, "dispatched_requests": 0,
+                         "shed": 0, "deadline_misses": 0,
+                         "redispatched_batches": 0, "recycled_workers": 0,
+                         "speculative_backups": 0}
+        self.deadline_misses: Dict[str, int] = {}
+        self.shed: Dict[str, int] = {}
+
+        for wid in range(workers):
+            self._spawn_locked(wid)
+        self._supervisor = threading.Thread(
+            target=self._supervise, name="npu-pool-supervisor", daemon=True)
+        self._supervisor.start()
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, name: str, feed, ticket: Ticket) -> None:
+        with self._cv:
+            if not self._running:
+                raise ServingError("pool is closed")
+            q = self._queues.setdefault(name, deque())
+            if len(q) >= self.max_queue:
+                self.counters["shed"] += 1
+                self.shed[name] = self.shed.get(name, 0) + 1
+                est = self._ewma_ms.get(name, 10.0)
+                retry = max(1.0, est * (len(q) / max(1, self.max_batch)))
+                raise Overloaded(name, len(q), retry)
+            q.append((feed, ticket, _chaos.now()))
+            self._cv.notify()
+
+    def queue_depth(self, name: Optional[str] = None) -> int:
+        with self._cv:
+            if name is not None:
+                return len(self._queues.get(name, ()))
+            return sum(len(q) for q in self._queues.values())
+
+    # -- dispatch (deadline-driven auto-flush) ------------------------------
+    def _miss_locked(self, name: str, ticket: Ticket, now: float) -> None:
+        self.counters["deadline_misses"] += 1
+        self.deadline_misses[name] = self.deadline_misses.get(name, 0) + 1
+        ticket._fail(DeadlineExceeded(
+            name, late_ms=(now - ticket.deadline) * 1e3))
+
+    def _claim_locked(self, now: float
+                      ) -> Tuple[Optional[Tuple[str, List]], float]:
+        """Pick the most urgent dispatchable model batch, or the time
+        until one becomes due.  A batch is due when it is full, when its
+        head entry has lingered ``linger_ms``, or when its earliest
+        deadline minus the model's recent batch time arrives."""
+        best_name, best_due, next_due = None, math.inf, math.inf
+        for name, q in self._queues.items():
+            if not q:
+                continue
+            _, ticket, enq = q[0]
+            due = enq + self.linger_s
+            if ticket.deadline is not None:
+                est = self._ewma_ms.get(name, 5.0) / 1e3
+                due = min(due, ticket.deadline - est)
+            if len(q) >= self.max_batch:
+                due = now
+            if due <= now:
+                if due < best_due:
+                    best_name, best_due = name, due
+            else:
+                next_due = min(next_due, due)
+        if best_name is None:
+            return None, next_due
+        q = self._queues[best_name]
+        entries = []
+        while q and len(entries) < self.max_batch:
+            feed, ticket, _ = q.popleft()
+            if ticket.deadline is not None and now > ticket.deadline:
+                self._miss_locked(best_name, ticket, now)
+                continue
+            entries.append((feed, ticket))
+        if not entries:                    # the whole head was expired
+            return None, 0.0
+        return (best_name, entries), 0.0
+
+    # -- workers ------------------------------------------------------------
+    def _spawn_locked(self, wid: int) -> None:
+        w = _Worker(wid)
+        w.thread = threading.Thread(target=self._worker_loop, args=(wid,),
+                                    name=f"npu-worker-{wid}", daemon=True)
+        self._workers[wid] = w
+        self.monitor.beat(wid, 0)          # registers replacement ids too
+        w.thread.start()
+
+    def _worker_loop(self, wid: int) -> None:
+        beat_every = max(0.01, self.heartbeat_timeout_s / 4)
+        while True:
+            with self._cv:
+                w = self._workers.get(wid)
+                if w is None or w.abandoned or not self._running:
+                    return
+                now = _chaos.now()
+                claim, next_due = self._claim_locked(now)
+                if claim is None:
+                    self.monitor.beat(wid, w.seq)
+                    wait = beat_every if next_due is math.inf else \
+                        min(beat_every, max(0.0, next_due - now))
+                    self._cv.wait(wait)
+                    continue
+                name, entries = claim
+                self._seq += 1
+                w.seq = self._seq
+                self._inflight[wid] = _InFlight(
+                    name, entries, time.monotonic(), w.seq)
+                self.counters["dispatched_batches"] += 1
+                self.counters["dispatched_requests"] += len(entries)
+
+            # ---- outside the lock: chaos stall = a hung kernel (no
+            # heartbeats while stalled — that IS the failure signature)
+            c = _chaos.active()
+            if c is not None:
+                stall = c.maybe_stall_s(wid)
+                if stall:
+                    time.sleep(stall)
+            with self._cv:
+                inf = self._inflight.get(wid)
+                if inf is None or inf.seq != w.seq:
+                    # supervisor re-dispatched this batch while we hung —
+                    # drop the duplicate work (tickets settle first-wins)
+                    continue
+            self.monitor.beat(wid, w.seq)
+            t0 = time.monotonic()
+            try:
+                self._execute(name, entries, wid)
+            except BaseException as e:     # backstop: executor must not
+                for _, ticket in entries:  # raise, but never lose tickets
+                    ticket._fail(e if isinstance(e, Exception)
+                                 else ServingError(repr(e)))
+            dt = time.monotonic() - t0
+            with self._cv:
+                self._inflight.pop(wid, None)
+                w.batches += 1
+                w.requests += len(entries)
+                prev = self._ewma_ms.get(name)
+                ms = dt * 1e3
+                self._ewma_ms[name] = ms if prev is None \
+                    else 0.7 * prev + 0.3 * ms
+                self.monitor.beat(wid, w.seq, step_time_s=dt)
+                self._cv.notify_all()
+
+    # -- supervision: detect, re-dispatch, recycle --------------------------
+    def _supervise(self) -> None:
+        interval = max(0.02, self.heartbeat_timeout_s / 4)
+        while True:
+            time.sleep(interval)
+            with self._cv:
+                if not self._running:
+                    return
+                dead = [wid for wid in self.monitor.dead_hosts()
+                        if wid in self._workers
+                        and not self._workers[wid].abandoned]
+                for wid in dead:
+                    self._recycle_locked(wid)
+                # stragglers: speculative backup (first result wins)
+                stragglers = set(self.monitor.stragglers())
+                now = time.monotonic()
+                for wid, inf in list(self._inflight.items()):
+                    slow = now - inf.started > self.backup_after_s
+                    if inf.backed_up or not slow or (
+                            wid not in stragglers and
+                            now - inf.started < 2 * self.backup_after_s):
+                        continue
+                    inf.backed_up = True
+                    live = [(f, t) for f, t in inf.entries if not t.done]
+                    q = self._queues.setdefault(inf.name, deque())
+                    q.extendleft((f, t, _chaos.now())
+                                 for f, t in reversed(live))
+                    self.dispatcher.backups_issued.append(
+                        (inf.seq, wid, -1))
+                    self.counters["speculative_backups"] += 1
+                    self._cv.notify_all()
+
+    def _recycle_locked(self, wid: int) -> None:
+        """A worker stopped heartbeating mid-batch: re-dispatch its
+        in-flight work to the healthy workers, abandon the thread (it
+        drops its duplicate results if it ever wakes) and spawn a
+        replacement."""
+        w = self._workers[wid]
+        w.abandoned = True
+        inf = self._inflight.pop(wid, None)
+        new_wid = self._next_wid
+        self._next_wid += 1
+        if inf is not None:
+            live = [(f, t) for f, t in inf.entries if not t.done]
+            q = self._queues.setdefault(inf.name, deque())
+            q.extendleft((f, t, _chaos.now()) for f, t in reversed(live))
+            self.counters["redispatched_batches"] += 1
+            self.dispatcher.backups_issued.append((inf.seq, wid, new_wid))
+        self.monitor.retire(wid)
+        self.counters["recycled_workers"] += 1
+        self._spawn_locked(new_wid)
+        self._cv.notify_all()
+
+    # -- draining / shutdown ------------------------------------------------
+    def drain(self, names=None, timeout: Optional[float] = None) -> bool:
+        """Block until every queued/in-flight request (of ``names``, or
+        all) has terminated.  Returns False on timeout."""
+        def clear():
+            for name, q in self._queues.items():
+                if names is not None and name not in names:
+                    continue
+                if q:
+                    return False
+            for inf in self._inflight.values():
+                if names is None or inf.name in names:
+                    return False
+            return True
+        with self._cv:
+            return self._cv.wait_for(clear, timeout)
+
+    def close(self, timeout: float = 5.0) -> None:
+        with self._cv:
+            self._running = False
+            leftovers = []
+            for name, q in self._queues.items():
+                while q:
+                    feed, ticket, _ = q.popleft()
+                    leftovers.append((name, ticket))
+            self._cv.notify_all()
+        for name, ticket in leftovers:
+            ticket._fail(WorkerLost(f"{name}: session closed with the "
+                                    f"request still queued"))
+        deadline = time.monotonic() + timeout
+        for w in list(self._workers.values()):
+            if w.thread is not None and not w.abandoned:
+                w.thread.join(max(0.0, deadline - time.monotonic()))
+
+    # -- health -------------------------------------------------------------
+    def worker_health(self) -> Dict[int, Dict[str, object]]:
+        with self._cv:
+            now = time.monotonic()
+            out = {}
+            for wid, w in self._workers.items():
+                hb = self.monitor.beats.get(wid)
+                times = self.monitor.step_times.get(wid, [])
+                out[wid] = {
+                    "alive": bool(w.thread and w.thread.is_alive()),
+                    "abandoned": w.abandoned,
+                    "batches": w.batches,
+                    "requests": w.requests,
+                    "inflight": self._inflight.get(wid) is not None,
+                    "last_beat_age_s": (now - hb.last_beat) if hb
+                    else None,
+                    "mean_batch_s": (sum(times[-16:]) / len(times[-16:]))
+                    if times else None,
+                }
+            return out
+
+    def stats(self) -> Dict[str, object]:
+        with self._cv:
+            return {
+                "workers": len([w for w in self._workers.values()
+                                if not w.abandoned]),
+                "queued": {n: len(q) for n, q in self._queues.items()
+                           if q},
+                "ewma_batch_ms": {n: round(v, 3)
+                                  for n, v in self._ewma_ms.items()},
+                "backups_issued": len(self.dispatcher.backups_issued),
+                **self.counters,
+            }

@@ -1,0 +1,37 @@
+"""Shared test fixtures.
+
+``chaos``-marked tests exercise fault injection (worker stalls, plan
+poisoning, clock skew) against live worker threads — the one class of
+test that could genuinely hang if the robustness machinery regresses.
+Each gets a *hard* per-test timeout via SIGALRM (no pytest-timeout
+dependency): the alarm fires in the main thread and fails the test with
+a diagnostic instead of wedging the suite.
+"""
+import signal
+
+import pytest
+
+CHAOS_TIMEOUT_S = 60
+
+
+@pytest.fixture(autouse=True)
+def _chaos_hard_timeout(request):
+    if request.node.get_closest_marker("chaos") is None:
+        yield
+        return
+    if not hasattr(signal, "SIGALRM"):      # non-POSIX: best effort
+        yield
+        return
+
+    def _expired(signum, frame):
+        pytest.fail(
+            f"chaos test exceeded the hard {CHAOS_TIMEOUT_S}s timeout — "
+            f"a worker/supervisor is likely hung", pytrace=False)
+
+    prev = signal.signal(signal.SIGALRM, _expired)
+    signal.alarm(CHAOS_TIMEOUT_S)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, prev)

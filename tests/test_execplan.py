@@ -259,8 +259,11 @@ def test_session_run_many_and_queue():
     t1 = sess.submit("m1", _inputs(sess["m1"].graph, 1, 1)[0])
     t2 = sess.submit("m0", xs[1])
     assert sess.queue_depth == 3 and not t0.done
-    r0 = t0.result()                      # auto-flush
-    assert t1.done and t2.done and sess.queue_depth == 0
+    r0 = t0.result()                      # auto-flush of m0's queue ONLY
+    assert t2.done and not t1.done        # per-model: m1 stays queued
+    assert sess.queue_depth == 1
+    sess.flush()                          # full drain picks up m1
+    assert t1.done and sess.queue_depth == 0
     want = sess["m0"](xs[0], engine="interp")
     for name in want:
         err = float(np.max(np.abs(r0[name] - want[name])))

@@ -1,0 +1,460 @@
+"""Fault-tolerant serving runtime: deadlines, backpressure, worker
+pool, circuit breaker, chaos schedules.
+
+The serving robustness contract under test: **every submitted ticket
+terminates** — with a result or a typed error — under load shedding,
+deadline expiry, plan poisoning, artifact corruption, worker stalls and
+clock skew; a tripped model keeps serving *correct* outputs through the
+interpretive oracle engine until its re-lower probe recovers.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.api as api
+import repro.runtime.chaos as chaos
+from repro.api import DeadlineExceeded, FlushError, Overloaded, WorkerLost
+from repro.core import program_cache_clear, program_cache_configure, \
+    program_cache_info
+from repro.runtime.fault import FaultMonitor
+from repro.runtime.serving import CircuitBreaker, LatencyHistogram
+
+from test_execplan import random_graph, _inputs
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache():
+    saved = program_cache_info()
+    program_cache_clear()
+    program_cache_configure(max_entries=64, max_bytes=None, disk_dir=None)
+    yield
+    program_cache_clear()
+    program_cache_configure(max_entries=saved["max_entries"],
+                            max_bytes=saved["max_bytes"],
+                            disk_dir=saved["disk_dir"])
+
+
+def _session(**kw):
+    kw.setdefault("max_batch", 4)
+    sess = api.Session(**kw)
+    sess.add(random_graph(0), name="m0", precision="int8")
+    return sess
+
+
+def _feed(sess, name="m0", seed=0):
+    return _inputs(sess[name].graph, 1, seed)[0]
+
+
+def _check_output(sess, name, out, feed):
+    want = sess[name](feed, engine="interp")
+    for k in want:
+        err = float(np.max(np.abs(out[k] - want[k])))
+        assert err <= sess[name].semantics.plan_parity_tol(k), \
+            f"{name}/{k}: served output diverged from oracle by {err}"
+
+
+# --------------------------------------------------------------------------
+# fault monitor fixes (heartbeat registry)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_fault_monitor_dead_hosts_at_time_zero():
+    """now=0.0 must be honoured, not silently replaced by wall time."""
+    mon = FaultMonitor(n_hosts=2, timeout_s=1.0)
+    assert mon.dead_hosts(now=0.0) == []
+
+
+@pytest.mark.fast
+def test_fault_monitor_beat_tolerates_unknown_host():
+    mon = FaultMonitor(n_hosts=1, timeout_s=1.0)
+    mon.beat(7, step=3, step_time_s=0.5)     # auto-registers
+    assert 7 in mon.beats and mon.step_times[7] == [0.5]
+    mon.retire(7)
+    assert 7 not in mon.beats and 7 not in mon.step_times
+    mon.retire(7)                            # idempotent
+
+
+# --------------------------------------------------------------------------
+# primitives: histogram + breaker
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_latency_histogram_percentiles():
+    h = LatencyHistogram()
+    for ms in range(1, 101):
+        h.record(float(ms))
+    snap = h.snapshot()
+    assert snap["count"] == 100
+    assert 45 <= snap["p50_ms"] <= 56       # log-bucket edge tolerance
+    assert 90 <= snap["p99_ms"] <= 110
+    assert snap["max_ms"] == 100.0
+    assert abs(snap["mean_ms"] - 50.5) < 1e-6
+
+
+@pytest.mark.fast
+def test_circuit_breaker_state_machine():
+    br = CircuitBreaker(threshold=3, cooldown_s=1.0)
+    assert br.allow_plan()
+    assert not br.record_failure(now=0.0)
+    assert not br.record_failure(now=0.0)
+    br.record_success()                      # success resets the streak
+    assert not br.record_failure(now=0.0)
+    assert not br.record_failure(now=0.0)
+    assert br.record_failure(now=0.0)        # third consecutive: trips
+    assert br.state == "open" and not br.allow_plan()
+    assert not br.try_probe(now=0.5)         # cooldown not elapsed
+    assert br.try_probe(now=1.5)             # claims the probe
+    assert br.state == "half_open"
+    assert not br.try_probe(now=1.5)         # only one winner
+    br.probe_failed(now=1.5)
+    assert br.state == "open"
+    assert br.try_probe(now=3.0)
+    br.probe_succeeded()
+    assert br.state == "closed" and br.allow_plan()
+    assert br.snapshot()["trips"] == 1 and br.snapshot()["recoveries"] == 1
+
+
+# --------------------------------------------------------------------------
+# admission control + deadlines (sync mode)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_bounded_queue_sheds_with_retry_hint():
+    sess = _session(max_queue=5)
+    x = _feed(sess)
+    for _ in range(5):
+        sess.submit("m0", x)
+    with pytest.raises(Overloaded) as ei:
+        sess.submit("m0", x)
+    assert ei.value.model == "m0"
+    assert ei.value.queue_depth == 5
+    assert ei.value.retry_after_ms >= 1.0
+    assert sess.flush() == 5
+    assert sess.stats()["models"]["m0"]["shed"] == 1
+    sess.submit("m0", x)                     # capacity freed
+    sess.flush()
+
+
+@pytest.mark.fast
+def test_deadline_expiry_ordering():
+    """Expired tickets fail with DeadlineExceeded *without executing*;
+    live tickets in the same queue still run."""
+    sess = _session()
+    x = _feed(sess)
+    t_dead = sess.submit("m0", x, deadline_ms=0.0)    # expires instantly
+    assert t_dead.done and isinstance(t_dead.error, DeadlineExceeded)
+    before = sess.stats()["models"]["m0"]["requests"]
+
+    with chaos.inject() as c:
+        t_soon = sess.submit("m0", x, deadline_ms=1.0)
+        t_late = sess.submit("m0", x, deadline_ms=10_000.0)
+        t_none = sess.submit("m0", x)
+        c.skew_clock(0.5)            # half a second passes "instantly"
+        sess.flush("m0")
+    with pytest.raises(DeadlineExceeded) as ei:
+        t_soon.result()
+    assert ei.value.late_ms > 0
+    _check_output(sess, "m0", t_late.result(), x)
+    _check_output(sess, "m0", t_none.result(), x)
+    st = sess.stats()["models"]["m0"]
+    assert st["deadline_misses"] == 2
+    # the expired tickets consumed zero execution
+    assert st["requests"] == before + 2
+
+
+@pytest.mark.fast
+def test_per_model_flush_does_not_drain_other_models():
+    sess = _session()
+    sess.add(random_graph(1), name="m1")
+    t0 = sess.submit("m0", _feed(sess, "m0"))
+    t1 = sess.submit("m1", _feed(sess, "m1"))
+    assert sess.flush("m0") == 1
+    assert t0.done and not t1.done
+    t1.result()                              # resolves via its own model
+    assert sess.queue_depth == 0
+
+
+@pytest.mark.fast
+def test_flush_aggregates_errors_and_drains_every_model():
+    sess = _session()
+    sess.add(random_graph(1), name="m1")
+    sess.add(random_graph(2), name="m2")
+    bad = np.zeros((3, 3, 1), dtype=np.float32)       # wrong shape
+    t0 = sess.submit("m0", bad)
+    t1 = sess.submit("m1", _feed(sess, "m1"))
+    t2 = sess.submit("m2", bad)
+    with pytest.raises(FlushError) as ei:
+        sess.flush()
+    assert set(ei.value.errors) == {"m0", "m2"}       # both recorded
+    assert t1.done and t1.error is None               # m1 still executed
+    assert isinstance(t0.error, ValueError)
+    assert isinstance(t2.error, ValueError)
+    assert sess.queue_depth == 0
+    # client errors never count against the breaker
+    assert sess.stats()["models"]["m0"]["breaker"]["state"] == "closed"
+    assert sess.stats()["models"]["m0"]["plan_failures"] == 0
+
+
+# --------------------------------------------------------------------------
+# circuit breaker: trip -> degraded oracle serving -> recovery
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+@pytest.mark.chaos
+def test_transient_fault_retried_once():
+    sess = _session(retry_backoff_ms=1.0)
+    x = _feed(sess)
+    with chaos.inject() as c:
+        c.poison_plan("m0", times=1)         # first attempt only
+        t = sess.submit("m0", x)
+        _check_output(sess, "m0", t.result(), x)
+    st = sess.stats()["models"]["m0"]
+    assert st["retries"] == 1 and st["plan_failures"] == 0
+    assert st["breaker"]["state"] == "closed"
+
+
+@pytest.mark.fast
+@pytest.mark.chaos
+def test_breaker_trips_then_serves_oracle_then_recovers():
+    sess = _session(breaker_threshold=2, breaker_cooldown_s=0.1,
+                    retry_backoff_ms=1.0)
+    x = _feed(sess)
+    with chaos.inject() as c:
+        for _ in range(2):                   # 2 batches, both retries fail
+            c.poison_plan("m0", times=2)
+            t = sess.submit("m0", x)
+            with pytest.raises(chaos.ChaosError):
+                t.result()
+        st = sess.stats()["models"]["m0"]
+        assert st["breaker"]["state"] == "open"
+        assert st["breaker_trips"] == 1 and st["plan_failures"] == 2
+
+        # open: requests degrade to the interpretive oracle — correct
+        t = sess.submit("m0", x)
+        _check_output(sess, "m0", t.result(), x)
+        assert sess.stats()["models"]["m0"]["degraded_requests"] == 1
+
+        # keep the plan poisoned: the recovery probe must fail and
+        # re-open the breaker rather than half-heal
+        time.sleep(0.15)
+        c.poison_plan("m0", times=1)
+        t = sess.submit("m0", x)
+        _check_output(sess, "m0", t.result(), x)
+        st = sess.stats()["models"]["m0"]
+        assert st["failed_recoveries"] == 1
+        assert st["breaker"]["state"] == "open"
+
+    time.sleep(0.15)                         # chaos gone: probe heals
+    t = sess.submit("m0", x)
+    _check_output(sess, "m0", t.result(), x)
+    st = sess.stats()["models"]["m0"]
+    assert st["breaker"]["state"] == "closed" and st["recoveries"] == 1
+    assert st["latency"]["count"] > 0 and st["latency"]["p99_ms"] > 0
+
+
+@pytest.mark.fast
+@pytest.mark.chaos
+def test_corrupt_artifact_takes_recompile_path():
+    """A corrupted disk-tier artifact is rejected and recompiled, not
+    served."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        program_cache_configure(disk_dir=d)
+        m = api.compile(random_graph(5), precision="int8")
+        program_cache_clear()                # memory tier gone; disk stays
+        with chaos.inject() as c:
+            c.corrupt_artifacts(times=1)
+            m2 = api.compile(random_graph(5), precision="int8")
+        assert c.injected["artifact_faults"] == 1
+        info = program_cache_info()
+        assert info["disk_rejects"] >= 1
+        x = _inputs(m.graph, 1, 0)[0]
+        got, want = m2(x), m(x, engine="interp")
+        for k in want:
+            err = float(np.max(np.abs(got[k] - want[k])))
+            assert err <= m.semantics.plan_parity_tol(k)
+
+
+# --------------------------------------------------------------------------
+# worker pool
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_pool_serves_and_close_fails_leftovers():
+    sess = _session(workers=2, linger_ms=1.0)
+    x = _feed(sess)
+    ts = [sess.submit("m0", x) for _ in range(8)]
+    for t in ts:
+        _check_output(sess, "m0", t.result(timeout=30), x)
+    st = sess.stats()
+    assert st["pool"]["dispatched_requests"] >= 8
+    assert all(h["alive"] for h in st["workers"].values())
+    sess.close()
+    with pytest.raises(Exception):
+        sess.submit("m0", x)
+
+
+@pytest.mark.chaos
+def test_pool_recycles_stalled_worker_zero_ticket_loss():
+    """A worker that stops heartbeating mid-batch is detected, its
+    in-flight batch re-dispatched, the worker recycled — and every
+    ticket still terminates with a correct result."""
+    sess = _session(workers=2, heartbeat_timeout_s=0.15, linger_ms=1.0)
+    x = _feed(sess)
+    with chaos.inject() as c:
+        c.stall_worker(0, seconds=1.2)
+        c.stall_worker(1, seconds=1.2)
+        ts = [sess.submit("m0", _feed(sess, seed=i)) for i in range(10)]
+        outs = [t.result(timeout=30) for t in ts]
+    assert all(o is not None for o in outs)
+    st = sess.stats()["pool"]
+    assert st["recycled_workers"] >= 1
+    assert st["redispatched_batches"] >= 1
+    assert len(sess.stats()["workers"]) > 2  # replacements spawned
+    sess.close()
+
+
+@pytest.mark.chaos
+def test_pool_deadline_auto_flush_is_latency_bounded():
+    """With no other traffic, a deadline submission dispatches on its
+    own — well before the deadline — rather than waiting for a full
+    batch or a cooperative flush."""
+    sess = _session(workers=1, linger_ms=500.0)   # linger alone too slow
+    x = _feed(sess)
+    t0 = time.monotonic()
+    t = sess.submit("m0", x, deadline_ms=100.0)
+    _check_output(sess, "m0", t.result(timeout=10), x)
+    assert (time.monotonic() - t0) < 0.4          # NOT the 500 ms linger
+    sess.close()
+
+
+# --------------------------------------------------------------------------
+# property: every ticket terminates under randomized fault schedules
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_every_ticket_terminates_under_random_faults(seed):
+    rng = np.random.default_rng(seed)
+    sess = _session(workers=2, max_queue=32, heartbeat_timeout_s=0.15,
+                    linger_ms=1.0, breaker_threshold=2,
+                    breaker_cooldown_s=0.1, retry_backoff_ms=1.0)
+    sess.add(random_graph(1), name="m1")
+    names = ["m0", "m1"]
+    tickets, shed = [], 0
+    with chaos.inject() as c:
+        for step in range(60):
+            r = rng.random()
+            if r < 0.08:
+                c.poison_plan(str(rng.choice(names)),
+                              times=int(rng.integers(1, 3)))
+            elif r < 0.12:
+                c.stall_worker(int(rng.integers(0, 6)),
+                               seconds=float(rng.uniform(0.2, 0.6)))
+            elif r < 0.15:
+                c.skew_clock(float(rng.uniform(0.0, 0.05)))
+            name = str(rng.choice(names))
+            deadline = float(rng.uniform(5, 500)) \
+                if rng.random() < 0.4 else None
+            try:
+                tickets.append(sess.submit(
+                    name, _feed(sess, name, seed=step),
+                    deadline_ms=deadline))
+            except Overloaded:
+                shed += 1
+            if rng.random() < 0.2:
+                time.sleep(0.01)
+        # ZERO ticket loss: every accepted ticket terminates, each with
+        # a value or a *typed* serving error
+        for t in tickets:
+            try:
+                t.result(timeout=30)
+            except (DeadlineExceeded, WorkerLost, chaos.ChaosError):
+                pass
+        assert all(t.done for t in tickets)
+    assert len(tickets) + shed == 60
+    sess.close()
+    # post-mortem: the accounting adds up
+    st = sess.stats()
+    served = sum(m["latency"]["count"] for m in st["models"].values()
+                 if "latency" in m)
+    failed = sum(1 for t in tickets if t.error is not None)
+    assert served + failed >= len(tickets)   # backups may double-serve
+
+
+@pytest.mark.chaos
+def test_sync_session_random_faults_single_thread():
+    """The same termination property in synchronous (workers=0) mode."""
+    rng = np.random.default_rng(7)
+    sess = _session(max_queue=16, breaker_threshold=2,
+                    breaker_cooldown_s=0.05, retry_backoff_ms=1.0)
+    x = _feed(sess)
+    tickets = []
+    with chaos.inject() as c:
+        for step in range(40):
+            if rng.random() < 0.15:
+                c.poison_plan("m0", times=int(rng.integers(1, 3)))
+            if rng.random() < 0.1:
+                c.skew_clock(float(rng.uniform(0, 0.02)))
+            try:
+                tickets.append(sess.submit(
+                    "m0", x, deadline_ms=float(rng.uniform(5, 200))
+                    if rng.random() < 0.5 else None))
+            except Overloaded:
+                pass
+            if rng.random() < 0.3:
+                try:
+                    sess.flush("m0")
+                except FlushError:
+                    pass
+        try:
+            sess.flush()
+        except FlushError:
+            pass
+    assert all(t.done for t in tickets)
+    assert sess.queue_depth == 0
+
+
+@pytest.mark.chaos
+def test_concurrent_submitters_one_pool():
+    """Many client threads hammering one pooled session: every ticket
+    terminates, results are correct."""
+    sess = _session(workers=2, max_queue=128, linger_ms=1.0)
+    x = _feed(sess)
+    want = sess["m0"](x, engine="interp")
+    errs, done = [], []
+    lock = threading.Lock()
+
+    def client(n):
+        for _ in range(n):
+            try:
+                t = sess.submit("m0", x)
+                out = t.result(timeout=30)
+                for k in want:
+                    assert float(np.max(np.abs(out[k] - want[k]))) <= \
+                        sess["m0"].semantics.plan_parity_tol(k)
+                with lock:
+                    done.append(1)
+            except Overloaded:
+                pass
+            except Exception as e:       # pragma: no cover - diagnostics
+                with lock:
+                    errs.append(e)
+
+    threads = [threading.Thread(target=client, args=(10,))
+               for _ in range(6)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errs, errs
+    assert len(done) > 0
+    sess.close()
