@@ -44,6 +44,26 @@ import repro.runtime.chaos as chaos
 from repro.api import DeadlineExceeded, Overloaded, WorkerLost
 from repro.core import (NEUTRON_2TOPS, program_cache_clear,
                         program_cache_configure, program_cache_info)
+from repro.obs import trace as obs_trace
+from repro.obs.trace import validate_chrome_trace
+
+#: span names the exported baseline trace must contain — the request
+#: path submit -> queue_wait -> batch -> worker, plus at least one
+#: per-kernel ("plan" category) span from ExecPlan replay
+REQUIRED_SPANS = ("submit", "queue_wait", "batch", "worker")
+
+
+def _check_trace(doc: Dict) -> List[str]:
+    """Schema validation + the serving-path coverage contract."""
+    problems = validate_chrome_trace(doc)
+    evs = doc.get("traceEvents", [])
+    names = {d.get("name") for d in evs}
+    for want in REQUIRED_SPANS:
+        if want not in names:
+            problems.append(f"missing span {want!r}")
+    if not any(d.get("cat") == "plan" for d in evs):
+        problems.append("no per-kernel ('plan' category) spans")
+    return problems
 
 MODEL = ("mobilenet_v2", 0.25)     # serving regime: edge camera preview
 BATCH = 8
@@ -75,10 +95,18 @@ def _tiny_graph(seed: int = 0):
 
 
 def run_scenario(scenario: str, duration_s: float, seed: int = 0,
-                 cache_dir: Optional[str] = None) -> Dict:
-    """One fault class, one fresh Session, open-loop bursty traffic."""
+                 cache_dir: Optional[str] = None,
+                 trace_out: Optional[str] = None,
+                 metrics_out: Optional[str] = None) -> Dict:
+    """One fault class, one fresh Session, open-loop bursty traffic.
+
+    With ``trace_out``/``metrics_out`` set (the baseline scenario in
+    ``main``) the scenario runs with the tracer armed, exports the
+    Chrome trace + Prometheus exposition, and gates on
+    :func:`_check_trace` (``row["trace_ok"]``)."""
     rng = np.random.default_rng(seed)
     name, scale = MODEL
+    tracer = obs_trace.enable() if trace_out else None
     sess = api.Session(max_batch=BATCH, workers=WORKERS, max_queue=256,
                        linger_ms=1.0, heartbeat_timeout_s=0.15,
                        breaker_threshold=3, breaker_cooldown_s=0.2,
@@ -147,7 +175,19 @@ def run_scenario(scenario: str, duration_s: float, seed: int = 0,
     ms = st["models"][name]
     lat = ms.get("latency", {})
     pool = st["pool"]
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            f.write(sess.metrics())
     sess.close()
+    trace_problems: List[str] = []
+    if tracer is not None:
+        obs_trace.disable()
+        doc = tracer.chrome_trace()
+        with open(trace_out, "w") as f:
+            json.dump(doc, f)
+        trace_problems = _check_trace(doc)
+        for p in trace_problems[:5]:
+            print(f"  [trace] {p}", file=sys.stderr)
     row = {
         "scenario": scenario,
         "duration_s": round(wall, 2),
@@ -178,6 +218,10 @@ def run_scenario(scenario: str, duration_s: float, seed: int = 0,
     if scenario == "corrupt":
         row["disk_rejects"] = program_cache_info()["disk_rejects"] \
             - rejects_before
+    if tracer is not None:
+        row["trace_events"] = len(tracer)
+        row["trace_problems"] = len(trace_problems)
+        row["trace_ok"] = not trace_problems
     return row
 
 
@@ -234,6 +278,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--quick", action="store_true",
                     help="shorter scenarios; speed gates warn-only")
     ap.add_argument("--out", default="BENCH_robust.json")
+    ap.add_argument("--trace-out", default="TRACE_robust.json",
+                    help="Chrome trace from the baseline scenario "
+                         "(open in ui.perfetto.dev)")
+    ap.add_argument("--metrics-out", default="METRICS_robust.prom",
+                    help="Prometheus exposition from the baseline "
+                         "scenario's Session.metrics()")
     args = ap.parse_args(argv)
 
     duration = 1.5 if args.quick else 4.0
@@ -243,8 +293,12 @@ def main(argv: Optional[List[str]] = None) -> int:
         for i, sc in enumerate(scenarios):
             print(f"[robust_bench] scenario {sc} ({duration:.0f}s) ...",
                   flush=True)
-            row = run_scenario(sc, duration, seed=i,
-                               cache_dir=tmp if sc == "corrupt" else None)
+            row = run_scenario(
+                sc, duration, seed=i,
+                cache_dir=tmp if sc == "corrupt" else None,
+                trace_out=args.trace_out if sc == "baseline" else None,
+                metrics_out=args.metrics_out
+                if sc == "baseline" else None)
             rows.append(row)
             print(f"  {row['req_s']:8.1f} req/s   p50 {row['p50_ms']:7.2f}"
                   f" ms   p99 {row['p99_ms']:8.2f} ms   shed "
@@ -271,6 +325,11 @@ def main(argv: Optional[List[str]] = None) -> int:
         "meets_overhead_5pct": bool(overhead_ratio >= 0.95),
         "all_zero_ticket_loss": all(r["zero_ticket_loss"] for r in rows),
         "all_p99_bounded": all(r["p99_bounded"] for r in rows),
+        "trace_ok": bool(next(r for r in rows
+                              if r["scenario"] == "baseline")
+                         .get("trace_ok", False)),
+        "trace_path": args.trace_out,
+        "metrics_path": args.metrics_out,
         "faults_exercised": bool(
             stall_row["recycled_workers"] >= 1
             and any(r["breaker_trips"] >= 1 or r["retries"] >= 1
@@ -297,6 +356,10 @@ def main(argv: Optional[List[str]] = None) -> int:
     if not result["faults_exercised"]:
         print("[robust_bench] FAIL: a fault class did not actually "
               "fire (injection wiring broken?)", file=sys.stderr)
+        return 1
+    if not result["trace_ok"]:
+        print("[robust_bench] FAIL: exported Chrome trace failed "
+              "schema/coverage validation", file=sys.stderr)
         return 1
     if not result["meets_overhead_5pct"]:
         if args.quick:

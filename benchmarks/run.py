@@ -8,7 +8,47 @@ prints the roofline table from any cached dry-run artifacts.  Pass
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+
+
+def write_summary(entries, out="BENCH_summary.json"):
+    """Aggregate every bench artifact of this run into one
+    machine-readable summary: per bench, its exit code, its artifact's
+    top-level boolean gates, and a pass verdict (rc == 0 AND every gate
+    true AND the artifact exists).  Returns 0 when every bench passed,
+    1 otherwise — ``main`` folds this into its exit code so a red gate
+    fails the run even if the bench's own main() was lenient."""
+    benches = []
+    ok = True
+    for name, path, rc in entries:
+        gates = {}
+        exists = os.path.exists(path)
+        if exists:
+            try:
+                with open(path) as f:
+                    doc = json.load(f)
+                gates = {k: v for k, v in doc.items()
+                         if isinstance(v, bool)}
+            except (OSError, ValueError) as e:
+                exists = False
+                gates = {"parse_error": False}
+                print(f"[summary] {name}: unreadable artifact {path}: "
+                      f"{e}")
+        passed = bool(exists and rc == 0 and all(gates.values()))
+        ok &= passed
+        benches.append({"bench": name, "artifact": path, "rc": int(rc),
+                        "artifact_exists": exists, "gates": gates,
+                        "passed": passed})
+    doc = {"ok": ok, "benches": benches}
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"[summary] {out}: "
+          + ", ".join(f"{b['bench']}={'PASS' if b['passed'] else 'FAIL'}"
+                      for b in benches)
+          + f" -> {'OK' if ok else 'FAILED'}")
+    return 0 if ok else 1
 
 
 def main(argv=None):
@@ -53,21 +93,29 @@ def main(argv=None):
         print("=" * 72)
         rc = subprocess.call(
             [_sys.executable, "-m", "pytest", "-q", "-m", "fast"])
+        entries = []
         from . import compile_bench
-        rc |= compile_bench.main(["--quick",
-                                  "--out", "BENCH_compile_quick.json"])
+        r = compile_bench.main(["--quick",
+                                "--out", "BENCH_compile_quick.json"])
+        entries.append(("compile", "BENCH_compile_quick.json", r))
         from . import quant_bench
-        rc |= quant_bench.main(["--quick",
-                                "--out", "BENCH_quant_quick.json"])
+        r = quant_bench.main(["--quick",
+                              "--out", "BENCH_quant_quick.json"])
+        entries.append(("quant", "BENCH_quant_quick.json", r))
         from . import fusion_bench
-        rc |= fusion_bench.main(["--quick",
-                                 "--out", "BENCH_fusion_quick.json"])
+        r = fusion_bench.main(["--quick",
+                               "--out", "BENCH_fusion_quick.json"])
+        entries.append(("fusion", "BENCH_fusion_quick.json", r))
         from . import serve_bench
-        rc |= serve_bench.main(["--quick",
-                                "--out", "BENCH_serve_quick.json"])
+        r = serve_bench.main(["--quick",
+                              "--out", "BENCH_serve_quick.json"])
+        entries.append(("serve", "BENCH_serve_quick.json", r))
         from . import robust_bench
-        rc |= robust_bench.main(["--quick",
-                                 "--out", "BENCH_robust_quick.json"])
+        r = robust_bench.main(["--quick",
+                               "--out", "BENCH_robust_quick.json"])
+        entries.append(("robust", "BENCH_robust_quick.json", r))
+        rc |= max(e[2] for e in entries)
+        rc |= write_summary(entries)
         if args.cache_dir:
             # exercise the disk tier with real programs: cold CI solves
             # and writes artifacts; a restored cache dir serves them in
@@ -107,15 +155,19 @@ def main(argv=None):
         pt.bench_genai()
 
     rc = 0
+    entries = []
     if not args.skip_fusion:
         print("=" * 72)
         print("FUSION WINDOWING (greedy vs capped vs windowed CP, "
               "BENCH_fusion.json)")
         print("=" * 72)
         from . import fusion_bench
-        rc |= fusion_bench.main(["--quick", "--out",
-                                 "BENCH_fusion_quick.json"]
-                                if args.fast else [])
+        path = "BENCH_fusion_quick.json" if args.fast \
+            else "BENCH_fusion.json"
+        r = fusion_bench.main(["--quick", "--out", path]
+                              if args.fast else [])
+        entries.append(("fusion", path, r))
+        rc |= r
 
     if not args.skip_quant:
         print("=" * 72)
@@ -123,9 +175,12 @@ def main(argv=None):
         print("=" * 72)
         from . import quant_bench
         # --fast smoke must not clobber the canonical full-run artifact
-        rc |= quant_bench.main(["--quick", "--out",
-                                "BENCH_quant_quick.json"]
-                               if args.fast else [])
+        path = "BENCH_quant_quick.json" if args.fast \
+            else "BENCH_quant.json"
+        r = quant_bench.main(["--quick", "--out", path]
+                             if args.fast else [])
+        entries.append(("quant", path, r))
+        rc |= r
 
     if not args.skip_serve:
         print("=" * 72)
@@ -133,9 +188,12 @@ def main(argv=None):
               "BENCH_serve.json)")
         print("=" * 72)
         from . import serve_bench
-        rc |= serve_bench.main(["--quick", "--out",
-                                "BENCH_serve_quick.json"]
-                               if args.fast else [])
+        path = "BENCH_serve_quick.json" if args.fast \
+            else "BENCH_serve.json"
+        r = serve_bench.main(["--quick", "--out", path]
+                             if args.fast else [])
+        entries.append(("serve", path, r))
+        rc |= r
 
     if not args.skip_robust:
         print("=" * 72)
@@ -143,9 +201,15 @@ def main(argv=None):
               "corrupt/skew, BENCH_robust.json)")
         print("=" * 72)
         from . import robust_bench
-        rc |= robust_bench.main(["--quick", "--out",
-                                 "BENCH_robust_quick.json"]
-                                if args.fast else [])
+        path = "BENCH_robust_quick.json" if args.fast \
+            else "BENCH_robust.json"
+        r = robust_bench.main(["--quick", "--out", path]
+                              if args.fast else [])
+        entries.append(("robust", path, r))
+        rc |= r
+
+    if entries:
+        rc |= write_summary(entries)
 
     if not args.skip_roofline:
         print("=" * 72)

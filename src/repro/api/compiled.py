@@ -338,6 +338,17 @@ class CompiledModel:
         return rep
 
     # -- reporting ----------------------------------------------------------
+    def profile(self, inputs: Optional[Inputs] = None, batch: int = 8,
+                runs: int = 3):
+        """Timed, per-kernel-instrumented replay correlated against the
+        cost model: modeled vs measured latency/occupancy/DDR bandwidth
+        plus a per-op share-skew table (see
+        :func:`repro.obs.profile.profile_model`).  Print the returned
+        :class:`~repro.obs.profile.ProfileReport` or ship its
+        ``as_dict()``."""
+        from repro.obs.profile import profile_model
+        return profile_model(self, inputs=inputs, batch=batch, runs=runs)
+
     def stats(self) -> Dict[str, float]:
         s = self.result.stats()
         s["precision"] = self.precision

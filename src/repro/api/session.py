@@ -53,6 +53,8 @@ from repro.core.npu import NEUTRON_2TOPS, NPUConfig
 from repro.core.pipeline import (CompilerOptions, program_cache_configure,
                                  program_cache_info, program_cache_pin,
                                  program_cache_unpin)
+from repro.obs import trace as _trace
+from repro.obs.metrics import LogHistogram, MetricsRegistry
 from repro.runtime import chaos as _chaos
 from repro.runtime.serving import (CircuitBreaker, DeadlineExceeded,
                                    FlushError, LatencyHistogram,
@@ -102,6 +104,21 @@ class Session:
         self._pinned: set = set()
         self._breakers: Dict[str, CircuitBreaker] = {}
         self._hists: Dict[str, LatencyHistogram] = {}
+        #: the session's metrics surface (repro.obs.metrics): the
+        #: latency/queue-wait/service histograms live here as families,
+        #: every dict counter is mirrored in by a render-time collector,
+        #: and Session.metrics() renders the whole registry
+        self.registry = MetricsRegistry()
+        self._m_latency = self.registry.histogram(
+            "repro_request_latency_ms",
+            "end-to-end served request latency", ("model",))
+        self._m_queue_wait = self.registry.histogram(
+            "repro_queue_wait_ms",
+            "submit-to-execution queue wait", ("model",))
+        self._m_service = self.registry.histogram(
+            "repro_batch_service_ms",
+            "batch execution (service) time", ("model",))
+        self.registry.register_collector(self._collect_metrics)
         #: synchronous-mode coalescing queue: name -> [(feed, ticket)]
         self._queue: Dict[str, List[tuple]] = {}
         self._queue_depth = 0
@@ -112,7 +129,8 @@ class Session:
                 self._execute_entries, workers=int(workers),
                 max_batch=self.max_batch, max_queue=self.max_queue,
                 linger_ms=linger_ms,
-                heartbeat_timeout_s=heartbeat_timeout_s)
+                heartbeat_timeout_s=heartbeat_timeout_s,
+                registry=self.registry)
 
     def __enter__(self) -> "Session":
         return self
@@ -150,13 +168,16 @@ class Session:
         if br is None:
             br = self._breakers[name] = CircuitBreaker(
                 threshold=self.breaker_threshold,
-                cooldown_s=self.breaker_cooldown_s)
+                cooldown_s=self.breaker_cooldown_s, name=name)
         return br
 
     def _hist(self, name: str) -> LatencyHistogram:
         h = self._hists.get(name)
         if h is None:
-            h = self._hists[name] = LatencyHistogram()
+            # the registry family child IS the session's histogram —
+            # one series, readable both as stats()["latency"] and as
+            # the repro_request_latency_ms summary in metrics()
+            h = self._hists[name] = self._m_latency.labels(model=name)
         return h
 
     # -- registry -----------------------------------------------------------
@@ -308,24 +329,31 @@ class Session:
         if deadline_ms is not None:
             deadline = now + float(deadline_ms) / 1e3
         ticket = Ticket(self, name, deadline)
-        if deadline is not None and deadline <= now:
-            self._count(name, "deadline_misses")
-            ticket._fail(DeadlineExceeded(name, 0.0))
+        with _trace.maybe_span("submit", "serving",
+                               trace_id=ticket.trace_id, model=name,
+                               deadline_ms=deadline_ms):
+            if deadline is not None and deadline <= now:
+                self._count(name, "deadline_misses")
+                ticket._fail(DeadlineExceeded(name, 0.0))
+                return ticket
+            if self._pool is not None:
+                # the pool counts shed/deadline misses itself; stats()
+                # merges
+                self._pool.submit(name, inputs, ticket)
+                return ticket
+            q = self._queue.setdefault(name, [])
+            if len(q) >= self.max_queue:
+                self._count(name, "shed")
+                _trace.instant("shed", "serving",
+                               trace_id=ticket.trace_id,
+                               args={"model": name, "depth": len(q)})
+                st = self._stats.get(name) or {}
+                est = st.get("latency_ms", 10.0) or 10.0
+                raise Overloaded(name, len(q), max(
+                    1.0, est * (len(q) / max(1, self.max_batch))))
+            q.append((inputs, ticket))
+            self._queue_depth += 1
             return ticket
-        if self._pool is not None:
-            # the pool counts shed/deadline misses itself; stats() merges
-            self._pool.submit(name, inputs, ticket)
-            return ticket
-        q = self._queue.setdefault(name, [])
-        if len(q) >= self.max_queue:
-            self._count(name, "shed")
-            st = self._stats.get(name) or {}
-            est = st.get("latency_ms", 10.0) or 10.0
-            raise Overloaded(name, len(q), max(
-                1.0, est * (len(q) / max(1, self.max_batch))))
-        q.append((inputs, ticket))
-        self._queue_depth += 1
-        return ticket
 
     def _resolve(self, ticket: Ticket, timeout: Optional[float]) -> None:
         """Block until a ticket terminates: waits on the worker pool, or
@@ -384,7 +412,20 @@ class Session:
         outs = None
         err: Optional[BaseException] = None
         engine = "plan"
+        tracer = _trace.active()
         t0 = time.monotonic()
+        if tracer is not None:
+            # queue wait: submit (on the caller's thread) -> execution
+            # start, as async b/e pairs keyed by trace id so the
+            # cross-thread interval never distorts thread nesting
+            for _, ticket in entries:
+                tracer.complete("queue_wait", "async:serving",
+                                ticket.submitted_at, t0,
+                                trace_id=ticket.trace_id,
+                                args={"model": name})
+        for _, ticket in entries:
+            self._m_queue_wait.observe(
+                (t0 - ticket.submitted_at) * 1e3, model=name)
         if br.allow_plan():
             try:
                 outs = self._plan_run(name, model, feeds, worker)
@@ -417,6 +458,12 @@ class Session:
                 err = e
                 br.record_failure()
         dt = time.monotonic() - t0
+        self._m_service.observe(dt * 1e3, model=name)
+        if tracer is not None:
+            tracer.complete("batch", "serving", t0, t0 + dt,
+                            args={"model": name, "n": len(entries),
+                                  "engine": engine,
+                                  "ok": err is None})
         with self._stats_lock:
             st = self._model_stats(name)
             st["batches"] += 1
@@ -434,6 +481,14 @@ class Session:
         for (_, ticket), out in zip(entries, outs):
             if ticket._fulfill(out):
                 hist.record((done_t - ticket.submitted_at) * 1e3)
+                if tracer is not None:
+                    # one span per request over its execution window,
+                    # carrying the trace id — the cross-thread hop the
+                    # exporter stitches flow arrows through
+                    tracer.complete("serve", "serving", t0, done_t,
+                                    trace_id=ticket.trace_id,
+                                    args={"model": name,
+                                          "engine": engine})
         return None
 
     def flush(self, name: Optional[str] = None, timeout: float = 60.0
@@ -486,6 +541,112 @@ class Session:
         if self._pool is not None:
             return self._pool.queue_depth()
         return self._queue_depth
+
+    # -- metrics exposition -------------------------------------------------
+    _BREAKER_STATES = {"closed": 0, "half_open": 1, "open": 2}
+    _MODEL_COUNTERS = (
+        ("requests", "repro_requests_total", "requests served"),
+        ("run_s", "repro_run_seconds_total", "wall time executing"),
+        ("batches", "repro_batches_total", "batches executed"),
+        ("batched_requests", "repro_batched_requests_total",
+         "requests served through batches"),
+        ("shed", "repro_shed_total", "requests shed by admission control"),
+        ("deadline_misses", "repro_deadline_misses_total",
+         "tickets expired before execution"),
+        ("degraded_requests", "repro_degraded_requests_total",
+         "requests served by the interpretive oracle (breaker open)"),
+        ("retries", "repro_retries_total", "transient batch retries"),
+        ("plan_failures", "repro_plan_failures_total",
+         "plan-engine batch failures"),
+        ("breaker_trips", "repro_breaker_trips_total",
+         "circuit breaker trips"),
+        ("recoveries", "repro_recoveries_total",
+         "successful re-lower recovery probes"),
+        ("failed_recoveries", "repro_failed_recoveries_total",
+         "failed re-lower recovery probes"),
+    )
+
+    def _collect_metrics(self) -> None:
+        """Render-time collector: mirror every dict-based counter — the
+        per-model stats, the breaker states, the pool's counters and
+        worker health, the program cache's tier stats — into registry
+        families.  The dicts stay the source of truth (and the
+        ``stats()`` surface); the registry is the exposition surface."""
+        reg = self.registry
+        pool = self._pool
+        with self._stats_lock:
+            snap = {n: dict(s) for n, s in self._stats.items()}
+        for key, metric, help in self._MODEL_COUNTERS:
+            fam = reg.counter(metric, help, ("model",))
+            for n, st in snap.items():
+                v = st.get(key, 0)
+                if key == "shed" and pool is not None:
+                    v += pool.shed.get(n, 0)
+                elif key == "deadline_misses" and pool is not None:
+                    v += pool.deadline_misses.get(n, 0)
+                fam.set_total(v, model=n)
+        compiles = reg.counter("repro_compiles_total",
+                               "model compiles by cache tier",
+                               ("model", "tier"))
+        modeled = reg.gauge("repro_modeled_latency_ms",
+                            "cost-model predicted latency", ("model",))
+        for n, st in snap.items():
+            for tier, v in st.get("compiles", {}).items():
+                compiles.set_total(v, model=n, tier=tier)
+            if "latency_ms" in st:
+                modeled.set(st["latency_ms"], model=n)
+        breaker = reg.gauge(
+            "repro_breaker_state",
+            "circuit breaker state (0=closed 1=half_open 2=open)",
+            ("model",))
+        for n, br in self._breakers.items():
+            breaker.set(self._BREAKER_STATES.get(br.state, -1), model=n)
+        reg.gauge("repro_queue_depth",
+                  "requests queued, all models").set(self.queue_depth)
+        reg.gauge("repro_pinned_models",
+                  "models pinned in the program cache"
+                  ).set(len(self._pinned))
+        info = program_cache_info()
+        cache_ev = reg.counter("repro_program_cache_total",
+                               "program cache events", ("event",))
+        for ev in ("mem_hits", "mem_misses", "mem_evictions",
+                   "disk_hits", "disk_misses", "disk_writes",
+                   "disk_rejects", "disk_evictions"):
+            cache_ev.set_total(info.get(ev, 0), event=ev)
+        cache_sz = reg.gauge("repro_program_cache_entries",
+                             "programs cached", ("tier",))
+        cache_sz.set(info.get("entries", 0), tier="memory")
+        cache_sz.set(info.get("disk_entries", 0), tier="disk")
+        cache_b = reg.gauge("repro_program_cache_bytes",
+                            "program cache resident bytes", ("tier",))
+        cache_b.set(info.get("bytes", 0), tier="memory")
+        cache_b.set(info.get("disk_bytes", 0), tier="disk")
+        if pool is not None:
+            pc = reg.counter("repro_pool_total",
+                             "worker pool events", ("event",))
+            for ev, v in pool.counters.items():
+                pc.set_total(v, event=ev)
+            reg.gauge("repro_pool_workers", "live pool workers").set(
+                len([w for w in pool._workers.values()
+                     if not w.abandoned]))
+            alive = reg.gauge("repro_worker_alive",
+                              "worker thread liveness", ("worker",))
+            wbatch = reg.counter("repro_worker_batches_total",
+                                 "batches served per worker", ("worker",))
+            wreq = reg.counter("repro_worker_requests_total",
+                               "requests served per worker", ("worker",))
+            for wid, h in pool.worker_health().items():
+                alive.set(1 if h["alive"] and not h["abandoned"] else 0,
+                          worker=wid)
+                wbatch.set_total(h["batches"], worker=wid)
+                wreq.set_total(h["requests"], worker=wid)
+
+    def metrics(self) -> str:
+        """The session's metrics registry as Prometheus text exposition
+        — request latency / queue wait / batch service summaries,
+        shed/deadline/breaker/retry counters, program-cache tier stats,
+        pool counters and worker health."""
+        return self.registry.render()
 
     # -- reporting ----------------------------------------------------------
     def stats(self) -> dict:
@@ -547,6 +708,17 @@ class Session:
                        if st["deadline_misses"] else "")
                     + (f"  degraded {st['degraded_requests']}"
                        if st["degraded_requests"] else ""))
+            qw = self._m_queue_wait.labels(model=n)
+            sv = self._m_service.labels(model=n)
+            if qw.count and sv.count:
+                # where a request's time went: waiting for its batch to
+                # form vs executing in it
+                lines.append(
+                    f"   {'':24} breakdown queue-wait p50 "
+                    f"{qw.percentile(50):.2f} / p99 "
+                    f"{qw.percentile(99):.2f} ms  |  service p50 "
+                    f"{sv.percentile(50):.2f} / p99 "
+                    f"{sv.percentile(99):.2f} ms")
         if self._pool is not None:
             ps = self._pool.stats()
             lines.append(

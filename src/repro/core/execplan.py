@@ -44,6 +44,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import trace as _trace
 from .ir import Graph
 from .program import NPUProgram
 from .tiling import TilingResult
@@ -177,12 +178,19 @@ class ExecPlan:
 
     # -- execution ----------------------------------------------------------
     def run(self, feed: Dict[str, np.ndarray], n: Optional[int] = None,
-            decode: bool = True) -> Dict[str, np.ndarray]:
+            decode: bool = True, trace_id: Optional[int] = None,
+            step_times: Optional[list] = None) -> Dict[str, np.ndarray]:
         """Replay ``n`` stacked requests.  ``feed`` maps every graph
         input to an ``(n, *shape)`` array (or ``(*shape,)`` when
         ``n`` is None/1).  Returns each model output as ``(n, *shape)``
         — decoded to float via the semantics, or the raw stored values
-        with ``decode=False``."""
+        with ``decode=False``.
+
+        ``step_times`` (a caller-supplied list) collects one
+        ``(label, seconds)`` entry per lowered kernel — the profiler's
+        per-op attribution.  When the tracer is armed (and its
+        ``plan_steps`` flag set), each kernel also lands as one span in
+        the ring, tagged with ``trace_id`` for request attribution."""
         sem = self.semantics
         ids = self.ids
         bufs = self._views
@@ -201,10 +209,27 @@ class ExecPlan:
                     f"{self.name}: input {t.name} has shape {arr.shape}, "
                     f"expected {(n,) + t.shape}")
             bufs[ids[t.name]][:n] = sem.encode_input(t.name, arr)
+        # hoist the tracer/profiler check out of the kernel loop: the
+        # common case (neither armed) must stay the two-opcode loop
+        tracer = _trace.active()
+        if tracer is not None and not tracer.plan_steps:
+            tracer = None
         st = None
         try:
-            for st in self.steps:
-                st.run(bufs, n)
+            if tracer is None and step_times is None:
+                for st in self.steps:
+                    st.run(bufs, n)
+            else:
+                clock = time.monotonic
+                for st in self.steps:
+                    t0 = clock()
+                    st.run(bufs, n)
+                    t1 = clock()
+                    if step_times is not None:
+                        step_times.append((st.label, t1 - t0))
+                    if tracer is not None:
+                        tracer.complete(st.label, "plan", t0, t1,
+                                        trace_id=trace_id)
         except Exception as e:
             # typed, attributable kernel failure: the serving layer's
             # circuit breaker keys off PlanError, and the label tells a

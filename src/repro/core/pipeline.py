@@ -42,6 +42,7 @@ from collections import OrderedDict
 from dataclasses import dataclass, field, fields, replace
 from typing import Dict, Optional, Tuple
 
+from ..obs import trace as _trace
 from . import cpsolver, serialize
 from .allocation import Allocation, AllocationError, allocate
 from .formats import FORMATS, FormatPlan, select_formats
@@ -436,6 +437,8 @@ def compile_graph(g: Graph, cfg: NPUConfig,
         key = (fp, cfg, opts.cache_key())
         hit = _cache_get(key)
         if hit is not None:
+            _trace.instant("program_cache", "compile",
+                           args={"model": g.name, "tier": "memory"})
             # same shared (immutable) program/tiling/allocation objects;
             # fresh timing envelope for this call
             return replace(hit, compile_s=time.monotonic() - t0,
@@ -445,13 +448,22 @@ def compile_graph(g: Graph, cfg: NPUConfig,
         if disk_dir:
             disk = _disk_get(disk_dir, fp, cfg, opts)
             if disk is not None:
+                _trace.instant("program_cache", "compile",
+                               args={"model": g.name, "tier": "disk"})
                 _cache_put(key, disk)
                 return replace(disk, compile_s=time.monotonic() - t0)
+    _trace.instant("program_cache", "compile",
+                   args={"model": g.name,
+                         "tier": "miss" if cache else "bypass"})
 
     phase: Dict[str, float] = {}
+    tr = _trace.active()
     t = time.monotonic()
     plan = select_formats(cfg, g, allowed=opts.formats)
     phase["formats"] = time.monotonic() - t
+    if tr is not None:
+        tr.complete("compile:formats", "compile", t,
+                    t + phase["formats"], args={"model": g.name})
 
     sched_opt = SchedOptions(
         overlap=opts.overlap,
@@ -520,10 +532,17 @@ def compile_graph(g: Graph, cfg: NPUConfig,
     if last_err is not None:
         raise last_err
     phase["schedule_allocate"] = time.monotonic() - t
+    if tr is not None:
+        tr.complete("compile:schedule_allocate", "compile", t,
+                    t + phase["schedule_allocate"],
+                    args={"model": g.name})
 
     res = CompileResult(prog, plan, tiling, alloc,
                         time.monotonic() - t0, phase,
                         cache_hit=False, cache_key=fp)
+    if tr is not None:
+        tr.complete("compile", "compile", t0,
+                    args={"model": g.name, "precision": opts.precision})
     if cache and key is not None:
         _cache_put(key, res)
         disk_dir = _disk_dir_snapshot()

@@ -26,9 +26,11 @@ compute order consumed by the scheduler.
 from __future__ import annotations
 
 import math
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from ..obs import trace as _trace
 from . import cpsolver
 from .formats import FormatPlan
 from .ir import Graph, Op, Tensor
@@ -1067,13 +1069,18 @@ def plan_tiling(cfg: NPUConfig, g: Graph, plan: FormatPlan,
     win_sols: Dict[int, List[Optional[cpsolver.Solution]]] = {
         ri: [None] * len(wf.windows) for ri, wf in wins.items()}
     if tasks:
-        for (kind, ri, wi), sol in zip(
-                slots, cpsolver.solve_many(tasks, parallel=parallel_cp)):
-            if kind == "cp":
-                sols[ri] = sol
-            else:
-                win_sols[ri][wi] = sol
+        with _trace.maybe_span("fusion_cp_solve", "compile",
+                               tasks=len(tasks), regions=len(cps),
+                               windows=len(slots) - len(cps)):
+            for (kind, ri, wi), sol in zip(
+                    slots, cpsolver.solve_many(tasks,
+                                               parallel=parallel_cp)):
+                if kind == "cp":
+                    sols[ri] = sol
+                else:
+                    win_sols[ri][wi] = sol
 
+    _t_stitch = time.monotonic() if _trace.active() is not None else None
     order: List[ComputeStep] = []
     objective = 0.0
     counts = {"cp": 0, "windowed": 0, "greedy": 0, "layerwise": 0}
@@ -1140,6 +1147,14 @@ def plan_tiling(cfg: NPUConfig, g: Graph, plan: FormatPlan,
             fused_steps += n_steps
         detail.append({"ops": len(region), "steps": n_steps,
                        "est_tiles": est.get(ri, 0), "mode": mode})
+
+    if _t_stitch is not None:
+        tr = _trace.active()
+        if tr is not None:
+            tr.complete("window_stitch", "compile", _t_stitch,
+                        args={"regions": len(regions),
+                              "windows": windows_total,
+                              "window_fallbacks": window_fallbacks})
 
     tiles = {t.name: TensorTiles(
         t.name, _mk_tiles(t, n_tiles[t.name], bank, opts[t.name][2]))

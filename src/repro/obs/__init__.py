@@ -1,0 +1,49 @@
+"""``repro.obs`` — Neutron-Trace: the unified observability layer.
+
+The paper's thesis is that *utilization*, not peak TOPS, decides real
+NPU performance — which makes measurement a first-class subsystem, not
+an afterthought.  This package is that subsystem, three pieces sharing
+one design rule (~zero cost when disabled, bounded memory when enabled):
+
+* :mod:`repro.obs.trace` — a span-based tracer.  A thread-safe ring
+  buffer of completed spans; one trace ID is threaded from
+  ``Session.submit()`` through queue wait, batch formation, worker
+  dispatch and per-``ExecPlan``-step kernel execution, and the whole
+  buffer exports as Chrome trace-event JSON loadable in Perfetto
+  (``ui.perfetto.dev``) or ``chrome://tracing``.
+* :mod:`repro.obs.metrics` — a metrics registry: counters, gauges and
+  log-bucketed histograms with label sets, rendered as Prometheus-style
+  text exposition (``Session.metrics()``).  The serving runtime's
+  latency/shed/deadline/breaker/retry counters, the compiler's
+  program-cache tier stats and the pool's worker health all live here
+  instead of per-module private dicts.
+* :mod:`repro.obs.profile` — an execution profiler correlating traced
+  wall time against the cost model's predicted cycles per step:
+  ``CompiledModel.profile()`` reports modeled-vs-actual occupancy, DDR
+  bandwidth and the per-op kernels the cost model over/under-prices.
+
+Quickstart::
+
+    from repro import obs
+
+    obs.trace.enable()                    # arm the span ring buffer
+    sess.submit(...); sess.flush()
+    tr = obs.trace.disable()
+    tr.export("trace.json")               # open in ui.perfetto.dev
+
+    print(sess.metrics())                 # Prometheus text exposition
+    print(model.profile(batch=8))         # modeled vs actual, per op
+"""
+from __future__ import annotations
+
+from . import metrics, trace
+from .metrics import LogHistogram, MetricsRegistry
+from .profile import ProfileReport, profile_model
+from .trace import Tracer, validate_chrome_trace
+
+__all__ = [
+    "trace", "metrics",
+    "Tracer", "validate_chrome_trace",
+    "MetricsRegistry", "LogHistogram",
+    "ProfileReport", "profile_model",
+]

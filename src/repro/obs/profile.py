@@ -1,0 +1,220 @@
+"""Execution profiler: traced wall time vs the cost model, per op.
+
+The paper's argument is that *sustained utilization* — not peak TOPS —
+decides real NPU performance.  The compiler's cost model predicts a
+schedule (cycles per compute job, DDR bytes per transfer); the replay
+engine then actually executes it.  This module correlates the two:
+
+* **modeled** — what the schedule claims: latency, compute occupancy
+  (compute-busy cycles / total cycles, i.e. how well DAE overlap hid
+  the DMA), DDR traffic and the bandwidth it implies at modeled speed;
+* **measured** — what one timed :class:`~repro.core.execplan.ExecPlan`
+  replay actually took, per request, with per-kernel step times;
+* **per-op correlation** — each op's share of modeled cycles vs its
+  share of measured kernel time.  The ``skew`` column (measured share /
+  modeled share) is the actionable number: ops with skew >> 1 are the
+  ones the cost model under-prices on this backend and where tuning
+  (or model recalibration) pays first.
+
+``CompiledModel.profile()`` is the entry point; the report renders as
+an aligned text table and round-trips through ``as_dict()`` for
+benches and dashboards.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+
+def _op_of_label(label: str) -> str:
+    """Kernel label -> op name.  Float lowering labels steps
+    ``op[r0:r1@axis]``; quant lowering labels fused kernels ``op@op``."""
+    return label.split("[", 1)[0].split("@", 1)[0]
+
+
+@dataclass
+class OpProfile:
+    op: str
+    kind: str
+    kernels: int                    # lowered kernels attributed to the op
+    measured_ms: float              # per-request wall time in its kernels
+    modeled_cycles: int
+    macs: int
+    measured_share: float = 0.0
+    modeled_share: float = 0.0
+
+    @property
+    def skew(self) -> float:
+        """measured share / modeled share — >1 means the cost model
+        under-prices this op on the measuring backend."""
+        if self.modeled_share <= 0.0:
+            return float("inf") if self.measured_share > 0 else 1.0
+        return self.measured_share / self.modeled_share
+
+
+@dataclass
+class ProfileReport:
+    model: str
+    precision: str
+    batch: int
+    runs: int
+    modeled: Dict[str, float]       # the cost model's claims
+    measured: Dict[str, float]      # the timed replay's reality
+    ops: List[OpProfile] = field(default_factory=list)
+
+    def as_dict(self) -> Dict:
+        return {
+            "model": self.model, "precision": self.precision,
+            "batch": self.batch, "runs": self.runs,
+            "modeled": dict(self.modeled),
+            "measured": dict(self.measured),
+            "ops": [{
+                "op": o.op, "kind": o.kind, "kernels": o.kernels,
+                "measured_ms": round(o.measured_ms, 6),
+                "modeled_cycles": o.modeled_cycles, "macs": o.macs,
+                "measured_share": round(o.measured_share, 4),
+                "modeled_share": round(o.modeled_share, 4),
+                "skew": round(o.skew, 3) if o.skew != float("inf")
+                else None,
+            } for o in self.ops],
+        }
+
+    def render(self, top: int = 12) -> str:
+        mo, me = self.modeled, self.measured
+        lines = [
+            f"Profile {self.model!r} [{self.precision}]  batch "
+            f"{self.batch}, best of {self.runs} run(s)",
+            f"  modeled   {mo['latency_ms']:.3f} ms/req  "
+            f"({mo['ticks']:.0f} ticks, "
+            f"{100 * mo['compute_occupancy']:.0f}% compute-occupied, "
+            f"{100 * mo['utilization']:.0f}% of peak TOPS)",
+            f"  modeled   DDR {mo['ddr_mb']:.2f} MB/req -> "
+            f"{mo['ddr_gb_s']:.2f} GB/s at modeled speed",
+            f"  measured  {me['wall_ms_per_request']:.3f} ms/req "
+            f"({me['kernel_ms_per_request']:.3f} ms in "
+            f"{me['kernels']:.0f} kernels)  "
+            f"sim {me['sim_tops']:.4f} TOPS "
+            f"({100 * me['sim_utilization']:.2f}% of peak)",
+            f"  measured  DDR bandwidth implied {me['ddr_gb_s']:.3f} "
+            f"GB/s  |  model-vs-actual speed x"
+            f"{me['model_vs_actual']:.1f}",
+            f"  {'op':<28}{'kind':<9}{'meas ms':>9}{'meas %':>8}"
+            f"{'model %':>9}{'skew':>7}",
+        ]
+        for o in self.ops[:top]:
+            skew = f"{o.skew:6.2f}" if o.skew != float("inf") else "   inf"
+            lines.append(
+                f"  {o.op:<28}{o.kind:<9}{o.measured_ms:9.3f}"
+                f"{100 * o.measured_share:7.1f}%"
+                f"{100 * o.modeled_share:8.1f}%{skew:>7}")
+        if len(self.ops) > top:
+            rest = sum(o.measured_ms for o in self.ops[top:])
+            lines.append(f"  ... {len(self.ops) - top} more op(s), "
+                         f"{rest:.3f} ms")
+        return "\n".join(lines)
+
+    def __str__(self) -> str:
+        return self.render()
+
+    __repr__ = __str__
+
+
+def profile_model(model, inputs=None, batch: int = 8, runs: int = 3,
+                  warmup: int = 1) -> ProfileReport:
+    """Timed, per-kernel-instrumented plan replay of ``model`` (a
+    :class:`repro.api.CompiledModel`), correlated against its cost
+    model.  ``inputs`` is one sample feed (dict or array); zeros when
+    omitted.  The best (min total) of ``runs`` replays is reported —
+    per-request numbers divide by ``batch``."""
+    g = model.graph
+    if inputs is None:
+        feed = {t.name: np.zeros(t.shape, dtype=np.float32)
+                for t in g.inputs}
+    else:
+        feed = model._normalize(inputs)
+    stacked = {k: np.repeat(np.asarray(v, dtype=np.float32)[None],
+                            batch, axis=0)
+               for k, v in feed.items()}
+    plan = model.plan_for(batch)
+    for _ in range(max(0, warmup)):
+        plan.run(stacked, n=batch)
+
+    best_wall = float("inf")
+    best_steps: List = []
+    for _ in range(max(1, runs)):
+        step_times: List = []
+        t0 = time.monotonic()
+        plan.run(stacked, n=batch, step_times=step_times)
+        wall = time.monotonic() - t0
+        if wall < best_wall:
+            best_wall, best_steps = wall, step_times
+
+    prog = model.program
+    stats = prog.stats()
+    lat_cycles = prog.latency_cycles()
+    compute_cycles = sum(t.l_c() for t in prog.ticks)
+    modeled_s = lat_cycles / model.cfg.freq_hz
+    ddr = prog.ddr_bytes()
+    modeled = {
+        "latency_ms": stats["latency_ms"],
+        "ticks": stats["ticks"],
+        "gmacs": stats["gmacs"],
+        "ddr_mb": stats["ddr_mb"],
+        "effective_tops": stats["effective_tops"],
+        "utilization": stats["utilization"],
+        "compute_occupancy": (compute_cycles / lat_cycles
+                              if lat_cycles else 0.0),
+        "ddr_gb_s": ddr / modeled_s / 1e9 if modeled_s else 0.0,
+    }
+
+    wall_per_req = best_wall / batch
+    kernel_s = sum(dt for _, dt in best_steps)
+    total_macs = prog.total_macs()
+    measured = {
+        "wall_ms_per_request": wall_per_req * 1e3,
+        "kernel_ms_per_request": kernel_s / batch * 1e3,
+        "kernels": float(len(best_steps)),
+        "sim_tops": (2 * total_macs / wall_per_req / 1e12
+                     if wall_per_req else 0.0),
+        "sim_utilization": (2 * total_macs / wall_per_req / 1e12
+                            / model.cfg.peak_tops if wall_per_req
+                            else 0.0),
+        "ddr_gb_s": ddr / wall_per_req / 1e9 if wall_per_req else 0.0,
+        # how many x slower the measuring backend runs than the modeled
+        # NPU — the correlation constant between the two columns
+        "model_vs_actual": (wall_per_req / modeled_s
+                            if modeled_s else 0.0),
+    }
+
+    # -- per-op attribution -------------------------------------------------
+    cyc: Dict[str, int] = {}
+    macs: Dict[str, int] = {}
+    for cj, _, _, _ in prog.compute_steps():
+        cyc[cj.op_name] = cyc.get(cj.op_name, 0) + cj.cycles
+        macs[cj.op_name] = macs.get(cj.op_name, 0) + cj.macs
+    meas: Dict[str, float] = {}
+    nker: Dict[str, int] = {}
+    for label, dt in best_steps:
+        op = _op_of_label(label)
+        meas[op] = meas.get(op, 0.0) + dt
+        nker[op] = nker.get(op, 0) + 1
+    total_cyc = sum(cyc.values()) or 1
+    total_meas = sum(meas.values()) or 1.0
+    kinds = {op.name: op.kind for op in g.ops}
+    ops: List[OpProfile] = []
+    for op in set(cyc) | set(meas):
+        o = OpProfile(
+            op=op, kind=kinds.get(op, "?"), kernels=nker.get(op, 0),
+            measured_ms=meas.get(op, 0.0) / batch * 1e3,
+            modeled_cycles=cyc.get(op, 0), macs=macs.get(op, 0))
+        o.measured_share = meas.get(op, 0.0) / total_meas
+        o.modeled_share = cyc.get(op, 0) / total_cyc
+        ops.append(o)
+    ops.sort(key=lambda o: o.measured_ms, reverse=True)
+
+    return ProfileReport(model=model.name, precision=model.precision,
+                         batch=batch, runs=max(1, runs),
+                         modeled=modeled, measured=measured, ops=ops)

@@ -18,6 +18,8 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import trace as _trace
+
 
 # --------------------------------------------------------------------------
 # Heartbeats / failure detection
@@ -65,6 +67,7 @@ class FaultMonitor:
 
     def mark_failed(self, host_id: int) -> None:
         self.failed.add(host_id)
+        _trace.instant("host_failed", "fault", args={"host": host_id})
 
     def retire(self, host_id: int) -> None:
         """Forget a host entirely (a recycled worker): it no longer
@@ -72,6 +75,7 @@ class FaultMonitor:
         self.beats.pop(host_id, None)
         self.step_times.pop(host_id, None)
         self.failed.discard(host_id)
+        _trace.instant("host_retired", "fault", args={"host": host_id})
 
     def dead_hosts(self, now: Optional[float] = None) -> List[int]:
         # `now if ... else` — not `now or`: now=0.0 is a legitimate

@@ -40,6 +40,8 @@ import time
 from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
+from ..obs import trace as _trace
+from ..obs.metrics import LogHistogram, MetricsRegistry
 from .fault import BackupDispatcher, FaultMonitor
 from . import chaos as _chaos
 
@@ -108,8 +110,9 @@ class Ticket:
     model's* queue (synchronous sessions) — a slow unrelated model never
     blocks an independent ticket."""
 
-    __slots__ = ("name", "deadline", "submitted_at", "_session", "_event",
-                 "_lock", "_done", "_value", "_error")
+    __slots__ = ("name", "deadline", "submitted_at", "trace_id",
+                 "_session", "_event", "_lock", "_done", "_value",
+                 "_error")
 
     def __init__(self, session, name: str,
                  deadline: Optional[float] = None):
@@ -117,6 +120,7 @@ class Ticket:
         self.name = name
         self.deadline = deadline          # chaos-clock absolute seconds
         self.submitted_at = time.monotonic()
+        self.trace_id = _trace.new_trace_id()
         self._event = threading.Event()
         self._lock = threading.Lock()
         self._done = False
@@ -164,54 +168,11 @@ class Ticket:
 # Latency histogram (p50/p99 without storing samples)
 # --------------------------------------------------------------------------
 
-
-class LatencyHistogram:
-    """Log-spaced latency histogram: O(1) record, ~5% quantile
-    resolution, fixed memory.  Thread-safe."""
-
-    def __init__(self, lo_ms: float = 0.05, hi_ms: float = 120_000.0,
-                 per_decade: int = 48):
-        self._lo = lo_ms
-        self._log_ratio = math.log(10.0) / per_decade
-        self._n = int(math.log(hi_ms / lo_ms) / self._log_ratio) + 2
-        self._counts = [0] * self._n
-        self._lock = threading.Lock()
-        self.count = 0
-        self.sum_ms = 0.0
-        self.max_ms = 0.0
-
-    def record(self, ms: float) -> None:
-        ms = max(ms, 0.0)
-        idx = 0 if ms <= self._lo else min(
-            self._n - 1, 1 + int(math.log(ms / self._lo) / self._log_ratio))
-        with self._lock:
-            self._counts[idx] += 1
-            self.count += 1
-            self.sum_ms += ms
-            self.max_ms = max(self.max_ms, ms)
-
-    def percentile(self, p: float) -> float:
-        """Upper edge of the bucket holding the p-th percentile (0 when
-        empty)."""
-        with self._lock:
-            if not self.count:
-                return 0.0
-            target = p / 100.0 * self.count
-            seen = 0
-            for i, c in enumerate(self._counts):
-                seen += c
-                if seen >= target:
-                    return self._lo * math.exp(i * self._log_ratio)
-            return self.max_ms
-
-    def snapshot(self) -> Dict[str, float]:
-        p50, p99 = self.percentile(50), self.percentile(99)
-        with self._lock:
-            return {"count": self.count,
-                    "mean_ms": self.sum_ms / self.count if self.count
-                    else 0.0,
-                    "p50_ms": p50, "p99_ms": p99,
-                    "max_ms": self.max_ms}
+#: the log-spaced histogram moved to :class:`repro.obs.metrics.
+#: LogHistogram` (same O(1) record / ~5% quantile resolution, now also
+#: the registry's summary-rendering child type); this alias keeps the
+#: serving-era name importable.
+LatencyHistogram = LogHistogram
 
 
 # --------------------------------------------------------------------------
@@ -227,9 +188,11 @@ class CircuitBreaker:
     ``half_open`` — a re-lower probe is in flight; its outcome closes
     or re-opens the breaker."""
 
-    def __init__(self, threshold: int = 3, cooldown_s: float = 2.0):
+    def __init__(self, threshold: int = 3, cooldown_s: float = 2.0,
+                 name: str = ""):
         self.threshold = int(threshold)
         self.cooldown_s = float(cooldown_s)
+        self.name = name                  # trace attribution only
         self.state = "closed"
         self.failures = 0                 # consecutive
         self.trips = 0
@@ -257,6 +220,9 @@ class CircuitBreaker:
                 self.state = "open"
                 self.opened_at = now
                 self.trips += 1
+                _trace.instant("breaker_open", "fault",
+                               args={"model": self.name,
+                                     "failures": self.failures})
                 return True
             return False
 
@@ -268,6 +234,8 @@ class CircuitBreaker:
             if self.state == "open" and \
                     now - self.opened_at >= self.cooldown_s:
                 self.state = "half_open"
+                _trace.instant("breaker_half_open", "fault",
+                               args={"model": self.name})
                 return True
             return False
 
@@ -282,6 +250,8 @@ class CircuitBreaker:
             self.state = "closed"
             self.failures = 0
             self.recoveries += 1
+        _trace.instant("breaker_closed", "fault",
+                       args={"model": self.name})
 
     def snapshot(self) -> Dict[str, object]:
         with self._lock:
@@ -329,11 +299,20 @@ class ServerPool:
     control, deadline-driven dispatch, heartbeat-based failure
     detection, in-flight re-dispatch and worker recycling."""
 
+    #: dispatch estimate before a model has served enough batches for a
+    #: meaningful p99 (and the admission-control retry-hint fallback)
+    DEFAULT_EST_MS = 5.0
+    #: batches a model must have served before its histogram is trusted
+    MIN_EST_SAMPLES = 4
+    #: recompute the memoized p99 after this many new samples
+    EST_REFRESH = 16
+
     def __init__(self, execute: Callable, *, workers: int = 2,
                  max_batch: int = 8, max_queue: int = 64,
                  linger_ms: float = 2.0,
                  heartbeat_timeout_s: float = 0.5,
-                 straggler_backup_after_s: Optional[float] = None):
+                 straggler_backup_after_s: Optional[float] = None,
+                 registry: Optional[MetricsRegistry] = None):
         self._execute = execute
         self.max_batch = int(max_batch)
         self.max_queue = int(max_queue)
@@ -345,12 +324,25 @@ class ServerPool:
         self.monitor = FaultMonitor(n_hosts=workers,
                                     timeout_s=heartbeat_timeout_s)
         self.dispatcher = BackupDispatcher(self.monitor)
+        self.registry = registry if registry is not None \
+            else MetricsRegistry()
+        #: per-model batch service time — the deadline-driven auto-flush
+        #: reserves this model's *p99* before each ticket's deadline
+        #: (tail-safe, unlike the EWMA it replaced: one slow outlier
+        #: batch no longer decays out of the estimate while stragglers
+        #: are still possible)
+        self._batch_ms = self.registry.histogram(
+            "repro_pool_batch_ms",
+            "batch service time per model (pool workers)", ("model",))
+        #: name -> (hist count at compute time, p99) memo — _claim_locked
+        #: runs under the pool lock on every worker wake, so the bucket
+        #: scan is amortized over EST_REFRESH new samples
+        self._est_memo: Dict[str, Tuple[int, float]] = {}
 
         self._cv = threading.Condition()
         self._queues: Dict[str, deque] = {}
         self._inflight: Dict[int, _InFlight] = {}
         self._workers: Dict[int, _Worker] = {}
-        self._ewma_ms: Dict[str, float] = {}
         self._running = True
         self._next_wid = workers
         self._seq = 0
@@ -367,6 +359,24 @@ class ServerPool:
             target=self._supervise, name="npu-pool-supervisor", daemon=True)
         self._supervisor.start()
 
+    # -- dispatch estimate (p99 of served batches) --------------------------
+    def _dispatch_est_ms(self, name: str, p: float = 99.0) -> float:
+        """How long a batch of ``name`` is expected to take, from the
+        *p99* of its served-batch histogram — the reservation the
+        deadline-driven auto-flush subtracts from a ticket's deadline.
+        Memoized by sample count (the claim loop calls this constantly
+        under the pool lock)."""
+        h = self._batch_ms.labels(model=name)
+        count = h.count
+        if count < self.MIN_EST_SAMPLES:
+            return self.DEFAULT_EST_MS
+        memo = self._est_memo.get(name)
+        if memo is not None and count - memo[0] < self.EST_REFRESH:
+            return memo[1]
+        est = h.percentile(p)
+        self._est_memo[name] = (count, est)
+        return est
+
     # -- admission ----------------------------------------------------------
     def submit(self, name: str, feed, ticket: Ticket) -> None:
         with self._cv:
@@ -376,8 +386,15 @@ class ServerPool:
             if len(q) >= self.max_queue:
                 self.counters["shed"] += 1
                 self.shed[name] = self.shed.get(name, 0) + 1
-                est = self._ewma_ms.get(name, 10.0)
+                # retry hint from the typical (p50) batch time — the
+                # tail estimate would over-back-off healthy clients
+                h = self._batch_ms.labels(model=name)
+                est = h.percentile(50) \
+                    if h.count >= self.MIN_EST_SAMPLES else 10.0
                 retry = max(1.0, est * (len(q) / max(1, self.max_batch)))
+                _trace.instant("shed", "serving",
+                               trace_id=ticket.trace_id,
+                               args={"model": name, "depth": len(q)})
                 raise Overloaded(name, len(q), retry)
             q.append((feed, ticket, _chaos.now()))
             self._cv.notify()
@@ -392,6 +409,10 @@ class ServerPool:
     def _miss_locked(self, name: str, ticket: Ticket, now: float) -> None:
         self.counters["deadline_misses"] += 1
         self.deadline_misses[name] = self.deadline_misses.get(name, 0) + 1
+        _trace.instant("deadline_miss", "serving",
+                       trace_id=ticket.trace_id,
+                       args={"model": name,
+                             "late_ms": (now - ticket.deadline) * 1e3})
         ticket._fail(DeadlineExceeded(
             name, late_ms=(now - ticket.deadline) * 1e3))
 
@@ -408,7 +429,7 @@ class ServerPool:
             _, ticket, enq = q[0]
             due = enq + self.linger_s
             if ticket.deadline is not None:
-                est = self._ewma_ms.get(name, 5.0) / 1e3
+                est = self._dispatch_est_ms(name) / 1e3
                 due = min(due, ticket.deadline - est)
             if len(q) >= self.max_batch:
                 due = now
@@ -485,14 +506,16 @@ class ServerPool:
                     ticket._fail(e if isinstance(e, Exception)
                                  else ServingError(repr(e)))
             dt = time.monotonic() - t0
+            tr = _trace.active()
+            if tr is not None:
+                tr.complete("worker", "serving", t0, t0 + dt,
+                            args={"model": name, "worker": wid,
+                                  "n": len(entries)})
+            self._batch_ms.observe(dt * 1e3, model=name)
             with self._cv:
                 self._inflight.pop(wid, None)
                 w.batches += 1
                 w.requests += len(entries)
-                prev = self._ewma_ms.get(name)
-                ms = dt * 1e3
-                self._ewma_ms[name] = ms if prev is None \
-                    else 0.7 * prev + 0.3 * ms
                 self.monitor.beat(wid, w.seq, step_time_s=dt)
                 self._cv.notify_all()
 
@@ -526,6 +549,10 @@ class ServerPool:
                     self.dispatcher.backups_issued.append(
                         (inf.seq, wid, -1))
                     self.counters["speculative_backups"] += 1
+                    _trace.instant("speculative_backup", "fault",
+                                   args={"model": inf.name,
+                                         "worker": wid,
+                                         "live": len(live)})
                     self._cv.notify_all()
 
     def _recycle_locked(self, wid: int) -> None:
@@ -546,6 +573,9 @@ class ServerPool:
             self.dispatcher.backups_issued.append((inf.seq, wid, new_wid))
         self.monitor.retire(wid)
         self.counters["recycled_workers"] += 1
+        _trace.instant("worker_recycled", "fault",
+                       args={"worker": wid, "replacement": new_wid,
+                             "redispatched": inf is not None})
         self._spawn_locked(new_wid)
         self._cv.notify_all()
 
@@ -611,8 +641,14 @@ class ServerPool:
                                 if not w.abandoned]),
                 "queued": {n: len(q) for n, q in self._queues.items()
                            if q},
-                "ewma_batch_ms": {n: round(v, 3)
-                                  for n, v in self._ewma_ms.items()},
+                "dispatch_est_ms": {
+                    n: round(self._dispatch_est_ms(n), 3)
+                    for (n,), h in self._batch_ms.series().items()
+                    if h.count},
+                "batch_ms": {
+                    n: h.snapshot()
+                    for (n,), h in self._batch_ms.series().items()
+                    if h.count},
                 "backups_issued": len(self.dispatcher.backups_issued),
                 **self.counters,
             }

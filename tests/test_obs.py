@@ -1,0 +1,460 @@
+"""Observability layer: tracer, metrics registry, Chrome export,
+profiler, and their serving-runtime integration.
+
+The contract under test: (1) the exported Chrome trace is structurally
+valid (per-thread span nesting, required keys per phase) and carries
+one request's trace id from the submitting thread to the worker that
+served it; (2) ``Session.metrics()`` renders a Prometheus exposition
+covering latency, shedding, breaker state and the program cache;
+(3) tracing costs <= 5% on the batch-8 replay hot path; (4) the bench
+summary aggregator fails red gates.
+"""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core import NEUTRON_2TOPS, program_cache_clear, \
+    program_cache_configure, program_cache_info
+from repro.obs import trace
+from repro.obs.metrics import LogHistogram, MetricsRegistry
+from repro.obs.trace import Tracer, validate_chrome_trace
+
+from test_execplan import random_graph, _inputs
+
+
+@pytest.fixture(autouse=True)
+def _tracer_disarmed():
+    """No test leaks an armed global tracer into its neighbours."""
+    trace.disable()
+    yield
+    trace.disable()
+
+
+@pytest.fixture(autouse=True)
+def _isolated_cache():
+    saved = program_cache_info()
+    program_cache_clear()
+    program_cache_configure(max_entries=64, max_bytes=None, disk_dir=None)
+    yield
+    program_cache_clear()
+    program_cache_configure(max_entries=saved["max_entries"],
+                            max_bytes=saved["max_bytes"],
+                            disk_dir=saved["disk_dir"])
+
+
+# --------------------------------------------------------------------------
+# LogHistogram / metric families / registry
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_loghistogram_percentiles_and_snapshot():
+    h = LogHistogram()
+    for v in [1.0] * 90 + [100.0] * 10:
+        h.record(v)
+    assert h.count == 100
+    assert h.percentile(50) == pytest.approx(1.0, rel=0.10)
+    assert h.percentile(99) == pytest.approx(100.0, rel=0.10)
+    snap = h.snapshot()
+    assert set(snap) == {"count", "mean_ms", "p50_ms", "p99_ms", "max_ms"}
+    assert snap["max_ms"] == 100.0
+    # serving-era aliases survive the absorption
+    assert h.sum_ms == h.sum and h.max_ms == h.max
+
+
+@pytest.mark.fast
+def test_loghistogram_empty_and_clamping():
+    h = LogHistogram()
+    assert h.percentile(99) == 0.0
+    h.record(-5.0)                     # clamped into the lowest bucket
+    assert h.percentile(50) <= h._lo
+
+
+@pytest.mark.fast
+def test_registry_families_are_idempotent():
+    reg = MetricsRegistry()
+    c1 = reg.counter("repro_x_total", "x", ("model",))
+    c2 = reg.counter("repro_x_total", "ignored", ("model",))
+    assert c1 is c2
+    c1.inc(2, model="a")
+    c2.inc(3, model="a")
+    assert c1.value(model="a") == 5.0
+
+
+@pytest.mark.fast
+def test_registry_rejects_kind_and_label_mismatch():
+    reg = MetricsRegistry()
+    reg.counter("repro_x_total", "x", ("model",))
+    with pytest.raises(ValueError):
+        reg.gauge("repro_x_total")             # kind changed
+    with pytest.raises(ValueError):
+        reg.counter("repro_x_total", "x", ("worker",))  # labels changed
+    with pytest.raises(ValueError):
+        reg.counter("bad name")                # invalid metric name
+    c = reg.counter("repro_y_total", "y", ("model",))
+    with pytest.raises(ValueError):
+        c.inc(1, worker="w0")                  # wrong label set
+    with pytest.raises(ValueError):
+        c.inc(-1, model="a")                   # counters only go up
+
+
+@pytest.mark.fast
+def test_registry_render_and_collector():
+    reg = MetricsRegistry()
+    reg.counter("repro_req_total", "requests", ("model",)).inc(3, model="a")
+    reg.histogram("repro_lat_ms", "latency", ("model",)) \
+        .observe(12.5, model="a")
+    seen = []
+    reg.register_collector(
+        lambda: (seen.append(1),
+                 reg.gauge("repro_depth", "queue depth").set(4))[0])
+    text = reg.render()
+    assert seen, "collector must run at render time"
+    assert "# TYPE repro_req_total counter" in text
+    assert 'repro_req_total{model="a"} 3' in text
+    assert "# TYPE repro_lat_ms summary" in text
+    assert 'repro_lat_ms{model="a",quantile="0.99"}' in text
+    assert 'repro_lat_ms_count{model="a"} 1' in text
+    assert "repro_depth 4" in text
+    snap = reg.snapshot()
+    assert snap["repro_req_total"]["model=a"] == 3.0
+    assert snap["repro_lat_ms"]["model=a"]["count"] == 1
+
+
+# --------------------------------------------------------------------------
+# tracer + Chrome export schema
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_tracer_ring_is_bounded():
+    tr = Tracer(capacity=8)
+    for i in range(50):
+        tr.instant(f"e{i}", "t")
+    assert len(tr) == 8
+    assert tr.events()[0][0] == "e42"          # oldest evicted first
+
+
+@pytest.mark.fast
+def test_chrome_export_schema_and_nesting():
+    tr = Tracer()
+    t0 = tr.clock()
+    tr.complete("outer", "c", t0, t0 + 0.010)
+    tr.complete("inner", "c", t0 + 0.002, t0 + 0.006)
+    tr.instant("tick", "c", args={"k": 1})
+    doc = tr.chrome_trace()
+    assert validate_chrome_trace(doc) == []
+    phs = [d["ph"] for d in doc["traceEvents"]]
+    assert "M" in phs and "X" in phs and "i" in phs
+    assert doc["displayTimeUnit"] == "ms"
+    json.dumps(doc)                            # must be serializable
+
+
+@pytest.mark.fast
+def test_validator_flags_partial_overlap_and_bad_events():
+    bad = {"traceEvents": [
+        {"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 0, "dur": 10},
+        {"name": "b", "ph": "X", "pid": 1, "tid": 1, "ts": 5, "dur": 10},
+        {"name": "c", "ph": "X", "pid": 1, "tid": 1, "ts": 0},
+        {"name": "d", "ph": "b", "pid": 1, "tid": 1, "ts": 0},
+    ]}
+    problems = validate_chrome_trace(bad)
+    assert any("partially overlaps" in p for p in problems)
+    assert any("needs dur" in p for p in problems)
+    assert any("missing id" in p for p in problems)
+    assert validate_chrome_trace({}) != []
+
+
+@pytest.mark.fast
+def test_async_cat_exports_begin_end_pairs():
+    """cat='async:*' spans become b/e pairs keyed by trace id — the
+    cross-thread queue-wait representation that keeps per-thread
+    nesting valid."""
+    tr = Tracer()
+    t0 = tr.clock()
+    tr.complete("queue_wait", "async:serving", t0 - 0.005, t0,
+                trace_id=41)
+    doc = tr.chrome_trace()
+    assert validate_chrome_trace(doc) == []
+    pair = [d for d in doc["traceEvents"] if d["name"] == "queue_wait"]
+    assert [d["ph"] for d in pair] == ["b", "e"]
+    assert all(d["id"] == 41 and d["cat"] == "serving" for d in pair)
+
+
+@pytest.mark.fast
+def test_flow_arrows_stitch_trace_id_across_threads():
+    tr = Tracer()
+    t0 = tr.clock()
+    tr.complete("submit", "serving", t0, t0 + 0.001, trace_id=7)
+
+    def worker():
+        tr.complete("serve", "serving", t0 + 0.002, t0 + 0.004,
+                    trace_id=7)
+
+    th = threading.Thread(target=worker)
+    th.start()
+    th.join()
+    doc = tr.chrome_trace()
+    assert validate_chrome_trace(doc) == []
+    flows = [d for d in doc["traceEvents"] if d.get("cat") == "flow"]
+    assert [d["ph"] for d in flows] == ["s", "f"]
+    assert all(d["id"] == 7 for d in flows)
+    assert flows[-1]["bp"] == "e"
+
+
+@pytest.mark.fast
+def test_switchboard_and_maybe_span():
+    assert trace.active() is None
+    with trace.maybe_span("noop", "t"):        # disabled: no-op
+        pass
+    tr = trace.enable(capacity=64)
+    assert trace.active() is tr
+    with trace.maybe_span("op", "t", trace_id=3, k=1):
+        pass
+    trace.instant("i1", "t")
+    got = trace.disable()
+    assert got is tr and trace.active() is None
+    names = [e[0] for e in tr.events()]
+    assert names == ["op", "i1"]
+    assert tr.events()[0][6] == 3              # trace_id threaded
+
+
+@pytest.mark.fast
+def test_trace_session_context_manager(tmp_path):
+    with trace.session(capacity=32) as tr:
+        with tr.span("work", "t", n=2):
+            pass
+    assert trace.active() is None
+    path = tr.export(str(tmp_path / "trace.json"))
+    with open(path) as f:
+        doc = json.load(f)
+    assert validate_chrome_trace(doc) == []
+    assert any(d.get("name") == "work" for d in doc["traceEvents"])
+
+
+# --------------------------------------------------------------------------
+# compile + replay instrumentation (single-threaded, fast)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_compile_and_replay_emit_spans():
+    with trace.session() as tr:
+        m = api.compile(random_graph(3), NEUTRON_2TOPS, precision="int8",
+                        cache=False)
+        m(_inputs(m.graph, 1, seed=3)[0])
+    names = {e[0] for e in tr.events()}
+    cats = {e[1] for e in tr.events()}
+    assert "compile" in names
+    assert "compile:formats" in names
+    assert "compile:schedule_allocate" in names
+    assert "plan" in cats, "ExecPlan must emit per-kernel spans"
+    assert validate_chrome_trace(tr.chrome_trace()) == []
+
+
+@pytest.mark.fast
+def test_plan_steps_false_skips_kernel_spans():
+    m = api.compile(random_graph(3), NEUTRON_2TOPS, precision="int8",
+                    cache=False)
+    x = _inputs(m.graph, 1, seed=3)[0]
+    with trace.session(plan_steps=False) as tr:
+        m(x)
+    assert not any(e[1] == "plan" for e in tr.events())
+
+
+@pytest.mark.fast
+def test_program_cache_tier_instants():
+    with trace.session() as tr:
+        api.compile(random_graph(4), precision="int8")    # miss
+        api.compile(random_graph(4), precision="int8")    # memory hit
+    tiers = [e[7]["tier"] for e in tr.events()
+             if e[0] == "program_cache"]
+    assert tiers[0] == "miss" and "memory" in tiers[1:]
+
+
+# --------------------------------------------------------------------------
+# profiler
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_profile_correlates_model_and_measurement():
+    m = api.compile(random_graph(5), NEUTRON_2TOPS, precision="int8",
+                    cache=False)
+    rep = m.profile(batch=2, runs=1)
+    assert rep.modeled["latency_ms"] > 0
+    assert rep.measured["wall_ms_per_request"] > 0
+    assert 0 < rep.modeled["utilization"] <= 1.0
+    assert rep.measured["model_vs_actual"] > 0
+    assert rep.ops, "per-op attribution must be populated"
+    shares = sum(op.measured_share for op in rep.ops)
+    assert shares == pytest.approx(1.0, abs=1e-6)
+    top = rep.ops[0]
+    assert top.kernels >= 1 and top.measured_ms >= 0
+    text = rep.render()
+    assert "modeled" in text and top.op in text
+    d = rep.as_dict()
+    json.dumps(d)
+    assert d["ops"][0]["op"] == top.op
+
+
+# --------------------------------------------------------------------------
+# Session metrics exposition
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_session_metrics_exposition_covers_runtime():
+    with api.Session(max_batch=4) as sess:
+        sess.add(random_graph(0), name="m0", precision="int8")
+        x = _inputs(sess["m0"].graph, 1)[0]
+        tickets = [sess.submit("m0", x) for _ in range(3)]
+        sess.flush("m0")
+        assert all(t.done and t.error is None for t in tickets)
+        text = sess.metrics()
+    assert "# TYPE repro_request_latency_ms summary" in text
+    assert 'repro_request_latency_ms_count{model="m0"} 3' in text
+    assert 'repro_requests_total{model="m0"} 3' in text
+    assert "# TYPE repro_shed_total counter" in text
+    assert 'repro_breaker_state{model="m0"} 0' in text
+    assert "repro_program_cache_total" in text
+    assert 'repro_modeled_latency_ms{model="m0"}' in text
+    assert "repro_queue_depth 0" in text
+    # exposition and stats() share one histogram: no dual bookkeeping
+    st = sess.stats()
+    assert st["models"]["m0"]["latency"]["count"] == 3
+
+
+# --------------------------------------------------------------------------
+# pooled round trip through the exporter (live worker threads)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.chaos
+def test_pooled_round_trip_trace_and_metrics():
+    tr = trace.enable()
+    sess = api.Session(max_batch=4, workers=2, max_queue=64,
+                       linger_ms=1.0)
+    sess.add(random_graph(0), name="m0", precision="int8")
+    x = _inputs(sess["m0"].graph, 1)[0]
+    tickets = [sess.submit("m0", x) for _ in range(12)]
+    for t in tickets:
+        t.result(timeout=30)
+    metrics_text = sess.metrics()
+    sess.close()
+    trace.disable()
+
+    doc = tr.chrome_trace()
+    assert validate_chrome_trace(doc) == []
+    evs = doc["traceEvents"]
+    names = {d.get("name") for d in evs}
+    for want in ("submit", "queue_wait", "batch", "worker", "serve"):
+        assert want in names, f"missing {want!r} span"
+    assert any(d.get("cat") == "plan" for d in evs)
+
+    # trace-id propagation: some request's submit span (caller thread)
+    # and serve span (worker thread) share a trace id on distinct tids
+    def ids(name):
+        return {d["args"]["trace_id"]: d["tid"] for d in evs
+                if d.get("name") == name and d.get("ph") == "X"
+                and "trace_id" in d.get("args", {})}
+
+    submits, serves = ids("submit"), ids("serve")
+    crossed = [i for i in submits.keys() & serves.keys()
+               if submits[i] != serves[i]]
+    assert crossed, "no request crossed submitter -> worker thread"
+    flow_ids = {d["id"] for d in evs if d.get("cat") == "flow"}
+    assert flow_ids & set(crossed), "flow arrows missing for the hop"
+
+    assert 'repro_pool_batch_ms' in metrics_text
+    assert 'repro_worker_alive' in metrics_text
+    assert 'repro_pool_workers 2' in metrics_text
+
+
+@pytest.mark.chaos
+def test_dispatch_estimate_from_batch_time_p99():
+    """Satellite: deadline auto-flush dispatch estimate is the p99 of
+    the pool's observed batch service times, not an EWMA."""
+    sess = api.Session(max_batch=4, workers=1, max_queue=64,
+                       linger_ms=1.0)
+    sess.add(random_graph(0), name="m0", precision="int8")
+    pool = sess._pool
+    assert pool._dispatch_est_ms("m0") == pool.DEFAULT_EST_MS
+    x = _inputs(sess["m0"].graph, 1)[0]
+    ts = [sess.submit("m0", x) for _ in range(16)]
+    for t in ts:
+        t.result(timeout=30)
+    h = pool._batch_ms.labels(model="m0")
+    assert h.count >= pool.MIN_EST_SAMPLES
+    est = pool._dispatch_est_ms("m0")
+    assert est == pytest.approx(h.percentile(99))
+    st = pool.stats()
+    assert "dispatch_est_ms" in st and "ewma_batch_ms" not in st
+    assert st["batch_ms"]["m0"]["count"] == h.count
+    sess.close()
+
+
+# --------------------------------------------------------------------------
+# overhead gate: tracing <= 5% on the batch-8 replay hot path
+# --------------------------------------------------------------------------
+
+
+def test_tracing_overhead_under_5pct_on_batch8_replay():
+    m = api.compile("mobilenet_v2", NEUTRON_2TOPS, precision="int8",
+                    res_scale=0.25, cache=False)
+    rng = np.random.default_rng(0)
+    t_in = m.graph.inputs[0]
+    reqs = [rng.normal(size=t_in.shape).astype(np.float32)
+            for _ in range(8)]
+    m.run_many(reqs)                          # build the batch-8 plan
+
+    def best_of(n):
+        best = float("inf")
+        for _ in range(n):
+            t0 = time.monotonic()
+            m.run_many(reqs)
+            best = min(best, time.monotonic() - t0)
+        return best
+
+    base = best_of(5)
+    tr = trace.enable()
+    traced = best_of(5)
+    trace.disable()
+    assert len(tr) > 0, "tracer saw no events while armed"
+    assert traced <= base * 1.05 + 2e-3, \
+        f"tracing overhead {traced / base - 1:.1%} exceeds 5% " \
+        f"(base {base * 1e3:.2f} ms, traced {traced * 1e3:.2f} ms)"
+
+
+# --------------------------------------------------------------------------
+# bench summary aggregator
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_write_summary_gates(tmp_path, monkeypatch, capsys):
+    from benchmarks.run import write_summary
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps({"ok_gate": True, "speed": 1.2}))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"ok_gate": True, "red_gate": False}))
+    out = tmp_path / "summary.json"
+
+    rc = write_summary([("good", str(good), 0)], out=str(out))
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert doc["ok"] and doc["benches"][0]["passed"]
+    assert doc["benches"][0]["gates"] == {"ok_gate": True}
+
+    # a red gate fails the summary even when the bench's rc was 0
+    assert write_summary([("bad", str(bad), 0)], out=str(out)) == 1
+    assert not json.loads(out.read_text())["ok"]
+    # a nonzero bench rc fails it even with green gates
+    assert write_summary([("good", str(good), 1)], out=str(out)) == 1
+    # a missing artifact fails it
+    assert write_summary(
+        [("ghost", str(tmp_path / "nope.json"), 0)], out=str(out)) == 1
