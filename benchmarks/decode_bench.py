@@ -1,0 +1,173 @@
+"""LM decode benchmark: prefill latency + steady-state tokens/s.
+
+The causal-operator subsystem serves transformer decode on the NPU
+path: :class:`repro.api.DecodeSession` compiles the prefill and
+single-token decode graphs once per (sequence, KV-bucket) shape and
+then replays the *same* cached per-step plan every token.  This bench
+measures, for float32 and int8:
+
+  * **prefill latency** — prompt in, first token out (the compiled
+    prefill graph at the prompt's sequence bucket);
+  * **steady-state decode** — tokens/s over a greedy generation loop,
+    after a short warmup, including any KV-bucket growth the loop
+    crosses;
+  * **parity, in-bench** — ``CompiledModel.verify`` on a live decode
+    step feed (real request caches, not synthetic zeros): the compiled
+    plan must reproduce the interpretive executor bit-exactly for
+    float32 and within one output quantization step for int8;
+  * **zero re-lowering** — after warmup every compiled model's plan
+    cache must be frozen: ``builds == 1`` per model while ``hits``
+    accumulate one per decode step.  A re-lowering mid-stream is a
+    latency cliff, so it is a hard gate, not a statistic.
+
+Writes ``BENCH_decode.json``.
+
+    PYTHONPATH=src python -m benchmarks.decode_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.api import DecodeSession
+from repro.core import NEUTRON_2TOPS
+from repro.frontends import lm
+
+PROMPT = [3, 17, 42, 5, 9, 1]
+
+
+def _decode_step_parity(sess: DecodeSession, rid: str) -> float:
+    """Run ``verify`` on the request's *live* decode-step feed (its
+    actual caches and position) — raises on plan/interp divergence;
+    returns the worst output error actually observed."""
+    r = sess._requests[rid]
+    m = sess.model(1, r.bucket)
+    g = m.graph
+    feed: Dict[str, np.ndarray] = {
+        "x": sess._lm.embed(sess._emb, [r.tokens[-1]]),
+        "pos": np.full((1, 1, 1), float(r.pos), np.float32)}
+    feed.update(r.caches)
+    rep = m.verify(feed)            # raises unless within parity tol
+    assert rep.ok
+    plan_out = m(feed)
+    err = 0.0
+    for t in g.outputs:
+        err = max(err, float(np.max(np.abs(
+            plan_out[t.name] - rep.outputs[t.name]))))
+    return err
+
+
+def bench_precision(precision: str, new_tokens: int, prefill_runs: int
+                    ) -> Dict:
+    sess = DecodeSession(spec=lm.tiny_spec(), precision=precision,
+                         config=NEUTRON_2TOPS, cache=False)
+
+    # compile + plan warmup on a throwaway request, then time prefill
+    # on fresh requests (compile and lowering are one-time costs)
+    rid0, _ = sess.prefill(PROMPT)
+    sess.step(rid0)
+    sess.step(rid0)
+    parity_err = _decode_step_parity(sess, rid0)
+    sess.finish(rid0)
+
+    prefill_t = []
+    for _ in range(max(1, prefill_runs)):
+        t0 = time.monotonic()
+        rid, _ = sess.prefill(PROMPT)
+        prefill_t.append(time.monotonic() - t0)
+        if len(prefill_t) < prefill_runs:
+            sess.finish(rid)
+    t_prefill = min(prefill_t)
+
+    # steady state: every model involved is compiled/lowered by the
+    # time the timed loop starts *except* grown buckets, which the
+    # zero-relowering gate deliberately includes (first use builds
+    # once, every later step must hit)
+    builds_before = {k: s["plan"]["builds"]
+                     for k, s in sess.stats().items()}
+    step_t = []
+    t0 = time.monotonic()
+    for _ in range(new_tokens):
+        t1 = time.monotonic()
+        sess.step(rid)
+        step_t.append(time.monotonic() - t1)
+    t_loop = time.monotonic() - t0
+    tokens = sess.tokens(rid)
+    sess.finish(rid)
+
+    st = sess.stats()
+    builds = {k: s["plan"]["builds"] for k, s in st.items()}
+    hits = sum(s["plan"]["hits"] for s in st.values())
+    # warm models must not re-lower; models first used inside the loop
+    # (bucket growth) build exactly once
+    relower_ok = all(b == 1 for b in builds.values()) and all(
+        builds[k] == builds_before[k] for k in builds_before)
+
+    return {
+        "precision": precision,
+        "prompt_tokens": len(PROMPT),
+        "new_tokens": new_tokens,
+        "prefill_ms": round(t_prefill * 1e3, 3),
+        "decode_ms_per_token": round(min(step_t) * 1e3, 3),
+        "tokens_per_s": round(new_tokens / t_loop, 2),
+        "parity_ok": True,           # _decode_step_parity raises if not
+        "parity_err": parity_err,
+        "zero_relowering": bool(relower_ok),
+        "models": {k: {"builds": s["plan"]["builds"],
+                       "hits": s["plan"]["hits"],
+                       "source": s["source"]} for k, s in st.items()},
+        "plan_hits": hits,
+        "tokens_sample": tokens[len(PROMPT):len(PROMPT) + 8],
+    }
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter generation, fewer prefill repeats")
+    ap.add_argument("--out", default="BENCH_decode.json")
+    args = ap.parse_args(argv)
+
+    new_tokens = 10 if args.quick else 40
+    prefill_runs = 2 if args.quick else 4
+
+    rows = []
+    for precision in ("float32", "int8"):
+        print(f"[decode_bench] lm-tiny [{precision}] prefill + "
+              f"{new_tokens} tokens ...", flush=True)
+        row = bench_precision(precision, new_tokens, prefill_runs)
+        rows.append(row)
+        print(f"  prefill {row['prefill_ms']:8.2f} ms   decode "
+              f"{row['decode_ms_per_token']:6.2f} ms/tok "
+              f"({row['tokens_per_s']:7.1f} tok/s)   parity "
+              f"{row['parity_ok']} (err {row['parity_err']:.2e})   "
+              f"relower-free {row['zero_relowering']}", flush=True)
+
+    result = {
+        "config": NEUTRON_2TOPS.name,
+        "spec": lm.tiny_spec().name,
+        "rows": rows,
+        "all_parity_ok": all(r["parity_ok"] for r in rows),
+        "zero_relowering_ok": all(r["zero_relowering"] for r in rows),
+        "float32_parity_exact": bool(
+            next(r for r in rows if r["precision"] == "float32")
+            ["parity_err"] == 0.0),
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[decode_bench] parity {result['all_parity_ok']}, "
+          f"float32 exact {result['float32_parity_exact']}, "
+          f"zero re-lowering {result['zero_relowering_ok']} "
+          f"-> {args.out}")
+    ok = (result["all_parity_ok"] and result["zero_relowering_ok"]
+          and result["float32_parity_exact"])
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -63,6 +63,7 @@ def main(argv=None):
     ap.add_argument("--skip-fusion", action="store_true")
     ap.add_argument("--skip-serve", action="store_true")
     ap.add_argument("--skip-robust", action="store_true")
+    ap.add_argument("--skip-decode", action="store_true")
     ap.add_argument("--cache-dir", default=None,
                     help="enable the on-disk program-cache tier at this "
                          "directory (CI keys its cache on it; a warm dir "
@@ -114,6 +115,10 @@ def main(argv=None):
         r = robust_bench.main(["--quick",
                                "--out", "BENCH_robust_quick.json"])
         entries.append(("robust", "BENCH_robust_quick.json", r))
+        from . import decode_bench
+        r = decode_bench.main(["--quick",
+                               "--out", "BENCH_decode_quick.json"])
+        entries.append(("decode", "BENCH_decode_quick.json", r))
         rc |= max(e[2] for e in entries)
         rc |= write_summary(entries)
         if args.cache_dir:
@@ -206,6 +211,19 @@ def main(argv=None):
         r = robust_bench.main(["--quick", "--out", path]
                               if args.fast else [])
         entries.append(("robust", path, r))
+        rc |= r
+
+    if not args.skip_decode:
+        print("=" * 72)
+        print("LM DECODE (prefill + streaming tokens/s on the NPU "
+              "path, BENCH_decode.json)")
+        print("=" * 72)
+        from . import decode_bench
+        path = "BENCH_decode_quick.json" if args.fast \
+            else "BENCH_decode.json"
+        r = decode_bench.main(["--quick", "--out", path]
+                              if args.fast else [])
+        entries.append(("decode", path, r))
         rc |= r
 
     if entries:

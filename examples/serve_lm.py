@@ -1,19 +1,63 @@
-"""Batched serving with KV caches across four architecture families.
+"""LM decode on the NPU compile path: prefill + streamed greedy tokens.
 
-    PYTHONPATH=src python examples/serve_lm.py
+    PYTHONPATH=src python examples/serve_lm.py [--families]
 
-Prefill + greedy decode for a dense GQA model, the gemma3 local:global
-pattern (ring-buffer local caches), a pure-SSM model (O(1) state), and
-the whisper encoder-decoder (cross-attention KV) — the same serve_step
-the decode dry-run cells lower at production scale.
+The decoder block stack is built as a compiler ``Graph``
+(:mod:`repro.frontends.lm`), compiled once per (sequence, KV-bucket)
+shape, and served by :class:`repro.api.DecodeSession`: the prompt runs
+through the prefill graph, then every token replays the *same* cached
+single-token plan — KV caches thread through the static graph as
+inputs/outputs, so per-request state is just two arrays per layer.
+
+``--families`` additionally runs the JAX-side serving sweep (dense GQA,
+gemma3 local:global, SSM, whisper cross-attention) that this NPU path's
+KV-cache contract mirrors.
 """
 import os
 import sys
+import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.launch.serve import serve  # noqa: E402
+from repro.api import DecodeSession  # noqa: E402
+from repro.obs import trace  # noqa: E402
 
-for arch in ("qwen2-vl-2b", "gemma3-27b", "mamba2-370m", "whisper-tiny"):
-    print(f"\n=== {arch} (reduced config) ===")
-    serve(arch, batch=4, prompt_len=24, gen=12, smoke=True)
+
+def npu_decode(precision: str, prompt, new_tokens: int = 12) -> None:
+    print(f"\n=== lm-tiny on the NPU path [{precision}] ===")
+    sess = DecodeSession(precision=precision)
+    with trace.session() as tr:
+        t0 = time.monotonic()
+        rid, tok = sess.prefill(prompt)
+        t_prefill = time.monotonic() - t0
+        toks = [tok]
+        t0 = time.monotonic()
+        toks += list(sess.stream(rid, new_tokens - 1))
+        t_decode = time.monotonic() - t0
+        sess.finish(rid)
+    print(f"prompt {list(prompt)} -> {toks}")
+    print(f"prefill {t_prefill * 1e3:.2f} ms (cold: includes the "
+          f"one-time compile), decode {(new_tokens - 1) / t_decode:.1f} "
+          f"tok/s")
+    for shape, st in sess.stats().items():
+        print(f"  model {shape}: compiled via {st['source']}, plan "
+              f"builds={st['plan']['builds']} hits={st['plan']['hits']}")
+    spans = [e for e in tr.events() if e[0].startswith("lm.")]
+    print(f"  {len(spans)} lm.* trace spans (one per prefill/step, "
+          f"all carrying the request's trace id)")
+
+
+def families() -> None:
+    from repro.launch.serve import serve
+    for arch in ("qwen2-vl-2b", "gemma3-27b", "mamba2-370m",
+                 "whisper-tiny"):
+        print(f"\n=== {arch} (reduced config, JAX path) ===")
+        serve(arch, batch=4, prompt_len=24, gen=12, smoke=True)
+
+
+if __name__ == "__main__":
+    prompt = [3, 17, 42, 5]
+    npu_decode("float32", prompt)
+    npu_decode("int8", prompt)
+    if "--families" in sys.argv:
+        families()

@@ -39,11 +39,12 @@ from repro.runtime.serving import (CircuitBreaker, DeadlineExceeded,
                                    Ticket, WorkerLost)
 
 from .compiled import CompiledModel, resolve_semantics
+from .decode import DecodeSession
 from .session import Session
 
 __all__ = [
-    "compile", "CompiledModel", "Session", "ArtifactError",
-    "CompilerOptions", "resolve_semantics",
+    "compile", "CompiledModel", "Session", "DecodeSession",
+    "ArtifactError", "CompilerOptions", "resolve_semantics",
     # serving robustness surface
     "ServingError", "Overloaded", "DeadlineExceeded", "FlushError",
     "WorkerLost", "Ticket", "CircuitBreaker",

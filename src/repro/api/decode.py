@@ -1,0 +1,240 @@
+"""Streaming LM decode serving — compile once, reuse per token.
+
+:class:`DecodeSession` is the serving loop of the causal-operator
+subsystem: it compiles the prefill and single-token decode graphs of
+:mod:`repro.frontends.lm` once per (sequence, KV-bucket) shape and then
+streams tokens by replaying the *same* cached per-step
+:class:`~repro.core.execplan.ExecPlan` every token — zero re-lowering
+after warmup (``CompiledModel._plan_stats['builds']`` is frozen; the
+decode bench and ``tests/test_lm_compile.py`` assert it).
+
+Per-request state is the KV cache: a dict of float32 cache arrays keyed
+by the graph's cache-*input* names.  Every step marshals them through
+the decode plan's arena (cache inputs are arena slots like any other
+activation), and the step's appended cache *outputs* — also arena
+slots, copied out on return — become the request's state for the next
+token, so concurrent requests never share mutable cache storage.
+
+Sequence-position bucketing: a request is served at the smallest
+configured KV bucket that fits its position.  The bucket size enters
+the graph fingerprint (cache shapes + each attention op's ``kv_len``
+attr), so the compile-pipeline cache keys programs per bucket; crossing
+a boundary copies the cache forward into the next bucket's zeros and
+switches to that bucket's compiled model.  Weights are shared across
+buckets by the builder's deterministic naming, so bucket growth is a
+cache copy, not a recompile of anything previously warm.
+
+Per-token observability: when :mod:`repro.obs.trace` is armed, every
+prefill and decode step emits a span carrying the request's trace id
+(minted at :meth:`prefill`), so one generation can be followed
+token-by-token through the Chrome trace export.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.obs import trace as _trace
+
+_rids = itertools.count(1)
+
+
+@dataclass
+class _Request:
+    rid: str
+    trace_id: int
+    bucket: int
+    pos: int                               # tokens currently in cache
+    caches: Dict[str, np.ndarray]          # cache-input name -> float32
+    tokens: List[int] = field(default_factory=list)  # prompt + generated
+
+
+class DecodeSession:
+    """Compile-and-stream serving for the tiny LM decoder.
+
+    ::
+
+        sess = DecodeSession(precision="int8")
+        rid, tok = sess.prefill([3, 17, 42])
+        for tok in sess.stream(rid, max_new_tokens=16):
+            ...
+    """
+
+    def __init__(self, spec=None, precision: str = "float32",
+                 config=None, options=None, seed: int = 0,
+                 buckets: Optional[Sequence[int]] = None,
+                 cache: bool = True):
+        from repro.frontends import lm
+        self._lm = lm
+        self.spec = spec or lm.tiny_spec()
+        self.precision = precision
+        self.config = config
+        self.options = options
+        self.seed = seed
+        self.buckets = tuple(buckets or lm.SEQ_BUCKETS)
+        self._cache = cache
+        self._models: Dict[tuple, object] = {}   # (seq, kv) -> CompiledModel
+        self._requests: Dict[str, _Request] = {}
+        self._emb = lm.embedding_table(self.spec, seed)
+
+    # -- compiled-model pool ------------------------------------------------
+    def model(self, seq: int, kv_len: int):
+        """The compiled model serving (seq, kv_len) — compiled on first
+        use, then reused for every request at that shape (its per-step
+        ExecPlan is cached inside the CompiledModel)."""
+        key = (seq, kv_len)
+        m = self._models.get(key)
+        if m is None:
+            with _trace.maybe_span("lm.compile", "serve",
+                                   seq=seq, kv=kv_len):
+                m = self._lm.compile_decoder(
+                    self.spec, seq, kv_len, precision=self.precision,
+                    config=self.config, options=self.options,
+                    seed=self.seed, cache=self._cache)
+            self._models[key] = m
+        return m
+
+    def _run(self, m, feed: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+        return m(feed)            # plan engine; unbatched shapes
+
+    # -- request lifecycle --------------------------------------------------
+    def prefill(self, prompt_ids: Sequence[int],
+                rid: Optional[str] = None) -> tuple:
+        """Run the prompt through the prefill graph; returns
+        ``(rid, first_token)`` with the request's KV caches populated at
+        rows ``[0, len(prompt))``.
+
+        The prompt is right-padded with zero embeddings up to the
+        prefill sequence bucket; padded rows are invisible by
+        construction — the causal mask hides rows past ``pos`` and
+        every later decode step overwrites its own cache row before
+        unmasking it."""
+        prompt = [int(t) for t in prompt_ids]
+        if not prompt:
+            raise ValueError("prefill needs at least one prompt token")
+        p = len(prompt)
+        if p + 1 > self.buckets[-1]:
+            raise ValueError(
+                f"prompt of {p} tokens exceeds the largest KV bucket "
+                f"({self.buckets[-1]}) — raise `buckets`")
+        rid = rid or f"req-{next(_rids)}"
+        if rid in self._requests:
+            raise ValueError(f"request {rid!r} already active")
+        trace_id = _trace.new_trace_id()
+        kv = self._lm.bucket_for(p + 1, self.buckets)
+        sq = self._lm.bucket_for(p, self.buckets)
+        m = self.model(sq, kv)
+        g = m.graph
+        io = self._lm.cache_io(g)
+
+        x = np.zeros((sq, 1, self.spec.d_model), np.float32)
+        x[:p] = self._lm.embed(self._emb, prompt)
+        feed: Dict[str, np.ndarray] = {
+            "x": x, "pos": np.zeros((1, 1, 1), np.float32)}
+        for ci in io:
+            feed[ci] = np.zeros(g.tensors[ci].shape, np.float32)
+
+        tr = _trace.active()
+        t0 = tr.clock() if tr else 0.0
+        out = self._run(m, feed)
+        if tr:
+            tr.complete("lm.prefill", "serve", t0, trace_id=trace_id,
+                        args={"rid": rid, "tokens": p, "bucket": kv})
+
+        caches = {ci: np.asarray(out[co], np.float32)
+                  for ci, co in io.items()}
+        logits = out[self._lm.logits_name(g)]
+        tok = int(np.argmax(logits[p - 1, 0]))      # last real row
+        self._requests[rid] = _Request(
+            rid=rid, trace_id=trace_id, bucket=kv, pos=p,
+            caches=caches, tokens=prompt + [tok])
+        return rid, tok
+
+    def step(self, rid: str) -> int:
+        """One greedy decode step: feed the request's last token through
+        the cached single-token plan, append its K/V at row ``pos``,
+        advance, and return the argmax token."""
+        r = self._requests[rid]
+        if r.pos + 1 > self.buckets[-1]:
+            raise RuntimeError(
+                f"{rid}: KV capacity exhausted at {r.pos} tokens "
+                f"(largest bucket {self.buckets[-1]})")
+        if r.pos + 1 > r.bucket:
+            self._grow(r)
+        m = self.model(1, r.bucket)
+        g = m.graph
+        io = self._lm.cache_io(g)
+        feed: Dict[str, np.ndarray] = {
+            "x": self._lm.embed(self._emb, [r.tokens[-1]]),
+            "pos": np.full((1, 1, 1), float(r.pos), np.float32)}
+        feed.update(r.caches)
+
+        tr = _trace.active()
+        t0 = tr.clock() if tr else 0.0
+        out = self._run(m, feed)
+        tok = int(np.argmax(out[self._lm.logits_name(g)][0, 0]))
+        if tr:
+            tr.complete("lm.decode_step", "serve", t0,
+                        trace_id=r.trace_id,
+                        args={"rid": rid, "pos": r.pos, "token": tok})
+
+        r.caches = {ci: np.asarray(out[co], np.float32)
+                    for ci, co in io.items()}
+        r.pos += 1
+        r.tokens.append(tok)
+        return tok
+
+    def _grow(self, r: _Request) -> None:
+        """Copy the request's caches into the next bucket's zeros and
+        re-target its compiled model (weights shared across buckets, so
+        nothing warm recompiles)."""
+        new_kv = self._lm.bucket_for(r.pos + 1, self.buckets)
+        grown: Dict[str, np.ndarray] = {}
+        for ci, arr in r.caches.items():
+            big = np.zeros((new_kv,) + arr.shape[1:], np.float32)
+            big[:arr.shape[0]] = arr
+            grown[ci] = big
+        _trace.instant("lm.bucket_grow", "serve", trace_id=r.trace_id,
+                       args={"rid": r.rid, "from": r.bucket, "to": new_kv})
+        r.caches = grown
+        r.bucket = new_kv
+
+    def stream(self, rid: str, max_new_tokens: int) -> Iterator[int]:
+        """Yield up to ``max_new_tokens`` greedy tokens for an active
+        request (the prefill's first token was already returned)."""
+        for _ in range(max_new_tokens):
+            yield self.step(rid)
+
+    def generate(self, prompt_ids: Sequence[int],
+                 max_new_tokens: int = 8) -> List[int]:
+        """Prefill + decode loop; returns the generated tokens (the
+        prefill's first token included).  The request is closed when
+        done."""
+        rid, tok = self.prefill(prompt_ids)
+        toks = [tok]
+        try:
+            toks.extend(self.stream(rid, max_new_tokens - 1))
+        finally:
+            self.finish(rid)
+        return toks
+
+    def finish(self, rid: str) -> None:
+        self._requests.pop(rid, None)
+
+    # -- reporting ----------------------------------------------------------
+    def active_requests(self) -> List[str]:
+        return sorted(self._requests)
+
+    def tokens(self, rid: str) -> List[int]:
+        return list(self._requests[rid].tokens)
+
+    def stats(self) -> Dict[str, object]:
+        """Per-compiled-model plan-cache statistics — the decode bench's
+        zero-relowering gate reads ``builds`` here."""
+        return {f"s{sq}/kv{kv}": {
+                    "source": m.source,
+                    "plan": dict(m._plan_stats)}
+                for (sq, kv), m in sorted(self._models.items())}

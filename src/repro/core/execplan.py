@@ -360,7 +360,9 @@ def lower_float_steps(g: Graph, tiling: TilingResult, program: NPUProgram,
     bit-identical to the interpretive replay.  Purely elementwise steps
     (add/mul/act/scalar/resize/concat/split, max-pooling) vectorize the
     batch axis directly."""
-    from .ir import _apply_act, _conv2d_ref
+    from .ir import (_apply_act, _attention_ref, _conv2d_ref,
+                     _kvappend_ref, _layernorm_ref, _matmul_ref,
+                     _softmax_ref)
     from .tiling import in_row_range
     from numpy.lib.stride_tricks import sliding_window_view
 
@@ -571,6 +573,83 @@ def lower_float_steps(g: Graph, tiling: TilingResult, program: NPUProgram,
                     _scatter(bufs[o], p, n, axis, r0, r1)
             steps.append(PlanStep(label, (xid,), oids, run))
             continue
+        elif k == "matmul":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            w2 = gather_param(op.inputs[1], c0, c1)[:, 0, 0, :]
+            bias = gather_param(op.inputs[2], c0, c1) \
+                if len(op.inputs) > 2 else None
+            act = a.get("act", "none")
+
+            def run(bufs, n, xid=xid, oid=oid, w2=w2, bias=bias, act=act,
+                    rr0=rr0, rr1=rr1, axis=axis, r0=r0, r1=r1):
+                out = bufs[oid]
+                for b in range(n):
+                    y = _matmul_ref(bufs[xid][b, rr0:rr1], w2, bias, act)
+                    if axis == "chan":
+                        out[b, ..., r0:r1] = y[..., 0:r1 - r0]
+                    else:
+                        out[b, r0:r1] = y[0:r1 - r0]
+            reads = (xid,)
+        elif k == "layernorm":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            cc = g.tensors[op.inputs[1]].shape[0]
+            gamma = gather_param(op.inputs[1], 0, cc)
+            beta = gather_param(op.inputs[2], 0, cc)
+            eps = a["eps"]
+
+            def run(bufs, n, xid=xid, gamma=gamma, beta=beta, eps=eps,
+                    rr0=rr0, rr1=rr1, oid=oid, axis=axis, r0=r0, r1=r1):
+                y = _layernorm_ref(bufs[xid][:n, rr0:rr1], gamma, beta,
+                                   eps)
+                _scatter(bufs[oid], y, n, axis, r0, r1)
+            reads = (xid,)
+        elif k == "softmax":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+
+            def run(bufs, n, xid=xid, rr0=rr0, rr1=rr1, oid=oid,
+                    axis=axis, r0=r0, r1=r1):
+                y = _softmax_ref(bufs[xid][:n, rr0:rr1])
+                _scatter(bufs[oid], y, n, axis, r0, r1)
+            reads = (xid,)
+        elif k == "attention":
+            q, kc, vc, ps = g.act_inputs(op)
+            qid, kid = ids[q.name], ids[kc.name]
+            vid, pid = ids[vc.name], ids[ps.name]
+            attrs = dict(a)
+            s_total = q.shape[0]
+
+            # fused QK^T -> softmax -> V kernel, per batch sample on the
+            # identical row slice the interpreter computes — bit-exact
+            def run(bufs, n, qid=qid, kid=kid, vid=vid, pid=pid,
+                    attrs=attrs, rr0=rr0, rr1=rr1, s_total=s_total,
+                    oid=oid, axis=axis, r0=r0, r1=r1):
+                out = bufs[oid]
+                for b in range(n):
+                    y = _attention_ref(bufs[qid][b, rr0:rr1],
+                                       bufs[kid][b], bufs[vid][b],
+                                       bufs[pid][b], attrs,
+                                       q0=rr0, s_total=s_total)
+                    if axis == "chan":
+                        out[b, ..., r0:r1] = y[..., 0:r1 - r0]
+                    else:
+                        out[b, r0:r1] = y[0:r1 - r0]
+            reads = (qid, kid, vid, pid)
+        elif k == "kvappend":
+            cache, new, ps = g.act_inputs(op)
+            cid, nid = ids[cache.name], ids[new.name]
+            pid = ids[ps.name]
+
+            def run(bufs, n, cid=cid, nid=nid, pid=pid, rr0=rr0,
+                    rr1=rr1, oid=oid, r0=r0, r1=r1):
+                out = bufs[oid]
+                for b in range(n):
+                    y = _kvappend_ref(bufs[cid][b], bufs[nid][b],
+                                      bufs[pid][b])[rr0:rr1]
+                    out[b, r0:r1] = y[0:r1 - r0]
+            reads = (cid, nid, pid)
         else:  # pragma: no cover
             raise NotImplementedError(k)
 

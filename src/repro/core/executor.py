@@ -28,7 +28,9 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 from numpy.lib.stride_tricks import sliding_window_view
 
-from .ir import Graph, Op, _apply_act, _conv2d_ref, reference_execute
+from .ir import (Graph, Op, _apply_act, _attention_ref, _conv2d_ref,
+                 _kvappend_ref, _layernorm_ref, _matmul_ref, _softmax_ref,
+                 reference_execute)
 from .program import NPUProgram, TileRef
 from .tiling import TilingResult, in_row_range
 
@@ -310,6 +312,34 @@ def _run_step(g: Graph, tiling: TilingResult, tcm: _TcmState, op: Op,
         xin = rows_of(g.act_inputs(op)[0], rr0, rr1)
         parts = np.split(xin, a["sections"], axis=2)
         return {o: p for o, p in zip(op.outputs, parts)}
+    elif k == "matmul":
+        xin = rows_of(g.act_inputs(op)[0], rr0, rr1)
+        w = tcm.gather_param(tiling, op.inputs[1], c0, c1)[:, 0, 0, :]
+        b = tcm.gather_param(tiling, op.inputs[2], c0, c1) \
+            if len(op.inputs) > 2 else None
+        y = _matmul_ref(xin, w, b, a.get("act", "none"))
+    elif k == "layernorm":
+        xin = rows_of(g.act_inputs(op)[0], rr0, rr1)
+        cc = g.tensors[op.inputs[1]].shape[0]
+        gamma = tcm.gather_param(tiling, op.inputs[1], 0, cc)
+        beta = tcm.gather_param(tiling, op.inputs[2], 0, cc)
+        y = _layernorm_ref(xin, gamma, beta, a["eps"])
+    elif k == "softmax":
+        y = _softmax_ref(rows_of(g.act_inputs(op)[0], rr0, rr1))
+    elif k == "attention":
+        q, kc, vc, ps = g.act_inputs(op)
+        qin = rows_of(q, rr0, rr1)
+        kin = rows_of(kc, 0, kc.shape[0])
+        vin = rows_of(vc, 0, vc.shape[0])
+        pin = rows_of(ps, 0, 1)
+        y = _attention_ref(qin, kin, vin, pin, a,
+                           q0=rr0, s_total=q.shape[0])
+    elif k == "kvappend":
+        cache, new, ps = g.act_inputs(op)
+        cin = rows_of(cache, 0, cache.shape[0])
+        nin = rows_of(new, 0, new.shape[0])
+        pin = rows_of(ps, 0, 1)
+        y = _kvappend_ref(cin, nin, pin)[rr0:rr1]
     else:  # pragma: no cover
         raise NotImplementedError(k)
     return {op.outputs[0]: y}

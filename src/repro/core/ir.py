@@ -137,6 +137,18 @@ OP_KINDS = (
     "pad",         # spatial zero-pad
     "format",      # TCM format conversion (inserted by the compiler)
     "reshape",     # logical reshape (free at runtime, kept for heads)
+    # ---- causal / transformer operators (LM decode path) --------------
+    # LM activations are (S, 1, d_model): the sequence axis maps onto the
+    # H (row) axis, so the row-tiling machinery tiles over tokens.
+    "matmul",      # row-wise linear: y[s] = W @ x[s] (+ b); W (outC,1,1,inC)
+    "layernorm",   # per-token layer norm over channels; params gamma, beta
+    "softmax",     # per-token softmax over channels
+    "attention",   # fused QK^T -> softmax -> V against a KV cache;
+                   # inputs [q, k_cache, v_cache, pos]; attrs heads,
+                   # head_dim, scale, causal, kv_len (static cache bucket
+                   # — the context-length-aware cost-model knob)
+    "kvappend",    # write S new rows into a KV cache at dynamic offset
+                   # pos; inputs [cache, new, pos]
 )
 
 ACTIVATIONS = ("none", "relu", "relu6", "hswish", "hsigmoid", "silu",
@@ -250,6 +262,19 @@ class Graph:
         if k in ("maxpool", "avgpool"):
             kk = op.attrs.get("k", 2) or 2
             return self.tensors[op.output].elems * kk * kk
+        if k == "matmul":
+            w = self.param_inputs(op)[0]
+            s, _, oc = self.tensors[op.output].hwc
+            return s * oc * w.shape[-1]
+        if k in ("layernorm", "softmax"):
+            # multi-pass normalization: ~2 flops/element dominate
+            return 2 * self.tensors[op.output].elems
+        if k == "attention":
+            # context-length-aware: QK^T and PV both scale with the KV
+            # bucket (arxiv 2509.25155), not with a fixed operand shape
+            s = self.tensors[op.output].hwc[0]
+            kv = int(op.attrs["kv_len"])
+            return 2 * s * op.attrs["heads"] * op.attrs["head_dim"] * kv
         return 0
 
     def total_macs(self) -> int:
@@ -495,6 +520,70 @@ class GraphBuilder:
                          {"op": op, "value": value}))
         return out
 
+    # ---- causal / transformer ops (LM decode path) ----
+    def matmul(self, x: str, out_c: int, act: str = "none",
+               bias: bool = True) -> str:
+        """Row-wise linear over a (S, 1, C) sequence activation."""
+        s, w, c = self.g.tensors[x].hwc
+        wt = self._param((out_c, 1, 1, c))
+        ins = [x, wt]
+        if bias:
+            ins.append(self._param((out_c,), prefix="b"))
+        out = self._act_tensor((s, w, out_c))
+        self.g.add_op(Op(self._n("matmul"), "matmul", ins, [out],
+                         {"act": act}))
+        return out
+
+    def layernorm(self, x: str, eps: float = 1e-5) -> str:
+        shp = self.g.tensors[x].hwc
+        gamma = self._param((shp[2],), prefix="g")
+        beta = self._param((shp[2],), prefix="b")
+        # center the random gamma around 1 (a zero-mean gain would
+        # collapse the signal the downstream layers see)
+        self._weights[gamma] = self._weights[gamma] + 1.0
+        out = self._act_tensor(shp)
+        self.g.add_op(Op(self._n("layernorm"), "layernorm",
+                         [x, gamma, beta], [out], {"eps": float(eps)}))
+        return out
+
+    def softmax(self, x: str) -> str:
+        out = self._act_tensor(self.g.tensors[x].hwc)
+        self.g.add_op(Op(self._n("softmax"), "softmax", [x], [out], {}))
+        return out
+
+    def kvappend(self, cache: str, new: str, pos: str) -> str:
+        """Write the S rows of ``new`` into ``cache`` at the dynamic row
+        offset held by the (1,1,1) ``pos`` tensor; returns the updated
+        cache (same shape) so caches thread through the static graph."""
+        cs = self.g.tensors[cache].hwc
+        ns = self.g.tensors[new].hwc
+        assert cs[1:] == ns[1:] and ns[0] <= cs[0], (cs, ns)
+        out = self._act_tensor(cs, prefix="kv")
+        self.g.add_op(Op(self._n("kvappend"), "kvappend",
+                         [cache, new, pos], [out], {"rows": ns[0]}))
+        return out
+
+    def attention(self, q: str, k: str, v: str, pos: str, heads: int,
+                  causal: bool = True,
+                  scale: Optional[float] = None) -> str:
+        """Fused QK^T -> softmax -> V against KV caches.  Query row i
+        (global position pos+i) attends cache rows j < pos+S and, when
+        causal, j <= pos+i — one definition covers prefill (pos=0) and
+        single-token decode (S=1)."""
+        qs = self.g.tensors[q].hwc
+        ks = self.g.tensors[k].hwc
+        assert ks == self.g.tensors[v].hwc, (ks, self.g.tensors[v].hwc)
+        assert qs[2] == ks[2] and qs[2] % heads == 0, (qs, ks, heads)
+        hd = qs[2] // heads
+        out = self._act_tensor(qs, prefix="attn")
+        self.g.add_op(Op(self._n("attention"), "attention",
+                         [q, k, v, pos], [out],
+                         {"heads": int(heads), "head_dim": int(hd),
+                          "scale": float(scale or 1.0 / math.sqrt(hd)),
+                          "causal": bool(causal),
+                          "kv_len": int(ks[0])}))
+        return out
+
     def build(self) -> "Graph":
         # verify topological consistency once at build time
         self.g.topo_ops()
@@ -574,6 +663,88 @@ def _conv2d_ref(x: np.ndarray, w: np.ndarray, stride: int,
         return cached_einsum("hwijc,ijc->hwc", cols, ker)
     return cached_einsum("hwijc,oijc->hwo",
                          cols.reshape(oh, ow, fh, fw, ic), w)
+
+
+#: attention mask fill — finite (exp() underflows to exactly 0) so fully
+#: masked columns never produce NaNs, matching kernels/flash_attention.py
+NEG_INF = np.float32(-1e30)
+
+
+def _pos_index(pos, smax: int, s: int) -> int:
+    """Decode the dynamic (1,1,1) position tensor into a row offset,
+    clamped so the S new rows always fit the cache bucket (random
+    calibration feeds therefore stay well-defined)."""
+    v = int(round(float(np.asarray(pos).reshape(-1)[0])))
+    return min(max(v, 0), max(smax - s, 0))
+
+
+def _c32(x: np.ndarray) -> np.ndarray:
+    """Contiguous float32 canonical form.  The interpreter hands these
+    helpers strided TCM views while the plan hands contiguous arena
+    slices — BLAS/einsum summation order depends on layout, so both
+    engines canonicalize before computing (this is what makes the
+    engines bit-identical, not merely close)."""
+    return np.ascontiguousarray(x, dtype=np.float32)
+
+
+def _matmul_ref(x: np.ndarray, w: np.ndarray,
+                b: Optional[np.ndarray], act: str) -> np.ndarray:
+    """x (s,1,inC) row slice; w (outC,inC).  Row-independent, so tiled
+    replays of any row range are bit-identical to the full pass."""
+    y = cached_einsum("swc,oc->swo", _c32(x), _c32(w))
+    if b is not None:
+        y = y + b
+    return _apply_act(y, act).astype(np.float32)
+
+
+def _layernorm_ref(x: np.ndarray, gamma: np.ndarray, beta: np.ndarray,
+                   eps: float) -> np.ndarray:
+    x = _c32(x)
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((x - mu) / np.sqrt(var + eps) * gamma
+            + beta).astype(np.float32)
+
+
+def _softmax_ref(x: np.ndarray) -> np.ndarray:
+    x = _c32(x)
+    e = np.exp(x - x.max(axis=-1, keepdims=True))
+    return (e / e.sum(axis=-1, keepdims=True)).astype(np.float32)
+
+
+def _attention_ref(q: np.ndarray, kc: np.ndarray, vc: np.ndarray,
+                   pos, attrs: Dict, q0: int = 0,
+                   s_total: Optional[int] = None) -> np.ndarray:
+    """Fused QK^T -> softmax -> V.  ``q`` may be a row slice starting at
+    global query row ``q0`` of an op with ``s_total`` query rows; the
+    mask uses global positions so tiled replays match the full pass."""
+    s, _, c = q.shape
+    smax = kc.shape[0]
+    heads, hd = attrs["heads"], attrs["head_dim"]
+    s_total = s if s_total is None else s_total
+    p0 = _pos_index(pos, smax, s_total)
+    qh = _c32(q).reshape(s, heads, hd).transpose(1, 0, 2)
+    kh = _c32(kc).reshape(smax, heads, hd).transpose(1, 0, 2)
+    vh = _c32(vc).reshape(smax, heads, hd).transpose(1, 0, 2)
+    sc = cached_einsum("hsd,htd->hst", qh, kh) * np.float32(attrs["scale"])
+    j = np.arange(smax)[None, None, :]
+    valid = j < p0 + s_total
+    if attrs.get("causal", True):
+        gi = (q0 + np.arange(s))[None, :, None]
+        valid = valid & (j <= p0 + gi)
+    sc = np.where(valid, sc, NEG_INF)
+    e = np.exp(sc - sc.max(axis=-1, keepdims=True))
+    p = e / e.sum(axis=-1, keepdims=True)
+    y = cached_einsum("hst,htd->hsd", p, vh)
+    return y.transpose(1, 0, 2).reshape(s, 1, c).astype(np.float32)
+
+
+def _kvappend_ref(cache: np.ndarray, new: np.ndarray, pos) -> np.ndarray:
+    smax, s = cache.shape[0], new.shape[0]
+    p0 = _pos_index(pos, smax, s)
+    out = cache.astype(np.float32).copy()
+    out[p0:p0 + s] = new
+    return out
 
 
 def reference_execute(g: Graph, inputs: Dict[str, np.ndarray],
@@ -657,6 +828,25 @@ def reference_execute(g: Graph, inputs: Dict[str, np.ndarray],
             parts = np.split(vals[op.inputs[0]], a["sections"], axis=2)
             for o, p in zip(op.outputs, parts):
                 vals[o] = p
+        elif k == "matmul":
+            b = vals[op.inputs[2]] if len(op.inputs) > 2 else None
+            vals[op.output] = _matmul_ref(
+                vals[op.inputs[0]], vals[op.inputs[1]][:, 0, 0, :],
+                b, a.get("act", "none"))
+        elif k == "layernorm":
+            vals[op.output] = _layernorm_ref(
+                vals[op.inputs[0]], vals[op.inputs[1]],
+                vals[op.inputs[2]], a["eps"])
+        elif k == "softmax":
+            vals[op.output] = _softmax_ref(vals[op.inputs[0]])
+        elif k == "attention":
+            vals[op.output] = _attention_ref(
+                vals[op.inputs[0]], vals[op.inputs[1]],
+                vals[op.inputs[2]], vals[op.inputs[3]], a)
+        elif k == "kvappend":
+            vals[op.output] = _kvappend_ref(
+                vals[op.inputs[0]], vals[op.inputs[1]],
+                vals[op.inputs[2]])
         else:
             raise NotImplementedError(k)
     return vals

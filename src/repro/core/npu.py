@@ -342,6 +342,61 @@ def _compute_job_cost(cfg: NPUConfig, g: Graph, op: Op,
         cyc = math.ceil(out_bytes / cfg.tcm_bytes_per_cycle)
         macs = 0
         bound = "output-bw"
+    elif k == "matmul":
+        # row-wise linear over (S,1,C) tokens: fc-shaped dot engine work
+        # with out_h token rows as the pixel axis
+        wt = params[0]
+        oc, _, _, ic = wt.shape
+        pixels = out_h * W
+        if fmt == "depth":
+            cyc, bound = _dot_engine_cycles(cfg, pixels, C, ic, engines,
+                                            weights_stationary=True,
+                                            act_eb=act_eb, w_eb=w_eb,
+                                            rate=rate)
+        else:
+            pix_e = math.ceil(out_h / engines) * W
+            cyc, bound = _dot_engine_cycles(cfg, pix_e, C, ic, 1,
+                                            weights_stationary=True,
+                                            act_eb=act_eb, w_eb=w_eb,
+                                            rate=rate)
+        macs = pixels * C * ic
+    elif k in ("layernorm", "softmax"):
+        # per-token normalization: three vector passes over the row
+        # (statistics, transform, write) through the TCM buses
+        elems = out_h * W * C
+        cyc = math.ceil(3 * elems * act_eb / (cfg.bus_bytes * engines))
+        macs = 2 * elems
+        bound = "operand-bw"
+    elif k == "attention":
+        # context-length-aware (arxiv 2509.25155): both GEMMs and the
+        # softmax scale with the KV bucket length in op.attrs — which is
+        # in the cost-memo key and the graph fingerprint, so every
+        # sequence-position bucket is priced (and cached) separately.
+        kv = int(a["kv_len"])
+        heads, hd = int(a["heads"]), int(a["head_dim"])
+        pixels = out_h * W * heads
+        qk_cyc, _ = _dot_engine_cycles(cfg, pixels, kv, hd, engines,
+                                       weights_stationary=False,
+                                       act_eb=act_eb, w_eb=act_eb,
+                                       rate=rate)
+        pv_cyc, _ = _dot_engine_cycles(cfg, pixels, hd, kv, engines,
+                                       weights_stationary=False,
+                                       act_eb=act_eb, w_eb=act_eb,
+                                       rate=rate)
+        sm_cyc = math.ceil(3 * pixels * kv * 4.0
+                           / (cfg.bus_bytes * engines))
+        cyc = qk_cyc + pv_cyc + sm_cyc
+        macs = 2 * pixels * kv * hd
+        bound = "compute" if qk_cyc + pv_cyc >= sm_cyc else "operand-bw"
+        # every row tile streams the whole KV cache (not an out_h slice)
+        kv_bytes = sum(t.bytes for t in acts[1:3])
+        q_bytes = math.ceil(acts[0].bytes * out_h / max(H, 1))
+        in_bytes = q_bytes + kv_bytes
+    elif k == "kvappend":
+        # cache copy-through + appended rows: pure data movement
+        cyc = math.ceil(out_bytes / (cfg.bus_bytes * engines))
+        macs = 0
+        bound = "output-bw"
     else:  # pragma: no cover
         raise NotImplementedError(k)
 

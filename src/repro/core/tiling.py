@@ -64,6 +64,12 @@ def in_row_range(op: Op, out_r0: int, out_r1: int, in_h: int
         return (out_r0 // f, min(in_h, (out_r1 + f - 1) // f))
     if k in ("fc",):
         return (0, in_h)
+    if k in ("attention", "kvappend"):
+        # attention reads the whole KV cache for any query-row tile;
+        # kvappend's write offset is dynamic (the pos tensor), so every
+        # output tile may need any input row.  matmul / layernorm /
+        # softmax are per-token and use the 1:1 default below.
+        return (0, in_h)
     if in_h == 1:
         return (0, 1)  # broadcast input (e.g. SE-block (1,1,C) scale)
     # elementwise / concat / split / act / scalar: 1:1 rows
@@ -192,7 +198,7 @@ def _chan_split(cfg: NPUConfig, g: Graph, op: Op) -> int:
     co-residency therefore costs the tensor's true footprint, not one
     bank per weight chunk."""
     pb = _param_bytes(g, op)
-    if op.kind in ("conv", "fc") and pb > cfg.tcm_bytes // 4:
+    if op.kind in ("conv", "fc", "matmul") and pb > cfg.tcm_bytes // 4:
         return min(int(math.ceil(pb / (cfg.tcm_bytes / 8))),
                    g.tensors[op.output].shape[-1])
     return 0
@@ -689,6 +695,12 @@ class _WindowCP:
     model: CPModel
     comp: Dict[Tuple[int, int], int]     # (local step, tick) -> var
     warm: Dict[int, int]
+    hi: int = 0                          # slice end in the greedy order
+    prefix: frozenset = frozenset()      # tiles produced before ``lo``
+    # key -> residency var at the window's last tick; the sequential
+    # refinement reads the adopted solution here to learn which tiles
+    # this window hands its successor still resident
+    state_last: Dict[Tuple[str, int], int] = field(default_factory=dict)
 
     def order(self, sol: cpsolver.Solution
               ) -> Tuple[List[ComputeStep], float]:
@@ -733,13 +745,21 @@ def _wavefront_perm(steps: List[ComputeStep],
 def _build_window_fusion_cp(cfg: NPUConfig, g: Graph, region: List[Op],
                             tiles: Dict[str, TensorTiles],
                             greedy: List[ComputeStep], lo: int, hi: int,
-                            produced_before: set) -> Optional[_WindowCP]:
+                            produced_before: set,
+                            held: frozenset = frozenset()
+                            ) -> Optional[_WindowCP]:
     """CP re-ordering greedy steps [lo, hi) of one region.
 
     ``produced_before`` is the boundary state threaded in from the
     preceding windows: the (tensor, tile-index) keys the greedy prefix
     [0, lo) has produced.  Returns None when a needed tile is neither in
     the window nor in the prefix (invariant break — caller goes greedy).
+
+    ``held`` is the sequential-refinement input: tiles the *previous*
+    window's adopted solution keeps resident at its last tick.  Those
+    get their carry fixed to 1 — first-tick residency without paying a
+    DDR re-entry — while everything else keeps the concurrent-solve
+    assumption (carry 0, the window starts from DDR).
     """
     region_ops = {op.name for op in region}
     ws = greedy[lo:hi]
@@ -804,12 +824,16 @@ def _build_window_fusion_cp(cfg: NPUConfig, g: Graph, region: List[Op],
 
     # boundary/param tiles start the window in DDR — the windows of a
     # batch solve concurrently, so no window may assume its predecessor
-    # left a tile resident.  (A sequential refinement would fix carry to
-    # 1 for tiles the previous window's solution holds at its end.)
-    carry = None
+    # left a tile resident.  The sequential refinement pass rebuilds the
+    # window with ``held`` populated and fixes carry to 1 for exactly
+    # those tiles, letting them start the window resident for free.
+    carry = carry_held = None
     if boundary or always_keys:
         carry = m.bool("carry")
         m.fix(carry, 0)
+        if held:
+            carry_held = m.bool("carry_held")
+            m.fix(carry_held, 1)
 
     # Objective, all in units of (bank-tick / _SPILL_SCALE):
     #   * DDR re-entry of a non-window tile: its DMA cost normalized to
@@ -853,7 +877,8 @@ def _build_window_fusion_cp(cfg: NPUConfig, g: Graph, region: List[Op],
                 entry[(key, t)] = ev
                 terms.append((ev, -1))
                 if prev is None:
-                    terms.append((carry, -1))
+                    terms.append((carry_held if key in held else carry,
+                                  -1))
                 obj.append((ev, spill))
             m.add(terms, "<=", 0, f"persist:{key}/{t}")
             obj.append((sv, tl.banks))
@@ -910,7 +935,10 @@ def _build_window_fusion_cp(cfg: NPUConfig, g: Graph, region: List[Op],
     warm = min((greedy_warm, wave_warm), key=_objective)
     if _objective(warm) == float("inf"):     # defensive: greedy must fit
         warm = greedy_warm
-    return _WindowCP(lo, list(ws), m, comp, warm)
+    state_last = {key: state[(key, Tw - 1)] for key in consumed}
+    return _WindowCP(lo, list(ws), m, comp, warm, hi=hi,
+                     prefix=frozenset(produced_before),
+                     state_last=state_last)
 
 
 @dataclass
@@ -921,6 +949,54 @@ class _WindowedFusion:
     tiles: Dict[str, TensorTiles]
     greedy: List[ComputeStep]
     windows: List[_WindowCP]
+
+    def refine(self, cfg: NPUConfig, g: Graph,
+               sols: Sequence[Optional[cpsolver.Solution]], *,
+               time_limit_s: float, stall_limit_s: Optional[float],
+               stall_limit_nodes: Optional[int], engine: str
+               ) -> Tuple[List[Optional[cpsolver.Solution]], int]:
+        """Sequential second pass over the window chain.
+
+        The concurrent batch solve prices every boundary tile as a DDR
+        re-entry because no window may assume anything about its
+        neighbours.  Stitched execution *is* sequential though, so after
+        the batch lands each window (except the first) is rebuilt with
+        ``held`` = the tiles the previous window's adopted solution
+        keeps resident at its last tick — their carry is fixed to 1 and
+        the phantom re-entry cost disappears.  Adopted refinements chain
+        forward: window ``i+1`` reads residency from the *refined*
+        window ``i``.  Returns the updated solution list and how many
+        windows adopted a refined order."""
+        sols = list(sols)
+        refined = 0
+        for wi in range(1, len(self.windows)):
+            prev, psol = self.windows[wi - 1], sols[wi - 1]
+            if psol is None or not psol.feasible:
+                continue
+            held = frozenset(k for k, sv in prev.state_last.items()
+                             if psol[sv])
+            if not held:
+                continue
+            w = self.windows[wi]
+            w2 = _build_window_fusion_cp(cfg, g, self.region, self.tiles,
+                                         self.greedy, w.lo, w.hi,
+                                         set(w.prefix), held=held)
+            if w2 is None:
+                continue
+            [sol2] = cpsolver.solve_many(
+                [cpsolver.SolveTask(w2.model,
+                                    time_limit_s=time_limit_s,
+                                    warm_start=w2.warm,
+                                    stall_limit_s=stall_limit_s,
+                                    stall_limit_nodes=stall_limit_nodes,
+                                    engine=engine)],
+                parallel=False)
+            if not sol2.feasible:
+                continue
+            self.windows[wi] = w2
+            sols[wi] = sol2
+            refined += 1
+        return sols, refined
 
     def stitch(self, g: Graph, sols: Sequence[cpsolver.Solution]
                ) -> Tuple[List[ComputeStep], float, Dict[str, int]]:
@@ -1010,7 +1086,8 @@ def plan_tiling(cfg: NPUConfig, g: Graph, plan: FormatPlan,
                 parallel_cp: bool = True,
                 cp_engine: str = "incremental",
                 max_cp_window_tiles: int = 24,
-                region_overlap: int = 6) -> TilingResult:
+                region_overlap: int = 6,
+                window_refine: bool = True) -> TilingResult:
     opts = _tile_options(cfg, g, budget_frac=budget_frac, naive=naive)
     bank = cfg.bank_bytes
     regions = _regions(cfg, g, opts)
@@ -1079,6 +1156,24 @@ def plan_tiling(cfg: NPUConfig, g: Graph, plan: FormatPlan,
                     sols[ri] = sol
                 else:
                     win_sols[ri][wi] = sol
+
+    # sequential refinement: re-solve each window chain front-to-back
+    # with carry fixed to 1 for the tiles its predecessor's adopted
+    # solution holds at its last tick (stitched execution is sequential,
+    # so the batch solve's start-from-DDR assumption over-prices the
+    # seams)
+    window_refined = 0
+    if window_refine and wins:
+        with _trace.maybe_span("window_refine", "compile",
+                               regions=len(wins)):
+            for ri, wf in wins.items():
+                win_sols[ri], n = wf.refine(
+                    cfg, g, win_sols[ri],
+                    time_limit_s=cp_time_limit_s,
+                    stall_limit_s=cp_stall_s,
+                    stall_limit_nodes=win_stall,
+                    engine=cp_engine)
+                window_refined += n
 
     _t_stitch = time.monotonic() if _trace.active() is not None else None
     order: List[ComputeStep] = []
@@ -1172,6 +1267,8 @@ def plan_tiling(cfg: NPUConfig, g: Graph, plan: FormatPlan,
                 "window_cp_solved": window_cp if windowed_active else 0,
                 "window_fallbacks":
                     window_fallbacks if windowed_active else 0,
+                "window_refined":
+                    window_refined if windowed_active else 0,
                 "fused_steps": fused_steps,
                 "fused_steps_cp": sum(
                     d["steps"] for d in det

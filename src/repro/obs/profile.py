@@ -64,6 +64,23 @@ class ProfileReport:
     modeled: Dict[str, float]       # the cost model's claims
     measured: Dict[str, float]      # the timed replay's reality
     ops: List[OpProfile] = field(default_factory=list)
+    # per-KIND rollup of ``ops`` (conv, matmul, attention, ...): shares
+    # sum over the kind's ops, skew recomputed from the summed shares —
+    # the one-line answer to "is the cost model off on attention, or on
+    # this one attention op?"
+    kinds: List[OpProfile] = field(default_factory=list)
+
+    @staticmethod
+    def _row(o: OpProfile) -> Dict:
+        return {
+            "op": o.op, "kind": o.kind, "kernels": o.kernels,
+            "measured_ms": round(o.measured_ms, 6),
+            "modeled_cycles": o.modeled_cycles, "macs": o.macs,
+            "measured_share": round(o.measured_share, 4),
+            "modeled_share": round(o.modeled_share, 4),
+            "skew": round(o.skew, 3) if o.skew != float("inf")
+            else None,
+        }
 
     def as_dict(self) -> Dict:
         return {
@@ -71,15 +88,8 @@ class ProfileReport:
             "batch": self.batch, "runs": self.runs,
             "modeled": dict(self.modeled),
             "measured": dict(self.measured),
-            "ops": [{
-                "op": o.op, "kind": o.kind, "kernels": o.kernels,
-                "measured_ms": round(o.measured_ms, 6),
-                "modeled_cycles": o.modeled_cycles, "macs": o.macs,
-                "measured_share": round(o.measured_share, 4),
-                "modeled_share": round(o.modeled_share, 4),
-                "skew": round(o.skew, 3) if o.skew != float("inf")
-                else None,
-            } for o in self.ops],
+            "ops": [self._row(o) for o in self.ops],
+            "kinds": [self._row(o) for o in self.kinds],
         }
 
     def render(self, top: int = 12) -> str:
@@ -114,6 +124,17 @@ class ProfileReport:
             rest = sum(o.measured_ms for o in self.ops[top:])
             lines.append(f"  ... {len(self.ops) - top} more op(s), "
                          f"{rest:.3f} ms")
+        if self.kinds:
+            lines.append(
+                f"  {'by kind':<28}{'kernels':<9}{'meas ms':>9}"
+                f"{'meas %':>8}{'model %':>9}{'skew':>7}")
+            for o in self.kinds:
+                skew = (f"{o.skew:6.2f}" if o.skew != float("inf")
+                        else "   inf")
+                lines.append(
+                    f"  {o.op:<28}{o.kernels:<9}{o.measured_ms:9.3f}"
+                    f"{100 * o.measured_share:7.1f}%"
+                    f"{100 * o.modeled_share:8.1f}%{skew:>7}")
         return "\n".join(lines)
 
     def __str__(self) -> str:
@@ -215,6 +236,23 @@ def profile_model(model, inputs=None, batch: int = 8, runs: int = 3,
         ops.append(o)
     ops.sort(key=lambda o: o.measured_ms, reverse=True)
 
+    by_kind: Dict[str, OpProfile] = {}
+    for o in ops:
+        k = by_kind.get(o.kind)
+        if k is None:
+            k = by_kind[o.kind] = OpProfile(
+                op=o.kind, kind=o.kind, kernels=0, measured_ms=0.0,
+                modeled_cycles=0, macs=0)
+        k.kernels += o.kernels
+        k.measured_ms += o.measured_ms
+        k.modeled_cycles += o.modeled_cycles
+        k.macs += o.macs
+        k.measured_share += o.measured_share
+        k.modeled_share += o.modeled_share
+    kind_rows = sorted(by_kind.values(),
+                       key=lambda o: o.measured_ms, reverse=True)
+
     return ProfileReport(model=model.name, precision=model.precision,
                          batch=batch, runs=max(1, runs),
-                         modeled=modeled, measured=measured, ops=ops)
+                         modeled=modeled, measured=measured, ops=ops,
+                         kinds=kind_rows)

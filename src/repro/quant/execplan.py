@@ -33,7 +33,8 @@ from typing import Dict, List, Tuple
 import numpy as np
 
 from repro.core.execplan import PlanStep
-from repro.core.ir import Graph, _apply_act
+from repro.core.ir import (Graph, _apply_act, _attention_ref,
+                           _kvappend_ref, _layernorm_ref, _softmax_ref)
 from repro.core.program import NPUProgram
 from repro.core.tiling import TilingResult
 
@@ -310,6 +311,93 @@ def lower_quant_steps(qm: QuantizedModel, g: Graph, tiling: TilingResult,
                     bufs[o][:n] = quantize(p, qp)
             steps.append(PlanStep(label, (xid,), oids, run))
             continue
+        elif k == "matmul":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            in_qp = qm.qp(x.name)
+            zp = int(np.atleast_1d(in_qp.zero_point)[0])
+            # float64 dgemm accumulation over the token rows — exact for
+            # integer operands (see the conv kernel note); zp folded
+            wT = np.ascontiguousarray(
+                qm.qweights[op.inputs[1]][:, 0, 0, :]
+                .astype(np.float64).T)
+            biasf = qm.qweights[op.inputs[2]].astype(np.float64) \
+                if len(op.inputs) > 2 else np.float64(0.0)
+            biasf = biasf - zp * wT.sum(axis=0)
+            s_x = float(np.atleast_1d(in_qp.scale)[0])
+            s_w = np.atleast_1d(qm.qp(op.inputs[1]).scale) \
+                .astype(np.float32)
+            sc = s_x * s_w
+            act = a.get("act", "none")
+            s_len, wd = g.tensors[op.outputs[0]].shape[:2]
+
+            def run(bufs, n, xid=xid, oid=oid, wT=wT, biasf=biasf,
+                    sc=sc, act=act, out_qp=out_qp, s_len=s_len, wd=wd):
+                xi = bufs[xid][:n].astype(np.float64)
+                acc = xi.reshape(-1, xi.shape[-1]) @ wT
+                acc += biasf
+                y = acc.astype(np.float32) * sc
+                bufs[oid][:n] = quantize(_apply_act(y, act), out_qp) \
+                    .reshape(n, s_len, wd, -1)
+            reads = (xid,)
+        elif k == "layernorm":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            in_qp = qm.qp(x.name)
+            gam = qm.qweights[op.inputs[1]]     # kept float32
+            bet = qm.qweights[op.inputs[2]]
+            eps = a["eps"]
+
+            def run(bufs, n, xid=xid, in_qp=in_qp, gam=gam, bet=bet,
+                    eps=eps, oid=oid, out_qp=out_qp):
+                xv = dequantize(bufs[xid][:n], in_qp)
+                bufs[oid][:n] = quantize(
+                    _layernorm_ref(xv, gam, bet, eps), out_qp)
+            reads = (xid,)
+        elif k == "softmax":
+            x = g.act_inputs(op)[0]
+            xid = ids[x.name]
+            in_qp = qm.qp(x.name)
+
+            def run(bufs, n, xid=xid, in_qp=in_qp, oid=oid,
+                    out_qp=out_qp):
+                bufs[oid][:n] = quantize(
+                    _softmax_ref(dequantize(bufs[xid][:n], in_qp)),
+                    out_qp)
+            reads = (xid,)
+        elif k == "attention":
+            qx, kc, vc, ps = g.act_inputs(op)
+            qid, kid, vid = ids[qx.name], ids[kc.name], ids[vc.name]
+            pid = ids[ps.name]
+            qpq, qpk, qpv = (qm.qp(qx.name), qm.qp(kc.name),
+                             qm.qp(vc.name))
+            attrs = dict(a)
+
+            def run(bufs, n, qid=qid, kid=kid, vid=vid, pid=pid,
+                    qpq=qpq, qpk=qpk, qpv=qpv, attrs=attrs, oid=oid,
+                    out_qp=out_qp):
+                # pos can differ per batch lane; the fused kernel runs
+                # per lane like the float path's gemm-bearing kinds
+                for b in range(n):
+                    y = _attention_ref(dequantize(bufs[qid][b], qpq),
+                                       dequantize(bufs[kid][b], qpk),
+                                       dequantize(bufs[vid][b], qpv),
+                                       bufs[pid][b], attrs)
+                    bufs[oid][b] = quantize(y, out_qp)
+            reads = (qid, kid, vid, pid)
+        elif k == "kvappend":
+            cx, nx, ps = g.act_inputs(op)
+            cid, nid, pid = ids[cx.name], ids[nx.name], ids[ps.name]
+            qpc, qpn = qm.qp(cx.name), qm.qp(nx.name)
+
+            def run(bufs, n, cid=cid, nid=nid, pid=pid, qpc=qpc,
+                    qpn=qpn, oid=oid, out_qp=out_qp):
+                for b in range(n):
+                    y = _kvappend_ref(dequantize(bufs[cid][b], qpc),
+                                      dequantize(bufs[nid][b], qpn),
+                                      bufs[pid][b])
+                    bufs[oid][b] = quantize(y, out_qp)
+            reads = (cid, nid, pid)
         else:  # pragma: no cover
             raise NotImplementedError(k)
 

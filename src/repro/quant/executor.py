@@ -25,11 +25,13 @@ from typing import Dict, Optional
 import numpy as np
 
 from repro.core.executor import ExecSemantics, _TcmState, gather_window
-from repro.core.ir import Graph, Op, _apply_act
+from repro.core.ir import (Graph, Op, _apply_act, _attention_ref,
+                           _kvappend_ref, _layernorm_ref, _softmax_ref)
 from repro.core.tiling import TilingResult, in_row_range
 
 from .ptq import (QuantizedModel, q_avgpool, q_conv, q_fc,
-                  q_global_avgpool, q_maxpool, quantized_reference_execute)
+                  q_global_avgpool, q_matmul, q_maxpool,
+                  quantized_reference_execute)
 from .qparams import dequantize, quantize
 
 
@@ -81,13 +83,20 @@ class QuantSemantics(ExecSemantics):
     def plan_dtype(self, tensor) -> np.dtype:
         # activations are stored int8 (the same bytes the interpreter's
         # DRAM/TCM hold); params never enter the arena — they are baked
-        # into the kernels at lowering time
+        # into the kernels at lowering time.  Quantization-exempt
+        # tensors (sequence-position operands) stay float32.
+        if tensor.qparams is None:
+            return np.dtype(np.float32)
         return np.dtype(np.int8)
 
     def encode_input(self, name: str, arr) -> np.ndarray:
+        if self.qm.graph.tensors[name].qparams is None:
+            return np.asarray(arr, np.float32)
         return quantize(np.asarray(arr, np.float32), self.qm.qp(name))
 
     def plan_parity_tol(self, tensor: str) -> float:
+        if self.qm.graph.tensors[tensor].qparams is None:
+            return 1e-6
         return self._scale(tensor) + 1e-7   # one output quant step
 
     # -- replay hooks -------------------------------------------------------
@@ -95,8 +104,8 @@ class QuantSemantics(ExecSemantics):
         dram: Dict[str, np.ndarray] = {}
         for t in g.tensors.values():
             if t.kind == "input":
-                dram[t.name] = quantize(
-                    np.asarray(inputs[t.name], np.float32), self.qm.qp(t.name))
+                dram[t.name] = self.encode_input(
+                    t.name, np.asarray(inputs[t.name], np.float32))
             elif t.is_param:
                 dram[t.name] = self.qm.qweights[t.name]
         return dram
@@ -249,6 +258,42 @@ def _run_qstep(qm: QuantizedModel, g: Graph, tiling: TilingResult,
         parts = np.split(xin, a["sections"], axis=2)
         return {o: quantize(p, qm.qp(o))
                 for o, p in zip(op.outputs, parts)}
+    elif k == "matmul":
+        x = g.act_inputs(op)[0]
+        xin = rows_of(x, rr0, rr1)
+        w_q = tcm.gather_param(tiling, op.inputs[1], c0, c1)[:, 0, 0, :]
+        w_qp = qm.qp(op.inputs[1])
+        if w_qp.per_channel and axis == "chan":
+            w_qp = _slice_qp(w_qp, c0, c1)
+        bias_q = None
+        if len(op.inputs) > 2:
+            bias_q = tcm.gather_param(tiling, op.inputs[2], c0, c1)
+        y = q_matmul(xin, qm.qp(x.name), w_q, w_qp, bias_q,
+                     a.get("act", "none"), out_qp)
+    elif k == "layernorm":
+        x = g.act_inputs(op)[0]
+        xv = deq(x, rows_of(x, rr0, rr1))
+        nc = g.tensors[op.inputs[1]].shape[0]
+        gam = tcm.gather_param(tiling, op.inputs[1], 0, nc)
+        bet = tcm.gather_param(tiling, op.inputs[2], 0, nc)
+        y = quantize(_layernorm_ref(xv, gam, bet, a["eps"]), out_qp)
+    elif k == "softmax":
+        x = g.act_inputs(op)[0]
+        y = quantize(_softmax_ref(deq(x, rows_of(x, rr0, rr1))), out_qp)
+    elif k == "attention":
+        qx, kc, vc, ps = g.act_inputs(op)
+        qin = deq(qx, rows_of(qx, rr0, rr1))
+        kin = deq(kc, rows_of(kc, 0, kc.shape[0]))
+        vin = deq(vc, rows_of(vc, 0, vc.shape[0]))
+        pin = rows_of(ps, 0, 1)          # float32, quantization-exempt
+        y = quantize(_attention_ref(qin, kin, vin, pin, a,
+                                    q0=rr0, s_total=qx.shape[0]), out_qp)
+    elif k == "kvappend":
+        cx, nx, ps = g.act_inputs(op)
+        cin = deq(cx, rows_of(cx, 0, cx.shape[0]))
+        nin = deq(nx, rows_of(nx, 0, nx.shape[0]))
+        pin = rows_of(ps, 0, 1)
+        y = quantize(_kvappend_ref(cin, nin, pin), out_qp)[rr0:rr1]
     else:  # pragma: no cover
         raise NotImplementedError(k)
     return {op.outputs[0]: y}

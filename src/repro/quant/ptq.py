@@ -32,8 +32,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.ir import (Graph, QParams, _apply_act, cached_einsum,
-                           reference_execute)
+from repro.core.ir import (Graph, QParams, _apply_act, _attention_ref,
+                           _kvappend_ref, _layernorm_ref, _softmax_ref,
+                           cached_einsum, reference_execute)
 
 from .observers import PerChannelMinMaxObserver, make_observer
 from .qparams import (dequantize, pack_int4, qparams_from_range,
@@ -111,6 +112,28 @@ class QuantizedModel:
         return qp
 
 
+def _pos_tensors(g: Graph) -> set:
+    """Names of tensors used *only* as sequence-position operands
+    (attention input 3 / kvappend input 2).  Positions are integer
+    indices, not signal: quantizing one to the calibration range would
+    clamp decode at runtime positions the calibration never saw, so
+    they stay float32 end to end."""
+    pos = set()
+    for op in g.ops:
+        if op.kind == "attention":
+            pos.add(op.inputs[3])
+        elif op.kind == "kvappend":
+            pos.add(op.inputs[2])
+    for op in g.ops:
+        for i, nm in enumerate(op.inputs):
+            if nm not in pos:
+                continue
+            if not ((op.kind == "attention" and i == 3)
+                    or (op.kind == "kvappend" and i == 2)):
+                pos.discard(nm)   # also consumed as a value: quantize it
+    return pos
+
+
 def quantize_graph(g: Graph, weights: Dict[str, np.ndarray],
                    calib: CalibrationTable,
                    weight_dtype: str = "int8") -> QuantizedModel:
@@ -120,13 +143,28 @@ def quantize_graph(g: Graph, weights: Dict[str, np.ndarray],
         raise ValueError(f"weight_dtype must be int8/int4, {weight_dtype!r}")
     wbits = 8 if weight_dtype == "int8" else 4
 
+    pos_names = _pos_tensors(g)
     for t in g.tensors.values():
-        if t.is_param:
+        if t.is_param or t.name in pos_names:
             continue
         lo, hi = calib[t.name].range()
         t.qparams = qparams_from_range(float(lo), float(hi), bits=8,
                                        symmetric=False)
         t.dtype = "int8"
+
+    # Tie each KV cache's in/out qparams to the union of their observed
+    # ranges: pass-through rows then requantize exactly, and feeding a
+    # decode step's cache output back as the next step's input is a
+    # fixed point (no drift on rows the step didn't write).
+    for op in g.ops:
+        if op.kind != "kvappend":
+            continue
+        lo0, hi0 = calib[op.inputs[0]].range()
+        lo1, hi1 = calib[op.outputs[0]].range()
+        qp = qparams_from_range(float(min(lo0, lo1)), float(max(hi0, hi1)),
+                                bits=8, symmetric=False)
+        g.tensors[op.inputs[0]].qparams = qp
+        g.tensors[op.outputs[0]].qparams = qp
 
     qweights: Dict[str, np.ndarray] = {}
     packed: Dict[str, np.ndarray] = {}
@@ -134,7 +172,16 @@ def quantize_graph(g: Graph, weights: Dict[str, np.ndarray],
         params = g.param_inputs(op)
         if not params:
             continue
-        if op.kind not in ("conv", "dwconv", "fc"):  # pragma: no cover
+        if op.kind == "layernorm":
+            # gamma/beta stay float32: layernorm re-normalizes every
+            # row, so integer params buy no bandwidth worth the error;
+            # the op executes dequant -> float LN -> requant.
+            for pt_ in params:
+                qweights[pt_.name] = np.asarray(weights[pt_.name],
+                                                np.float32)
+            continue
+        if op.kind not in ("conv", "dwconv", "fc",
+                           "matmul"):  # pragma: no cover
             raise NotImplementedError(
                 f"op kind {op.kind} with parameters")
         wt = params[0]
@@ -265,6 +312,23 @@ def q_fc(xq_flat: np.ndarray, in_qp: QParams, w_q: np.ndarray,
     return quantize(_apply_act(y, act), out_qp)
 
 
+def q_matmul(xq: np.ndarray, in_qp: QParams, w_q: np.ndarray,
+             w_qp: QParams, bias_q: Optional[np.ndarray], act: str,
+             out_qp: QParams) -> np.ndarray:
+    """int8 row-wise linear on (S,W,C) token activations -> (S,W,outC)
+    int8.  Same integer contract as :func:`q_fc`, kept per-row so the
+    sequence axis survives (LM activations put tokens on rows)."""
+    zp = int(np.atleast_1d(in_qp.zero_point)[0])
+    xi = xq.astype(np.int64) - zp
+    acc = cached_einsum("swc,oc->swo", xi, w_q.astype(np.int64))
+    if bias_q is not None:
+        acc = acc + bias_q.astype(np.int64)
+    s_x = float(np.atleast_1d(in_qp.scale)[0])
+    s_w = np.atleast_1d(w_qp.scale).astype(np.float32)
+    y = acc.astype(np.float32) * (s_x * s_w)
+    return quantize(_apply_act(y, act), out_qp)
+
+
 def q_maxpool(xq: np.ndarray, k: int, s: int,
               pad: Tuple[int, int, int, int], in_qp: QParams,
               out_qp: QParams) -> np.ndarray:
@@ -325,12 +389,15 @@ def quantized_reference_execute(qm: QuantizedModel,
     vals: Dict[str, np.ndarray] = {}
     for t in g.tensors.values():
         if t.kind == "input":
-            vals[t.name] = quantize(np.asarray(inputs[t.name], np.float32),
-                                    qm.qp(t.name))
+            arr = np.asarray(inputs[t.name], np.float32)
+            vals[t.name] = (quantize(arr, qm.qp(t.name))
+                            if t.qparams is not None else arr)
         elif t.is_param:
             vals[t.name] = qm.qweights[t.name]
 
     def deq(name: str) -> np.ndarray:
+        if g.tensors[name].qparams is None:   # float32 pos operands
+            return vals[name]
         return dequantize(vals[name], qm.qp(name))
 
     for op in g.topo_ops():
@@ -383,6 +450,26 @@ def quantized_reference_execute(qm: QuantizedModel,
                             f, axis=1)
             vals[out] = quantize(dequantize(rep, qm.qp(op.inputs[0])),
                                  out_qp)
+        elif k == "matmul":
+            bias = vals[op.inputs[2]] if len(op.inputs) > 2 else None
+            w = vals[op.inputs[1]][:, 0, 0, :]
+            vals[out] = q_matmul(vals[op.inputs[0]], qm.qp(op.inputs[0]),
+                                 w, qm.qp(op.inputs[1]), bias,
+                                 a.get("act", "none"), out_qp)
+        elif k == "layernorm":
+            y = _layernorm_ref(deq(op.inputs[0]), vals[op.inputs[1]],
+                               vals[op.inputs[2]], a["eps"])
+            vals[out] = quantize(y, out_qp)
+        elif k == "softmax":
+            vals[out] = quantize(_softmax_ref(deq(op.inputs[0])), out_qp)
+        elif k == "attention":
+            y = _attention_ref(deq(op.inputs[0]), deq(op.inputs[1]),
+                               deq(op.inputs[2]), deq(op.inputs[3]), a)
+            vals[out] = quantize(y, out_qp)
+        elif k == "kvappend":
+            y = _kvappend_ref(deq(op.inputs[0]), deq(op.inputs[1]),
+                              deq(op.inputs[2]))
+            vals[out] = quantize(y, out_qp)
         elif k == "concat":
             y = np.concatenate([deq(i) for i in op.inputs], axis=2)
             vals[out] = quantize(y, out_qp)

@@ -129,6 +129,32 @@ def test_windowed_orders_sound_and_complete():
             assert not errs, errs
 
 
+@pytest.mark.fast
+def test_sequential_window_refinement_sound_and_no_worse():
+    """The sequential refinement (carry=1 for tiles the previous window
+    holds at its end) must keep the stitched order dependency-sound and
+    never worsen the fusion objective vs. the concurrent-only solve."""
+    from repro.frontends.vision import build
+    g, _ = build("mobilenet_v2", res_scale=0.5)
+    plan = select_formats(CFG, g)
+    kw = dict(max_cp_tiles=0, max_cp_window_tiles=4, region_overlap=2)
+    base = plan_tiling(CFG, g, plan, window_refine=False, **kw)
+    ref = plan_tiling(CFG, g, plan, window_refine=True, **kw)
+    assert base.stats["window_refined"] == 0
+    assert ref.stats["windows"] >= 2
+    assert ref.stats["window_refined"] >= 1
+    # held tiles stop paying the phantom DDR re-entry at the seam
+    assert ref.fusion_objective <= base.fusion_objective
+    name_to_op = {op.name: op for op in g.ops}
+    orders = _region_orders(g, ref)
+    for ri, names in enumerate(ref.regions):
+        region = [name_to_op[n] for n in names]
+        if len(region) <= 1:
+            continue
+        errs = validate_order(g, region, ref.tiles, orders[ri])
+        assert not errs, errs
+
+
 def test_windowed_compile_executes_oracle_exact():
     g, b = _chain_graph(h=48, c=12, n=5)
     opts = CompilerOptions(max_cp_tiles=0, max_cp_window_tiles=6,

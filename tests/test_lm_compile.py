@@ -1,0 +1,187 @@
+"""Causal-operator subsystem: the LM decoder's compile/serve path.
+
+Parity chain: the IR-level attention reference is checked against the
+seed Pallas kernels (``flash_attention`` for prefill, ``flash_decode``
+for single-token decode at several sequence positions); the interpretive
+executor and the compiled ExecPlan are then checked against each other
+through ``CompiledModel.verify`` (bit-exact for float32, within one
+output quantization step for int8).  Serving state: KV caches are
+per-request (interleaved requests reproduce their solo runs), the
+decode-step plan is built once and only hit afterwards, and weights are
+shared across sequence/KV buckets by construction.
+"""
+import numpy as np
+import pytest
+
+from repro.api import DecodeSession
+from repro.core.ir import _attention_ref, _kvappend_ref
+from repro.frontends import lm
+
+SPEC = lm.tiny_spec()
+
+
+def _heads(x, heads, hd):
+    """(S, 1, d) -> (1, heads, S, hd) kernel layout."""
+    s = x.shape[0]
+    return x.reshape(s, heads, hd).transpose(1, 0, 2)[None]
+
+
+# --------------------------------------------------------------------------
+# IR attention reference vs the seed Pallas kernels
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("S", [4, 8, 16])
+def test_attention_ref_matches_flash_attention_prefill(S):
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention import flash_attention
+
+    rng = np.random.default_rng(S)
+    heads, hd = 4, 8
+    d = heads * hd
+    q = rng.normal(size=(S, 1, d)).astype(np.float32)
+    k = rng.normal(size=(S, 1, d)).astype(np.float32)
+    v = rng.normal(size=(S, 1, d)).astype(np.float32)
+    scale = 1.0 / np.sqrt(hd)
+    attrs = {"heads": heads, "head_dim": hd, "scale": float(scale),
+             "causal": True, "kv_len": S}
+    got = _attention_ref(q, k, v, np.zeros((1, 1, 1), np.float32), attrs)
+    want = flash_attention(jnp.asarray(_heads(q, heads, hd)),
+                           jnp.asarray(_heads(k, heads, hd)),
+                           jnp.asarray(_heads(v, heads, hd)),
+                           causal=True, sm_scale=float(scale),
+                           interpret=True)
+    want = np.asarray(want)[0].transpose(1, 0, 2).reshape(S, 1, d)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+@pytest.mark.parametrize("pos", [0, 3, 7, 14])
+def test_attention_ref_matches_flash_decode_positions(pos):
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_decode import flash_decode
+
+    rng = np.random.default_rng(100 + pos)
+    heads, hd, kv = 4, 8, 16
+    d = heads * hd
+    q = rng.normal(size=(1, 1, d)).astype(np.float32)
+    kc = np.zeros((kv, 1, d), np.float32)
+    vc = np.zeros((kv, 1, d), np.float32)
+    kc[:pos] = rng.normal(size=(pos, 1, d))
+    vc[:pos] = rng.normal(size=(pos, 1, d))
+    p = np.full((1, 1, 1), float(pos), np.float32)
+    # decode step: append this token's K/V at row ``pos``, then attend
+    kc = _kvappend_ref(kc, rng.normal(size=(1, 1, d)).astype(np.float32), p)
+    vc = _kvappend_ref(vc, rng.normal(size=(1, 1, d)).astype(np.float32), p)
+    scale = 1.0 / np.sqrt(hd)
+    attrs = {"heads": heads, "head_dim": hd, "scale": float(scale),
+             "causal": True, "kv_len": kv}
+    got = _attention_ref(q, kc, vc, p, attrs)
+    want = flash_decode(jnp.asarray(q.reshape(heads, hd)[None]),
+                        jnp.asarray(_heads(kc, heads, hd)),
+                        jnp.asarray(_heads(vc, heads, hd)),
+                        kv_len=jnp.asarray([pos + 1], jnp.int32),
+                        sm_scale=float(scale), interpret=True)
+    want = np.asarray(want).reshape(1, 1, d)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# interpretive executor vs compiled ExecPlan on full decoder graphs
+# --------------------------------------------------------------------------
+
+
+def _feed(g, pos, seed=0):
+    rng = np.random.default_rng(seed)
+    feed = {}
+    for t in g.inputs:
+        if t.name == "pos":
+            feed[t.name] = np.full((1, 1, 1), float(pos), np.float32)
+        else:
+            feed[t.name] = rng.normal(size=t.shape).astype(np.float32)
+    return feed
+
+
+@pytest.mark.parametrize("seq,kv,pos", [(8, 16, 0), (1, 8, 0),
+                                        (1, 16, 5), (1, 16, 15)])
+def test_float32_engines_bit_exact(seq, kv, pos):
+    m = lm.compile_decoder(SPEC, seq, kv, cache=False)
+    # verify() raises unless plan parity is bit-exact for float32
+    rep = m.verify(_feed(m.graph, pos))
+    assert rep.ok
+
+
+def test_int8_decode_verifies_and_pos_stays_float():
+    m = lm.compile_decoder(SPEC, 1, 16, precision="int8", cache=False)
+    g = m.graph
+    # the position input is exempt from quantization (its runtime range
+    # is the whole bucket, not what calibration happened to see)
+    assert g.tensors["pos"].dtype == "float32"
+    assert g.tensors["pos"].qparams is None
+    rep = m.verify(_feed(g, 7))
+    assert rep.ok
+    # tied cache qparams: every kvappend's cache input/output quantize
+    # identically, so pass-through rows survive the decode loop exactly
+    for op in g.ops:
+        if op.kind == "kvappend":
+            qi = g.tensors[op.inputs[0]].qparams
+            qo = g.tensors[op.outputs[0]].qparams
+            assert qi is not None and qi == qo
+
+
+# --------------------------------------------------------------------------
+# serving state: isolation, plan-cache reuse, bucket weight sharing
+# --------------------------------------------------------------------------
+
+
+def test_kv_cache_isolation_across_concurrent_requests():
+    prompt_a, prompt_b = [3, 17, 42, 5], [9, 1, 88]
+    solo = DecodeSession()
+    a_solo = solo.generate(prompt_a, max_new_tokens=4)
+    b_solo = solo.generate(prompt_b, max_new_tokens=4)
+
+    sess = DecodeSession()
+    ra, ta = sess.prefill(prompt_a)
+    rb, tb = sess.prefill(prompt_b)
+    a, b = [ta], [tb]
+    for _ in range(3):          # interleave the two decode loops
+        a.append(sess.step(ra))
+        b.append(sess.step(rb))
+    assert a == a_solo
+    assert b == b_solo
+    assert sorted(sess.active_requests()) == sorted([ra, rb])
+    sess.finish(ra)
+    sess.finish(rb)
+    assert sess.active_requests() == []
+
+
+def test_decode_plan_built_once_then_hit():
+    sess = DecodeSession()
+    sess.generate([2, 4, 6], max_new_tokens=4)   # prefill + 3 steps
+    st = sess.stats()
+    assert set(st) == {"s8/kv8", "s1/kv8"}
+    for s in st.values():                        # zero re-lowering
+        assert s["plan"]["builds"] == 1
+    dec = st["s1/kv8"]["plan"]
+    assert dec["hits"] == 2                      # steps after the first
+
+
+def test_weights_shared_across_buckets():
+    _, b1 = lm.build_decoder(SPEC, 1, 8)
+    _, b2 = lm.build_decoder(SPEC, 8, 16)
+    _, b3 = lm.build_decoder(SPEC, 1, 128)
+    assert set(b1._weights) == set(b2._weights) == set(b3._weights)
+    for name, w in b1._weights.items():
+        np.testing.assert_array_equal(w, b2._weights[name])
+        np.testing.assert_array_equal(w, b3._weights[name])
+
+
+def test_bucket_growth_mid_generation():
+    sess = DecodeSession(buckets=(8, 16))
+    rid, _ = sess.prefill([1, 2, 3, 4, 5, 6])    # pos 6 in kv8
+    toks = [sess.step(rid) for _ in range(4)]    # crosses 8 -> 16
+    assert len(toks) == 4
+    r = sess._requests[rid]
+    assert r.bucket == 16 and r.pos == 10
+    assert {"s8/kv8", "s1/kv8", "s1/kv16"} <= set(sess.stats())
