@@ -13,7 +13,11 @@
    requests degrading to the interpretive oracle (correct outputs,
    slower), then the half-open re-lower probe recovering the plan path;
 5. prints the robustness surface: p50/p99 histograms, shed/deadline/
-   degraded counters, breaker state, per-worker health.
+   degraded counters, breaker state, per-worker health;
+6. re-opens the session with `workers=("process", 2)` — real worker
+   *processes* mmap-loading the model artifact — SIGKILLs one
+   mid-batch, and shows pipe-EOF detection, re-dispatch to the
+   survivor and an off-request-path respawn, still with zero loss.
 """
 import time
 
@@ -22,69 +26,110 @@ import numpy as np
 import repro.api as api
 import repro.runtime.chaos as chaos
 
-# ---- 1. pooled session, deadline-tagged burst ---------------------------
-sess = api.Session(max_batch=8, workers=2, max_queue=64, linger_ms=1.0,
-                   heartbeat_timeout_s=0.2, breaker_threshold=2,
-                   breaker_cooldown_s=0.3)
-m = sess.add("mobilenet_v2", precision="int8", res_scale=0.25,
-             calib_samples=2, warmup=True)
-rng = np.random.default_rng(0)
-x = rng.normal(size=m.graph.inputs[0].shape).astype(np.float32)
 
-tickets = [sess.submit("mobilenet_v2", x, deadline_ms=500)
-           for _ in range(24)]
-outs = [t.result(timeout=30) for t in tickets]
-print(f"1. burst served: {len(outs)} requests, all within deadline\n")
+def main() -> None:
+    # ---- 1. pooled session, deadline-tagged burst -----------------------
+    sess = api.Session(max_batch=8, workers=2, max_queue=64,
+                       linger_ms=1.0, heartbeat_timeout_s=0.2,
+                       breaker_threshold=2, breaker_cooldown_s=0.3)
+    m = sess.add("mobilenet_v2", precision="int8", res_scale=0.25,
+                 calib_samples=2, warmup=True)
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=m.graph.inputs[0].shape).astype(np.float32)
 
-# ---- 2. overload: typed shedding ----------------------------------------
-accepted, shed_hint = [], None
-try:
-    for _ in range(200):
-        accepted.append(sess.submit("mobilenet_v2", x))
-except api.Overloaded as e:
-    shed_hint = e.retry_after_ms
-print(f"2. overload: {len(accepted)} accepted, then shed with "
-      f"retry-after ~{shed_hint:.0f} ms")
-for t in accepted:
-    t.result(timeout=60)
-print("   ... every accepted ticket still terminated\n")
+    tickets = [sess.submit("mobilenet_v2", x, deadline_ms=500)
+               for _ in range(24)]
+    outs = [t.result(timeout=30) for t in tickets]
+    print(f"1. burst served: {len(outs)} requests, all within deadline\n")
 
-# ---- 3. chaos: both workers hang mid-batch ------------------------------
-with chaos.inject() as c:
-    c.stall_worker(0, seconds=1.0)
-    c.stall_worker(1, seconds=1.0)
-    ts = [sess.submit("mobilenet_v2", x) for _ in range(16)]
-    outs = [t.result(timeout=30) for t in ts]
-pool = sess.stats()["pool"]
-print(f"3. hung workers: {pool['recycled_workers']} recycled, "
-      f"{pool['redispatched_batches']} in-flight batches re-dispatched, "
-      f"{len(outs)}/{len(ts)} tickets served — zero loss\n")
+    # ---- 2. overload: typed shedding ------------------------------------
+    accepted, shed_hint = [], None
+    try:
+        for _ in range(200):
+            accepted.append(sess.submit("mobilenet_v2", x))
+    except api.Overloaded as e:
+        shed_hint = e.retry_after_ms
+    print(f"2. overload: {len(accepted)} accepted, then shed with "
+          f"retry-after ~{shed_hint:.0f} ms")
+    for t in accepted:
+        t.result(timeout=60)
+    print("   ... every accepted ticket still terminated\n")
 
-# ---- 4. breaker: poisoned plan -> oracle serving -> recovery ------------
-ref = m(x, engine="interp")
-with chaos.inject() as c:
-    for _ in range(2):                     # K=2 consecutive batch failures
-        c.poison_plan("mobilenet_v2", times=2)   # first try AND retry
-        t = sess.submit("mobilenet_v2", x)
-        try:
-            t.result(timeout=30)
-        except chaos.ChaosError:
-            pass
+    # ---- 3. chaos: both workers hang mid-batch --------------------------
+    with chaos.inject() as c:
+        c.stall_worker(0, seconds=1.0)
+        c.stall_worker(1, seconds=1.0)
+        ts = [sess.submit("mobilenet_v2", x) for _ in range(16)]
+        outs = [t.result(timeout=30) for t in ts]
+    pool = sess.stats()["pool"]
+    print(f"3. hung workers: {pool['recycled_workers']} recycled, "
+          f"{pool['redispatched_batches']} in-flight batches "
+          f"re-dispatched, {len(outs)}/{len(ts)} tickets served — "
+          f"zero loss\n")
+
+    # ---- 4. breaker: poisoned plan -> oracle serving -> recovery --------
+    ref = m(x, engine="interp")
+    with chaos.inject() as c:
+        for _ in range(2):                 # K=2 consecutive batch failures
+            c.poison_plan("mobilenet_v2", times=2)  # first try AND retry
+            t = sess.submit("mobilenet_v2", x)
+            try:
+                t.result(timeout=30)
+            except chaos.ChaosError:
+                pass
+        st = sess.stats()["models"]["mobilenet_v2"]
+        print(f"4. breaker {st['breaker']['state']} after "
+              f"{st['plan_failures']} plan failures "
+              f"({st['retries']} retries attempted)")
+        out = sess.submit("mobilenet_v2", x).result(timeout=60)
+        err = max(float(np.max(np.abs(out[k] - ref[k]))) for k in ref)
+        print(f"   degraded request served by the interpretive oracle "
+              f"(max|err| vs oracle = {err:.2e})")
+    time.sleep(0.4)                        # cooldown: probe may recover
+    sess.submit("mobilenet_v2", x).result(timeout=60)
     st = sess.stats()["models"]["mobilenet_v2"]
-    print(f"4. breaker {st['breaker']['state']} after "
-          f"{st['plan_failures']} plan failures "
-          f"({st['retries']} retries attempted)")
-    out = sess.submit("mobilenet_v2", x).result(timeout=60)
-    err = max(float(np.max(np.abs(out[k] - ref[k]))) for k in ref)
-    print(f"   degraded request served by the interpretive oracle "
-          f"(max|err| vs oracle = {err:.2e})")
-time.sleep(0.4)                            # cooldown: probe may recover
-sess.submit("mobilenet_v2", x).result(timeout=60)
-st = sess.stats()["models"]["mobilenet_v2"]
-print(f"   after cooldown: breaker {st['breaker']['state']}, "
-      f"{st['recoveries']} recovery\n")
+    print(f"   after cooldown: breaker {st['breaker']['state']}, "
+          f"{st['recoveries']} recovery\n")
 
-# ---- 5. the robustness surface ------------------------------------------
-print("5. session report:")
-print(sess.report())
-sess.close()
+    # ---- 5. the robustness surface --------------------------------------
+    print("5. session report:")
+    print(sess.report())
+    sess.close()
+
+    # ---- 6. process workers: SIGKILL survival ---------------------------
+    # workers=("process", 2): each worker is a real OS process that
+    # mmap-loads the model's .rpa artifact (weights shared copy-on-write)
+    # and serves batches over a pipe protocol — a segfault or OOM kill
+    # in one worker cannot take down the parent or its sibling
+    psess = api.Session(max_batch=8, workers=("process", 2),
+                        max_queue=64, linger_ms=1.0,
+                        heartbeat_timeout_s=5.0)
+    psess.add("mobilenet_v2", precision="int8", res_scale=0.25,
+              calib_samples=2, warmup=True)
+    [t.result(timeout=120)                 # first batch: children lower
+     for t in [psess.submit("mobilenet_v2", x) for _ in range(16)]]
+    pids = sorted({h.get("pid") for h in
+                   psess._pool.worker_health().values()})
+    print(f"6. process pool up: worker pids {pids}")
+    with chaos.inject() as c:
+        c.kill_worker(-1, mode="kill")     # SIGKILL the next claimant,
+        ts = [psess.submit("mobilenet_v2", x)    # batch already in flight
+              for _ in range(32)]
+        outs = [t.result(timeout=120) for t in ts]
+        kills = int(c.injected.get("kills", 0))
+    for _ in range(100):                   # respawn is off the request
+        if psess.stats()["pool"]["recycled_workers"]:   # path — let the
+            break                          # supervisor land it
+        time.sleep(0.05)
+    st = psess.stats()
+    ms = st["models"]["mobilenet_v2"]
+    print(f"   {kills} worker process SIGKILLed mid-batch: "
+          f"{ms['crash_redispatches']} crashed batches re-dispatched to "
+          f"the survivor, {st['pool']['recycled_workers']} replacement "
+          f"spawned off the request path, {len(outs)}/{len(ts)} tickets "
+          f"served — zero loss")
+    psess.close()
+
+
+if __name__ == "__main__":
+    main()

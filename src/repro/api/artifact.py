@@ -50,7 +50,9 @@ def save_model(path: str, *, name: str, graph: Graph, cfg: NPUConfig,
                quant_meta: Optional[dict] = None,
                qweights: Optional[Dict[str, np.ndarray]] = None,
                packed: Optional[Dict[str, np.ndarray]] = None,
-               calib_error: Optional[Dict[str, float]] = None) -> None:
+               calib_error: Optional[Dict[str, float]] = None,
+               plan_consts: Optional[Dict[str, np.ndarray]] = None
+               ) -> None:
     graph_payload, arrays = serialize.graph_to_payload(graph)
     for wname, arr in weights.items():
         arrays[f"wf/{wname}"] = np.asarray(arr)
@@ -58,6 +60,12 @@ def save_model(path: str, *, name: str, graph: Graph, cfg: NPUConfig,
         arrays[f"qw/{wname}"] = np.asarray(arr)
     for wname, arr in (packed or {}).items():
         arrays[f"pk/{wname}"] = np.asarray(arr)
+    # lowered-plan kernel constants (version 3): stored under indexed
+    # member names (const keys hold step labels with ':'/'@'/'[') with
+    # the key order in a payload, so loaders rebuild the exact store
+    pl_keys = sorted(plan_consts or ())
+    for i, ckey in enumerate(pl_keys):
+        arrays[f"pl/{i:04d}"] = np.asarray(plan_consts[ckey])
     key = {
         "kind": "compiled-model",
         "fingerprint": graph.fingerprint(),
@@ -80,6 +88,8 @@ def save_model(path: str, *, name: str, graph: Graph, cfg: NPUConfig,
         "tiling": serialize.tiling_to_payload(result.tiling),
         "allocation": serialize.allocation_to_payload(result.allocation),
     }
+    if pl_keys:
+        payloads["planconsts"] = {"keys": pl_keys}
     serialize.write_artifact(path, key, payloads, arrays)
 
 
@@ -90,11 +100,15 @@ def load_model(path: str, *,
                mmap: bool = False
                ) -> Tuple[dict, Graph, NPUConfig, CompilerOptions,
                           CompileResult, Dict[str, np.ndarray],
-                          Dict[str, np.ndarray], Dict[str, np.ndarray]]:
+                          Dict[str, np.ndarray], Dict[str, np.ndarray],
+                          Optional[Dict[str, np.ndarray]]]:
     """Load + validate a CompiledModel artifact.
 
     Returns ``(model_payload, graph, cfg, options, result, weights,
-    qweights, packed)``.  Validation: container integrity (checksums,
+    qweights, packed, plan_consts)`` — ``plan_consts`` maps lowering
+    const keys to their persisted arrays (version-3 artifacts), or None
+    when the artifact predates them.  Validation: container integrity
+    (checksums,
     version) via :func:`repro.core.serialize.read_artifact`, then the
     embedded graph's *recomputed* fingerprint must equal the stored key
     (catches hand-edits and fingerprint-algorithm drift), then any
@@ -145,5 +159,15 @@ def load_model(path: str, *,
     weights = {k[3:]: arrays[k] for k in arrays if k.startswith("wf/")}
     qweights = {k[3:]: arrays[k] for k in arrays if k.startswith("qw/")}
     packed = {k[3:]: arrays[k] for k in arrays if k.startswith("pk/")}
+    plan_consts = None
+    pc = payloads.get("planconsts")
+    if pc is not None:
+        try:
+            plan_consts = {ckey: arrays[f"pl/{i:04d}"]
+                           for i, ckey in enumerate(pc["keys"])}
+        except KeyError as e:
+            raise ArtifactError(
+                f"{path}: planconsts key index references missing "
+                f"array member ({e})") from None
     return (payloads["model"], graph, cfg, options, result,
-            weights, qweights, packed)
+            weights, qweights, packed, plan_consts)

@@ -22,7 +22,8 @@ from typing import Dict, List, Optional, Union
 
 import numpy as np
 
-from repro.core.execplan import ExecPlan, lower_plan, lower_steps
+from repro.core.execplan import (ExecPlan, PlanConsts, lower_plan,
+                                 lower_steps)
 from repro.core.executor import (ExecSemantics, ExecutionError,
                                  ExecutionReport, FLOAT_SEMANTICS, execute)
 from repro.core.ir import Graph, graph_precision
@@ -81,6 +82,10 @@ class CompiledModel:
     #: lazily built compiled replay plans, keyed by
     #: (graph fingerprint, semantics dtype, batch bucket)
     _plans: Dict[tuple, ExecPlan] = field(default_factory=dict, repr=False)
+    #: get-or-compute store for the lowering-time kernel constants;
+    #: version-3 artifacts persist it so loaded models serve the derived
+    #: arrays (memory-mapped) instead of recomputing them
+    _plan_consts: Optional[PlanConsts] = field(default=None, repr=False)
     _plan_stats: Dict[str, float] = field(
         default_factory=lambda: {"builds": 0, "hits": 0, "build_s": 0.0,
                                  "plan_requests": 0, "plan_batches": 0},
@@ -192,9 +197,12 @@ class CompiledModel:
             lowered = getattr(self, "_lowered_steps", None)
             if lowered is None:
                 t0 = _time.monotonic()
+                if self._plan_consts is None:
+                    self._plan_consts = PlanConsts()
                 lowered = lower_steps(self.program, self.graph,
                                       self.tiling, self.weights,
-                                      self.semantics)
+                                      self.semantics,
+                                      consts=self._plan_consts)
                 self._lowered_steps = lowered
                 self._plan_stats["build_s"] += _time.monotonic() - t0
             plan = lower_plan(self.program, self.graph, self.tiling,
@@ -212,16 +220,22 @@ class CompiledModel:
         info["plans"] = sorted(
             (fp[:12], sem, bucket, "-" if owner is None else str(owner))
             for fp, sem, bucket, owner in self._plans)
+        pc = self._plan_consts
+        info["consts"] = len(pc) if pc is not None else 0
+        info["consts_computed"] = pc.computed if pc is not None else 0
+        info["consts_served"] = pc.served if pc is not None else 0
         return info
 
     def invalidate_plans(self) -> None:
-        """Drop every cached replay plan *and* the shared lowered step
-        list, forcing a fresh re-lower on the next request.  The
-        serving runtime's circuit-breaker recovery path calls this: if
-        a plan (or its pre-gathered constants) went bad, the rebuilt
-        one must not share any state with it."""
+        """Drop every cached replay plan, the shared lowered step list
+        *and* the kernel-constant store, forcing a fresh re-lower from
+        the raw weights on the next request.  The serving runtime's
+        circuit-breaker recovery path calls this: if a plan (or its
+        pre-gathered/persisted constants) went bad, the rebuilt one
+        must not share any state with it."""
         self._plans.clear()
         self._lowered_steps = None
+        self._plan_consts = PlanConsts()
 
     def _run_plan_batch(self, stacked: Dict[str, np.ndarray], n: int,
                         owner=None) -> Dict[str, np.ndarray]:
@@ -407,11 +421,15 @@ class CompiledModel:
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> str:
         """Write the versioned on-disk artifact (everything needed to
-        :meth:`load` and execute in another process, no recompile)."""
+        :meth:`load` and execute in another process, no recompile —
+        including the lowered-plan kernel constants, so a loading
+        worker's first request serves them instead of re-deriving)."""
         if self.semantics is None:
             raise RuntimeError(
                 f"{self.name}: cost-model-only models (dtype-cast "
                 f"graphs) are not persistable deployment artifacts")
+        if self._plan_consts is None or not len(self._plan_consts):
+            self.plan_for(1)          # populate the constant store
         quant_meta = None
         qweights = packed = None
         calib_error = None
@@ -426,7 +444,8 @@ class CompiledModel:
             options=self.options, result=self.result,
             weights=self.weights, precision=self.precision,
             quant_meta=quant_meta, qweights=qweights, packed=packed,
-            calib_error=calib_error)
+            calib_error=calib_error,
+            plan_consts=self._plan_consts.as_arrays())
         return path
 
     @classmethod
@@ -441,7 +460,7 @@ class CompiledModel:
         ``mmap=True`` maps weights copy-on-write out of the artifact
         (many-model fleets share one page-cache copy per weight)."""
         (model_p, graph, cfg, options, result, weights, qweights,
-         packed) = _artifact.load_model(
+         packed, plan_consts) = _artifact.load_model(
             path, expect_graph=expect_graph, expect_cfg=expect_cfg,
             expect_options=expect_options, mmap=mmap)
         qm = None
@@ -455,4 +474,6 @@ class CompiledModel:
                              (model_p.get("calib_error") or {}).items()})
         sem = resolve_semantics(graph, qm, sem_meta)
         return cls(model_p["name"], graph, cfg, options, result, weights,
-                   semantics=sem, qm=qm, source=path)
+                   semantics=sem, qm=qm, source=path,
+                   _plan_consts=PlanConsts(plan_consts)
+                   if plan_consts else None)

@@ -32,10 +32,16 @@ stale work; a failing plan execution fails only its own batch's
 tickets, is retried once (transient faults), and after
 ``breaker_threshold`` consecutive failures the model's circuit breaker
 trips — requests degrade to the interpretive oracle engine (slow but
-correct) while a re-lower probe attempts recovery.  With ``workers >
-0`` a :class:`~repro.runtime.serving.ServerPool` serves the queues:
-per-worker plan arenas, deadline-driven auto-flush, heartbeat-based
+correct) while a background re-lower probe attempts recovery.  With
+``workers > 0`` a :class:`~repro.runtime.serving.ServerPool` serves the
+queues: per-worker plan arenas, EDF-within-model / priority-
+across-models dispatch, deadline-driven auto-flush, heartbeat-based
 hang detection with in-flight re-dispatch and worker recycling.
+``workers=("process", n)`` swaps in a :class:`~repro.runtime.procpool.
+ProcPool`: each worker is a separate OS *process* mmapping the model
+artifacts (crash-fault isolation — a SIGKILL/SIGSEGV/OOM death
+re-dispatches the in-flight batch to survivors and respawns off the
+request path, with zero ticket loss).
 
 ``pin()`` marks a model's compiled program exempt from the in-process
 LRU eviction (the admission policy for hot models); pinned counts are
@@ -45,9 +51,13 @@ counters and per-worker health.
 """
 from __future__ import annotations
 
+import os
+import tempfile
 import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
 
 from repro.core.npu import NEUTRON_2TOPS, NPUConfig
 from repro.core.pipeline import (CompilerOptions, program_cache_configure,
@@ -58,7 +68,8 @@ from repro.obs.metrics import LogHistogram, MetricsRegistry
 from repro.runtime import chaos as _chaos
 from repro.runtime.serving import (CircuitBreaker, DeadlineExceeded,
                                    FlushError, LatencyHistogram,
-                                   Overloaded, ServerPool, Ticket)
+                                   Overloaded, ServerPool, Ticket,
+                                   WorkerCrashed)
 
 from .compiled import CompiledModel, Inputs
 
@@ -76,7 +87,7 @@ class Session:
                  max_entries: Optional[int] = None,
                  max_bytes: Optional[int] = None,
                  max_batch: int = 8,
-                 workers: int = 0,
+                 workers: Union[int, Tuple[str, int]] = 0,
                  max_queue: int = 256,
                  linger_ms: float = 2.0,
                  heartbeat_timeout_s: float = 0.5,
@@ -124,13 +135,36 @@ class Session:
         self._queue_depth = 0
         self._pool: Optional[ServerPool] = None
         self.closed = False
-        if workers:
-            self._pool = ServerPool(
-                self._execute_entries, workers=int(workers),
-                max_batch=self.max_batch, max_queue=self.max_queue,
-                linger_ms=linger_ms,
-                heartbeat_timeout_s=heartbeat_timeout_s,
-                registry=self.registry)
+        #: background half-open recovery probes, one timer per tripped
+        #: model (canceled on close)
+        self._probe_lock = threading.Lock()
+        self._probe_timers: Dict[str, threading.Timer] = {}
+        #: artifact spool for process pools (workers mmap models from
+        #: here when they were compiled in-session rather than loaded
+        #: from an artifact path)
+        self._spool_dir: Optional[str] = None
+        # workers policy: n (threads, back-compat) or ("thread"|"process", n)
+        if isinstance(workers, (tuple, list)):
+            pool_mode, n_workers = workers
+            n_workers = int(n_workers)
+        else:
+            pool_mode, n_workers = "thread", int(workers)
+        if pool_mode not in ("thread", "process"):
+            raise ValueError(
+                f"workers mode must be 'thread' or 'process', "
+                f"got {pool_mode!r}")
+        if n_workers:
+            kw = dict(max_batch=self.max_batch, max_queue=self.max_queue,
+                      linger_ms=linger_ms,
+                      heartbeat_timeout_s=heartbeat_timeout_s,
+                      registry=self.registry)
+            if pool_mode == "process":
+                from repro.runtime.procpool import ProcPool
+                self._pool = ProcPool(self._execute_entries,
+                                      workers=n_workers, **kw)
+            else:
+                self._pool = ServerPool(self._execute_entries,
+                                        workers=n_workers, **kw)
 
     def __enter__(self) -> "Session":
         return self
@@ -144,8 +178,17 @@ class Session:
         if self.closed:
             return
         self.closed = True
+        with self._probe_lock:
+            timers = list(self._probe_timers.values())
+            self._probe_timers.clear()
+        for t in timers:
+            t.cancel()
         if self._pool is not None:
             self._pool.close()
+        if self._spool_dir is not None:
+            import shutil
+            shutil.rmtree(self._spool_dir, ignore_errors=True)
+            self._spool_dir = None
 
     def _model_stats(self, name: str) -> dict:
         return self._stats.setdefault(name, {
@@ -157,6 +200,7 @@ class Session:
             "shed": 0, "deadline_misses": 0, "degraded_requests": 0,
             "retries": 0, "plan_failures": 0, "breaker_trips": 0,
             "recoveries": 0, "failed_recoveries": 0,
+            "crash_redispatches": 0,
         })
 
     def _count(self, name: str, counter: str, n: int = 1) -> None:
@@ -181,17 +225,51 @@ class Session:
         return h
 
     # -- registry -----------------------------------------------------------
+    def _register_with_pool(self, name: str, model: CompiledModel,
+                            path: Optional[str],
+                            priority: Optional[int]) -> None:
+        """Hand a newly registered model to the worker pool: process
+        pools need an on-disk artifact (spooled here if the model was
+        compiled in-session) for the children to mmap."""
+        pool = self._pool
+        if pool is None:
+            if priority is not None:
+                raise ValueError(
+                    f"{name}: priority= needs a worker pool "
+                    f"(workers > 0)")
+            return
+        if priority is not None:
+            pool.set_priority(name, int(priority))
+        if pool.mode != "process":
+            return
+        if model.semantics is None:
+            raise RuntimeError(
+                f"{name}: cost-model-only models (dtype-cast graphs) "
+                f"have no executable semantics and cannot be served "
+                f"by a process pool")
+        if path is None:
+            if self._spool_dir is None:
+                self._spool_dir = tempfile.mkdtemp(
+                    prefix="repro-procpool-")
+            path = os.path.join(self._spool_dir, f"{name}.rpa")
+            model.save(path)
+        pool.register_model(name, path)
+
     def add(self, source, name: Optional[str] = None,
             precision: str = "auto",
             options: Optional[CompilerOptions] = None,
             warmup: bool = False, pin: bool = False,
+            priority: Optional[int] = None,
             **kw) -> CompiledModel:
         """Compile (or fetch from the program cache) and register one
         model.  ``precision`` selects the per-model execution precision
         ("auto" / "float32" / "int8"); ``warmup=True`` runs one zero
         input through the program so first-request latency excludes the
         replay's lazy plan lowering; ``pin=True`` marks the model's
-        compiled program exempt from in-process LRU eviction."""
+        compiled program exempt from in-process LRU eviction;
+        ``priority`` assigns the pool dispatch/shedding priority class
+        (higher dispatches first).  With a process pool the compiled
+        model is spooled to an artifact the worker processes mmap."""
         from . import compile as api_compile
         model = api_compile(source, self.cfg,
                             options if options is not None else self.options,
@@ -203,6 +281,7 @@ class Session:
         st["compile_s"] = model.compile_s
         st["latency_ms"] = model.program.latency_ms()
         st["compiles"][model.cache_tier or "solved"] += 1
+        self._register_with_pool(name, model, None, priority)
         if pin:
             self.pin(name)
         if warmup:
@@ -210,11 +289,13 @@ class Session:
         return model
 
     def load(self, path: str, name: Optional[str] = None,
-             mmap: bool = True, pin: bool = False) -> CompiledModel:
+             mmap: bool = True, pin: bool = False,
+             priority: Optional[int] = None) -> CompiledModel:
         """Register a model from an on-disk artifact (no compilation).
         ``mmap=True`` maps the artifact's weight arrays copy-on-write
         instead of reading them into RAM — a fleet of Sessions serving
-        the same artifacts shares one page-cache copy per weight."""
+        the same artifacts shares one page-cache copy per weight (as do
+        a process pool's workers, which mmap this same artifact)."""
         model = CompiledModel.load(path, mmap=mmap)
         name = name or model.name
         self._models[name] = model
@@ -223,6 +304,7 @@ class Session:
         st["compile_s"] = 0.0
         st["latency_ms"] = model.program.latency_ms()
         st["compiles"]["artifact"] += 1
+        self._register_with_pool(name, model, path, priority)
         if pin:
             self.pin(name)
         return model
@@ -231,7 +313,6 @@ class Session:
         """Run one all-zeros input through the named model (or all) —
         builds the batch-1 replay plan, so first-request latency is
         pure execution."""
-        import numpy as np
         names = [name] if name else list(self._models)
         for n in names:
             m = self._models[n]
@@ -369,19 +450,71 @@ class Session:
 
     # -- robust batch execution (shared by sync flush and the pool) ---------
     def _plan_run(self, name: str, model: CompiledModel, feeds,
-                  worker=None):
+                  worker=None, trace_ids=None):
         c = _chaos.active()
         if c is not None:
             c.check_plan(name)
+        pool = self._pool
+        if pool is not None and pool.mode == "process" \
+                and worker is not None:
+            # normalize here (run_many's client-error contract) so the
+            # child only ever sees clean single-sample dicts
+            feeds = [model._normalize(f) for f in feeds]
+            for f in feeds:
+                if model._batch_size(f) is not None:
+                    raise ValueError(
+                        f"{name}: run_many takes single-sample requests"
+                        f" — pass a batched array to __call__ instead")
+            return pool.remote_run(worker, name, feeds,
+                                   trace_ids=trace_ids)
         return model.run_many(feeds, owner=worker)
 
-    def _maybe_recover(self, name: str, model: CompiledModel,
-                       br: CircuitBreaker) -> None:
-        """Half-open probe: re-lower the plan from scratch and verify it
-        against the interpretive oracle; success closes the breaker."""
-        if not br.try_probe():
+    def _degraded_run(self, model: CompiledModel, feeds) -> List[dict]:
+        """Breaker-open path: serve the whole batch as *one* stacked
+        interpretive replay (not a per-sample loop of calls), split
+        back per request."""
+        feeds = [model._normalize(f) for f in feeds]
+        if len(feeds) == 1:
+            return [model(feeds[0], engine="interp")]
+        stacked = {t.name: np.stack([np.asarray(f[t.name])
+                                     for f in feeds])
+                   for t in model.graph.inputs}
+        res = model(stacked, engine="interp")
+        return [{k: v[i] for k, v in res.items()}
+                for i in range(len(feeds))]
+
+    # -- breaker recovery (background probe, off the request path) ----------
+    def _schedule_probe(self, name: str, delay_s: float) -> None:
+        """Arm (at most) one background re-lower+verify probe timer for
+        a tripped model — recovery no longer piggybacks on request
+        batches, so an idle model heals too."""
+        if self.closed:
             return
-        import numpy as np
+        with self._probe_lock:
+            if name in self._probe_timers:
+                return
+            t = threading.Timer(max(0.01, delay_s), self._probe,
+                                args=(name,))
+            t.daemon = True
+            self._probe_timers[name] = t
+            t.start()
+
+    def _probe(self, name: str) -> None:
+        """Half-open probe body: re-lower the plan from scratch and
+        verify it against the interpretive oracle; success closes the
+        breaker, failure re-opens it and re-arms the timer."""
+        with self._probe_lock:
+            self._probe_timers.pop(name, None)
+        if self.closed:
+            return
+        model = self._models.get(name)
+        br = self._breakers.get(name)
+        if model is None or br is None:
+            return
+        if not br.try_probe():
+            if br.state == "open":     # cooldown not yet elapsed
+                self._schedule_probe(name, self.breaker_cooldown_s / 2)
+            return
         try:
             c = _chaos.active()
             if c is not None:
@@ -393,9 +526,28 @@ class Session:
         except Exception:
             br.probe_failed()
             self._count(name, "failed_recoveries")
+            self._schedule_probe(name, self.breaker_cooldown_s)
         else:
             br.probe_succeeded()
             self._count(name, "recoveries")
+
+    def _crash_redispatch(self, name: str, entries,
+                          err: WorkerCrashed) -> None:
+        """A worker *process* died with this batch in flight: hand the
+        still-live entries back to the pool for the survivors.  No
+        ticket fails, nothing counts against the breaker — the crash is
+        a fault-domain event, not a model fault (first-fulfillment-wins
+        tickets settle any duplicated work)."""
+        self._count(name, "crash_redispatches")
+        _trace.instant("worker_crashed", "fault",
+                       args={"model": name, "worker": err.worker,
+                             "n": len(entries)})
+        if self._pool is not None:
+            self._pool.redispatch(name, entries, err.worker)
+        else:                      # sync session: no pool to re-home to
+            for _, ticket in entries:
+                ticket._fail(err)
+        return None
 
     def _execute_entries(self, name: str, entries, worker=None
                          ) -> Optional[BaseException]:
@@ -407,8 +559,8 @@ class Session:
         recovers.  Returns the batch error, if any."""
         model = self._models[name]
         br = self._breaker(name)
-        self._maybe_recover(name, model, br)
         feeds = [feed for feed, _ in entries]
+        trace_ids = [t.trace_id for _, t in entries]
         outs = None
         err: Optional[BaseException] = None
         engine = "plan"
@@ -428,7 +580,10 @@ class Session:
                 (t0 - ticket.submitted_at) * 1e3, model=name)
         if br.allow_plan():
             try:
-                outs = self._plan_run(name, model, feeds, worker)
+                outs = self._plan_run(name, model, feeds, worker,
+                                      trace_ids)
+            except WorkerCrashed as e:
+                return self._crash_redispatch(name, entries, e)
             except _CLIENT_ERRORS as e:
                 err = e
             except Exception as e:
@@ -436,7 +591,10 @@ class Session:
                 self._count(name, "retries")
                 time.sleep(self.retry_backoff_s)
                 try:
-                    outs = self._plan_run(name, model, feeds, worker)
+                    outs = self._plan_run(name, model, feeds, worker,
+                                          trace_ids)
+                except WorkerCrashed as e2:
+                    return self._crash_redispatch(name, entries, e2)
                 except Exception as e2:
                     err = e2
             if outs is not None:
@@ -445,18 +603,21 @@ class Session:
                 self._count(name, "plan_failures")
                 if br.record_failure():
                     self._count(name, "breaker_trips")
+                    self._schedule_probe(name, self.breaker_cooldown_s)
         else:
             # breaker open: serve correct (oracle) outputs, slowly,
-            # instead of failing — graceful degradation
+            # instead of failing — graceful degradation (the recovery
+            # probe runs on its own timer, never on this request path)
             engine = "interp"
             try:
-                outs = [model(f, engine="interp") for f in feeds]
+                outs = self._degraded_run(model, feeds)
                 self._count(name, "degraded_requests", len(feeds))
             except _CLIENT_ERRORS as e:
                 err = e
             except Exception as e:
                 err = e
                 br.record_failure()
+            self._schedule_probe(name, self.breaker_cooldown_s)
         dt = time.monotonic() - t0
         self._m_service.observe(dt * 1e3, model=name)
         if tracer is not None:
@@ -564,6 +725,8 @@ class Session:
          "successful re-lower recovery probes"),
         ("failed_recoveries", "repro_failed_recoveries_total",
          "failed re-lower recovery probes"),
+        ("crash_redispatches", "repro_crash_redispatches_total",
+         "batches re-dispatched after a worker-process crash"),
     )
 
     def _collect_metrics(self) -> None:
@@ -635,11 +798,18 @@ class Session:
                                  "batches served per worker", ("worker",))
             wreq = reg.counter("repro_worker_requests_total",
                                "requests served per worker", ("worker",))
+            wpid = None
+            if pool.mode == "process":
+                wpid = reg.gauge("repro_worker_pid",
+                                 "worker process id (-1 = not ready)",
+                                 ("worker",))
             for wid, h in pool.worker_health().items():
                 alive.set(1 if h["alive"] and not h["abandoned"] else 0,
                           worker=wid)
                 wbatch.set_total(h["batches"], worker=wid)
                 wreq.set_total(h["requests"], worker=wid)
+                if wpid is not None:
+                    wpid.set(h.get("pid") or -1, worker=wid)
 
     def metrics(self) -> str:
         """The session's metrics registry as Prometheus text exposition

@@ -57,6 +57,61 @@ class PlanError(RuntimeError):
     pass
 
 
+class PlanConsts:
+    """Get-or-compute store for lowering-time kernel constants.
+
+    Lowering derives every weight-shaped constant a kernel closure
+    needs — gathered/cast float slices on the float path; transposed
+    float64 integer kernels, zero-point-folded biases and fused rescale
+    vectors on the quantized path.  That derivation is pure in the
+    execution weights, so version-3 artifacts persist the derived
+    arrays and a loading process *serves* them (memory-mapped, one
+    page-cache copy per fleet) instead of recomputing — a worker
+    process's first ``plan_for`` never touches the raw weight pages.
+
+    Keys are ``"<step label>/<const name>"``; both lowerers emit the
+    same keys for the same program, so a store computed in one process
+    replays in any other.  ``computed``/``served`` count cache misses
+    and hits for observability."""
+
+    def __init__(self,
+                 arrays: Optional[Dict[str, np.ndarray]] = None) -> None:
+        self._arrays: Dict[str, np.ndarray] = dict(arrays or {})
+        self.computed = 0
+        self.served = 0
+
+    def __len__(self) -> int:
+        return len(self._arrays)
+
+    def get(self, key: str, build: Callable[[], np.ndarray]) -> np.ndarray:
+        arr = self._arrays.get(key)
+        if arr is None:
+            arr = self._arrays[key] = build()
+            self.computed += 1
+        else:
+            self.served += 1
+        return arr
+
+    def group(self, label: str, names: Sequence[str],
+              build: Callable[[], Dict[str, np.ndarray]]
+              ) -> Dict[str, np.ndarray]:
+        """Several constants derived by one computation (e.g. a conv's
+        kernel/bias/rescale, whose dtypes depend on each other): all
+        served or all rebuilt together."""
+        keys = [f"{label}/{n}" for n in names]
+        if all(k in self._arrays for k in keys):
+            self.served += len(keys)
+            return {n: self._arrays[k] for n, k in zip(names, keys)}
+        got = build()
+        for n, k in zip(names, keys):
+            self._arrays[k] = got[n]
+        self.computed += len(keys)
+        return got
+
+    def as_arrays(self) -> Dict[str, np.ndarray]:
+        return dict(self._arrays)
+
+
 @dataclass
 class PlanStep:
     """One lowered kernel: ``run(bufs, n)`` reads/writes the first ``n``
@@ -283,19 +338,25 @@ class ExecPlan:
 
 
 def lower_steps(program: NPUProgram, graph: Graph, tiling: TilingResult,
-                weights: Dict[str, np.ndarray], semantics
+                weights: Dict[str, np.ndarray], semantics,
+                consts: Optional[PlanConsts] = None
                 ) -> Tuple[List[PlanStep], Dict[str, int], str]:
     """Semantics-driven step lowering: ``(steps, tensor ids,
     granularity)``.  Step closures are batch-capacity-independent
     (they read ``n`` at run time), so one lowered step list — with its
     pre-gathered, pre-cast weight constants — is shared by every batch
-    bucket's :class:`ExecPlan`; only the arena is per-bucket."""
+    bucket's :class:`ExecPlan`; only the arena is per-bucket.
+
+    ``consts`` is the get-or-compute :class:`PlanConsts` store the
+    kernel constants go through — pass a persisted store (version-3
+    artifacts) to serve the derived arrays instead of recomputing."""
     ids: Dict[str, int] = {}
     for t in graph.tensors.values():
         if not t.is_param:
             ids[t.name] = len(ids)
     lowerer = semantics.plan_lowerer()
-    steps, granularity = lowerer(graph, tiling, program, weights, ids)
+    steps, granularity = lowerer(graph, tiling, program, weights, ids,
+                                 consts=consts)
     return steps, ids, granularity
 
 
@@ -350,7 +411,9 @@ def _scatter(out_buf: np.ndarray, y: np.ndarray, n: int, axis: str,
 
 def lower_float_steps(g: Graph, tiling: TilingResult, program: NPUProgram,
                       weights: Dict[str, np.ndarray],
-                      ids: Dict[str, int]) -> Tuple[List[PlanStep], str]:
+                      ids: Dict[str, int],
+                      consts: Optional[PlanConsts] = None
+                      ) -> Tuple[List[PlanStep], str]:
     """Per-step float32 lowering.
 
     Convolution/fc/pooling reductions loop over the batch calling the
@@ -366,6 +429,7 @@ def lower_float_steps(g: Graph, tiling: TilingResult, program: NPUProgram,
     from .tiling import in_row_range
     from numpy.lib.stride_tricks import sliding_window_view
 
+    cs = consts if consts is not None else PlanConsts()
     steps: List[PlanStep] = []
 
     for cj, r0, r1, axis in program.compute_steps():
@@ -376,9 +440,10 @@ def lower_float_steps(g: Graph, tiling: TilingResult, program: NPUProgram,
         oid = ids[op.outputs[0]]
         label = f"{op.name}[{r0}:{r1}@{axis}]"
 
-        def gather_param(name: str, lo: int, hi: int) -> np.ndarray:
-            return np.ascontiguousarray(
-                np.asarray(weights[name], dtype=np.float32)[lo:hi])
+        def gather_param(name: str, lo: int, hi: int,
+                         _label: str = label) -> np.ndarray:
+            return cs.get(f"{_label}/{name}", lambda: np.ascontiguousarray(
+                np.asarray(weights[name], dtype=np.float32)[lo:hi]))
 
         if k in ("conv", "dwconv"):
             x = g.act_inputs(op)[0]

@@ -35,6 +35,7 @@ from __future__ import annotations
 import hashlib
 import io
 import json
+import struct
 import zipfile
 from dataclasses import asdict
 from typing import Any, Dict, List, Optional, Tuple
@@ -54,9 +55,14 @@ from .tiling import ComputeStep, TensorTiles, TilingResult
 #: members sit at a fixed byte offset inside the file, so weights can be
 #: memory-mapped copy-on-write straight out of the artifact — a fleet of
 #: serving processes shares one page-cache copy per weight instead of
-#: each copying every array into RAM.  Version 1 artifacts still load.
-ARTIFACT_VERSION = 2
-_SUPPORTED_VERSIONS = (1, 2)
+#: each copying every array into RAM.  Version 3 additionally persists
+#: the lowered-plan kernel constants (``arrays/pl/…`` members plus a
+#: ``planconsts.json`` key index), so a loading worker's first
+#: ``plan_for`` serves the derived arrays straight off the map instead
+#: of re-gathering/re-casting them from the weights.  Versions 1 and 2
+#: still load (they simply recompute the constants).
+ARTIFACT_VERSION = 3
+_SUPPORTED_VERSIONS = (1, 2, 3)
 ARTIFACT_MAGIC = "repro-npu-artifact"
 
 
@@ -130,10 +136,21 @@ def graph_from_payload(p: dict, arrays: Dict[str, np.ndarray]) -> Graph:
     for tp in p["tensors"]:
         qp = None
         if tp["qparams"] is not None:
-            qp = QParams(arrays[f"qp.scale/{tp['name']}"],
-                         arrays[f"qp.zp/{tp['name']}"],
+            axis = tp["qparams"]["axis"]
+            s = arrays[f"qp.scale/{tp['name']}"]
+            z = arrays[f"qp.zp/{tp['name']}"]
+            if axis is None and s.size == 1:
+                # restore the scalar form per-tensor params were built
+                # with (older artifacts stored them as shape (1,)): a
+                # 1-element scale array knocks quantize() off its scalar
+                # hot path, and the int32 zero-point *array* add then
+                # promotes the whole activation chain to float64 —
+                # measurably slower replay, same values
+                s = s.reshape(())[()]
+                z = np.asarray(z).reshape(())[()]
+            qp = QParams(s, z,
                          bits=int(tp["qparams"]["bits"]),
-                         axis=tp["qparams"]["axis"])
+                         axis=axis)
         g.tensors[tp["name"]] = Tensor(
             tp["name"], tuple(tp["shape"]), tp["kind"], tp["dtype"],
             tp["producer"], list(tp["consumers"]), tp["scale"], qp)
@@ -289,9 +306,44 @@ def _json_bytes(obj: Any) -> bytes:
 
 def _npy_bytes(arr: np.ndarray) -> bytes:
     buf = io.BytesIO()
-    np.lib.format.write_array(buf, np.ascontiguousarray(arr),
-                              allow_pickle=False)
+    # ascontiguousarray promotes 0-d to shape (1,) — keep scalar members
+    # (per-tensor qparams) 0-d so they round-trip exactly
+    a = np.asarray(arr)
+    if a.ndim:
+        a = np.ascontiguousarray(a)
+    np.lib.format.write_array(buf, a, allow_pickle=False)
     return buf.getvalue()
+
+
+#: mmap alignment for stored array members; matches numpy's own
+#: ARRAY_ALIGN so the npy header padding lands array data on the same
+#: boundary.
+_MEMBER_ALIGN = 64
+
+#: private zip extra-field id for alignment padding (any id unknown to
+#: extractors is carried opaquely; the data offset math in
+#: ``_member_data_offset`` reads the local header's real extra length).
+_PAD_EXTRA_ID = 0xD935
+
+
+def _aligned_zinfo(zf: zipfile.ZipFile, name: str) -> zipfile.ZipInfo:
+    """ZipInfo for a STORED member whose *data* starts 64-byte aligned.
+
+    ``np.lib.format`` pads the npy header so array data sits at a
+    64-byte offset within the blob; padding the zip local header with
+    an extra field aligns the blob itself, so memory-mapped arrays come
+    out SIMD-aligned instead of landing wherever the previous member
+    ended (misaligned loads measurably slow elementwise-heavy replay)."""
+    zi = zipfile.ZipInfo(name, date_time=(1980, 1, 1, 0, 0, 0))
+    zi.compress_type = zipfile.ZIP_STORED
+    data_off = zf.start_dir + 30 + len(name.encode("utf-8"))
+    pad = -data_off % _MEMBER_ALIGN
+    if 0 < pad < 4:                # an extra block is at least 4 bytes
+        pad += _MEMBER_ALIGN
+    if pad:
+        zi.extra = struct.pack("<HH", _PAD_EXTRA_ID, pad - 4) \
+            + b"\0" * (pad - 4)
+    return zi
 
 
 def write_artifact(path: str, key: dict, payloads: Dict[str, Any],
@@ -322,9 +374,11 @@ def write_artifact(path: str, key: dict, payloads: Dict[str, Any],
     with zipfile.ZipFile(path, "w", zipfile.ZIP_DEFLATED) as zf:
         zf.writestr("meta.json", _json_bytes(meta))
         for name, blob in sorted(entries.items()):
-            zf.writestr(name, blob,
-                        compress_type=zipfile.ZIP_STORED
-                        if name in stored else zipfile.ZIP_DEFLATED)
+            if name in stored:
+                zf.writestr(_aligned_zinfo(zf, name), blob)
+            else:
+                zf.writestr(name, blob,
+                            compress_type=zipfile.ZIP_DEFLATED)
 
 
 def _member_data_offset(path: str, zinfo: zipfile.ZipInfo) -> int:
@@ -371,8 +425,13 @@ def _mmap_npy_member(path: str, zinfo: zipfile.ZipInfo
     # mode "c" (copy-on-write): reads share the OS page cache across
     # processes; an in-place write (e.g. a spill push-back during
     # interpretive replay) dirties a private page instead of faulting
-    return np.memmap(path, dtype=dtype, mode="c", offset=offset,
-                     shape=shape, order="F" if fortran else "C")
+    m = np.memmap(path, dtype=dtype, mode="c", offset=offset,
+                  shape=shape, order="F" if fortran else "C")
+    # hand back a plain-ndarray view: the mapping stays alive through
+    # ``.base``, but ufuncs no longer propagate the memmap subclass —
+    # subclass dispatch on every intermediate taxes interpreted plans
+    # by whole milliseconds per batch
+    return m.view(np.ndarray)
 
 
 def read_artifact(path: str, mmap_arrays: bool = False

@@ -256,6 +256,36 @@ def session(capacity: int = 131072, plan_steps: bool = True):
 
 
 # --------------------------------------------------------------------------
+# Cross-process merge (worker-process tracers -> one document)
+# --------------------------------------------------------------------------
+
+def merge_chrome_traces(parent_doc: dict, parent_epoch: float,
+                        children) -> dict:
+    """Merge worker processes' trace documents into the parent's.
+
+    ``children`` is an iterable of ``(child_epoch, child_doc)`` pairs
+    (what :meth:`repro.runtime.procpool.ProcPool.collect_child_traces`
+    returns).  Each child's event timestamps are relative to its own
+    tracer epoch; ``time.monotonic()`` is CLOCK_MONOTONIC — one
+    system-wide clock shared by every process on the host — so rebasing
+    by the epoch delta puts all events on the parent's timeline.  Each
+    child keeps its own ``pid``, so per-(pid, tid) span nesting (what
+    :func:`validate_chrome_trace` checks) is preserved."""
+    evs = list(parent_doc.get("traceEvents", ()))
+    for child_epoch, child_doc in children:
+        shift_us = (float(child_epoch) - float(parent_epoch)) * 1e6
+        for d in (child_doc or {}).get("traceEvents", ()):
+            d = dict(d)
+            if "ts" in d:
+                d["ts"] = round(d["ts"] + shift_us, 3)
+            evs.append(d)
+    out = {k: v for k, v in parent_doc.items() if k != "traceEvents"}
+    out.setdefault("displayTimeUnit", "ms")
+    out["traceEvents"] = evs
+    return out
+
+
+# --------------------------------------------------------------------------
 # Schema validation (tests, benches and CI all assert through this)
 # --------------------------------------------------------------------------
 

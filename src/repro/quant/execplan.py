@@ -28,11 +28,11 @@ ragged tails).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.execplan import PlanStep
+from repro.core.execplan import PlanConsts, PlanStep
 from repro.core.ir import (Graph, _apply_act, _attention_ref,
                            _kvappend_ref, _layernorm_ref, _softmax_ref)
 from repro.core.program import NPUProgram
@@ -42,10 +42,33 @@ from .ptq import _NEG_SENTINEL, QuantizedModel
 from .qparams import dequantize, quantize
 
 
+def _gemm_consts(qm: QuantizedModel, op, zp: int,
+                 in_qp) -> Dict[str, np.ndarray]:
+    """Derived fc/matmul constants: float64 dgemm weight (exact for
+    integer operands — see the conv kernel note), zero-point-folded
+    bias, fused rescale vector."""
+    wT = np.ascontiguousarray(
+        qm.qweights[op.inputs[1]][:, 0, 0, :].astype(np.float64).T)
+    biasf = qm.qweights[op.inputs[2]].astype(np.float64) \
+        if len(op.inputs) > 2 else np.float64(0.0)
+    biasf = biasf - zp * wT.sum(axis=0)   # zp folded (exact ints)
+    s_x = float(np.atleast_1d(in_qp.scale)[0])
+    s_w = np.atleast_1d(qm.qp(op.inputs[1]).scale).astype(np.float32)
+    return {"wT": wT, "biasf": np.asarray(biasf), "sc": s_x * s_w}
+
+
 def lower_quant_steps(qm: QuantizedModel, g: Graph, tiling: TilingResult,
                       program: NPUProgram, weights: Dict[str, np.ndarray],
-                      ids: Dict[str, int]) -> Tuple[List[PlanStep], str]:
-    """One fused integer kernel per op, in topological order."""
+                      ids: Dict[str, int],
+                      consts: Optional[PlanConsts] = None
+                      ) -> Tuple[List[PlanStep], str]:
+    """One fused integer kernel per op, in topological order.
+
+    The derived kernel constants (transposed/cast integer kernels,
+    zero-point-folded biases, fused rescale vectors) go through the
+    ``consts`` get-or-compute store — a persisted store (version-3
+    artifacts) serves them without touching the raw weight pages."""
+    cs = consts if consts is not None else PlanConsts()
     steps: List[PlanStep] = []
 
     for op in g.topo_ops():
@@ -64,46 +87,53 @@ def lower_quant_steps(qm: QuantizedModel, g: Graph, tiling: TilingResult,
             dw = k == "dwconv"
             in_qp = qm.qp(x.name)
             zp = int(np.atleast_1d(in_qp.zero_point)[0])
-            w_q = qm.qweights[op.inputs[1]]
-            # Accumulate in float64 through BLAS: every operand is an
-            # integer (|x - zp| <= 255, |w| <= 127, dot lengths << 2^35),
-            # so every product and partial sum is an exactly-
-            # representable integer < 2^53 — the result equals the
-            # interpreter's int32/int64 accumulation bit for bit,
-            # regardless of summation order, and dgemm vectorizes
-            # across the batch.  The zero point is folded into the bias
-            # ((x - zp)·W == x·W - zp·ΣW), and padding pads the *stored*
-            # int8 values with zp, so no full-size subtract pass runs
-            # per request.
-            if dw:
-                kerf = np.ascontiguousarray(
-                    np.transpose(w_q[:, :, :, 0], (1, 2, 0))
-                    .astype(np.float64).reshape(fh * fw, -1))
-                wsum = kerf.sum(axis=0)                 # (C,)
-                dot_len = fh * fw
-            else:
-                kerf = np.ascontiguousarray(
-                    w_q.astype(np.float64).reshape(w_q.shape[0], -1).T)
-                wsum = kerf.sum(axis=0)                 # (outC,)
-                dot_len = kerf.shape[0]
-            biasf = qm.qweights[op.inputs[2]].astype(np.float64) \
-                if len(op.inputs) > 2 else np.float64(0.0)
-            biasf = biasf - zp * wsum
-            # float32 is exact for integer accumulation while every
-            # partial sum stays below 2^24; short dots (depthwise taps,
-            # small-channel pointwise) qualify and run at half the
-            # memory bandwidth of float64.  |x - zp| <= 255, |w| <= 127.
-            max_bias = float(np.max(np.abs(np.atleast_1d(biasf))))
-            if dot_len * 255 * 127 + max_bias < 2.0 ** 24:
-                fdt = np.float32
-            else:
-                fdt = np.float64
-            kerf = kerf.astype(fdt)
-            biasf = np.asarray(biasf, dtype=fdt)
-            s_x = float(np.atleast_1d(in_qp.scale)[0])
-            s_w = np.atleast_1d(qm.qp(op.inputs[1]).scale) \
-                .astype(np.float32)
-            sc = s_x * s_w
+
+            def _conv_consts(op=op, dw=dw, fh=fh, fw=fw, zp=zp,
+                             in_qp=in_qp):
+                # Accumulate in float64 through BLAS: every operand is
+                # an integer (|x - zp| <= 255, |w| <= 127, dot lengths
+                # << 2^35), so every product and partial sum is an
+                # exactly-representable integer < 2^53 — the result
+                # equals the interpreter's int32/int64 accumulation bit
+                # for bit, regardless of summation order, and dgemm
+                # vectorizes across the batch.  The zero point is
+                # folded into the bias ((x - zp)·W == x·W - zp·ΣW), and
+                # padding pads the *stored* int8 values with zp, so no
+                # full-size subtract pass runs per request.
+                w_q = qm.qweights[op.inputs[1]]
+                if dw:
+                    kerf = np.ascontiguousarray(
+                        np.transpose(w_q[:, :, :, 0], (1, 2, 0))
+                        .astype(np.float64).reshape(fh * fw, -1))
+                    wsum = kerf.sum(axis=0)             # (C,)
+                    dot_len = fh * fw
+                else:
+                    kerf = np.ascontiguousarray(
+                        w_q.astype(np.float64).reshape(w_q.shape[0],
+                                                       -1).T)
+                    wsum = kerf.sum(axis=0)             # (outC,)
+                    dot_len = kerf.shape[0]
+                biasf = qm.qweights[op.inputs[2]].astype(np.float64) \
+                    if len(op.inputs) > 2 else np.float64(0.0)
+                biasf = biasf - zp * wsum
+                # float32 is exact for integer accumulation while every
+                # partial sum stays below 2^24; short dots (depthwise
+                # taps, small-channel pointwise) qualify and run at
+                # half the memory bandwidth of float64.
+                max_bias = float(np.max(np.abs(np.atleast_1d(biasf))))
+                if dot_len * 255 * 127 + max_bias < 2.0 ** 24:
+                    fdt = np.float32
+                else:
+                    fdt = np.float64
+                s_x = float(np.atleast_1d(in_qp.scale)[0])
+                s_w = np.atleast_1d(qm.qp(op.inputs[1]).scale) \
+                    .astype(np.float32)
+                return {"kerf": kerf.astype(fdt),
+                        "biasf": np.asarray(biasf, dtype=fdt),
+                        "sc": s_x * s_w}
+            got = cs.group(label, ("kerf", "biasf", "sc"), _conv_consts)
+            kerf, biasf, sc = got["kerf"], got["biasf"], got["sc"]
+            fdt = kerf.dtype
             act = a.get("act", "none")
             oh, ow = g.tensors[op.outputs[0]].shape[:2]
 
@@ -153,18 +183,9 @@ def lower_quant_steps(qm: QuantizedModel, g: Graph, tiling: TilingResult,
             xid = ids[x.name]
             in_qp = qm.qp(x.name)
             zp = int(np.atleast_1d(in_qp.zero_point)[0])
-            # float64 dgemm accumulation — exact for integer operands
-            # (see the conv kernel note)
-            wT = np.ascontiguousarray(
-                qm.qweights[op.inputs[1]][:, 0, 0, :]
-                .astype(np.float64).T)
-            biasf = qm.qweights[op.inputs[2]].astype(np.float64) \
-                if len(op.inputs) > 2 else np.float64(0.0)
-            biasf = biasf - zp * wT.sum(axis=0)   # zp folded (exact ints)
-            s_x = float(np.atleast_1d(in_qp.scale)[0])
-            s_w = np.atleast_1d(qm.qp(op.inputs[1]).scale) \
-                .astype(np.float32)
-            sc = s_x * s_w
+            got = cs.group(label, ("wT", "biasf", "sc"),
+                           lambda: _gemm_consts(qm, op, zp, in_qp))
+            wT, biasf, sc = got["wT"], got["biasf"], got["sc"]
             act = a.get("act", "none")
 
             def run(bufs, n, xid=xid, oid=oid, wT=wT,
@@ -316,18 +337,9 @@ def lower_quant_steps(qm: QuantizedModel, g: Graph, tiling: TilingResult,
             xid = ids[x.name]
             in_qp = qm.qp(x.name)
             zp = int(np.atleast_1d(in_qp.zero_point)[0])
-            # float64 dgemm accumulation over the token rows — exact for
-            # integer operands (see the conv kernel note); zp folded
-            wT = np.ascontiguousarray(
-                qm.qweights[op.inputs[1]][:, 0, 0, :]
-                .astype(np.float64).T)
-            biasf = qm.qweights[op.inputs[2]].astype(np.float64) \
-                if len(op.inputs) > 2 else np.float64(0.0)
-            biasf = biasf - zp * wT.sum(axis=0)
-            s_x = float(np.atleast_1d(in_qp.scale)[0])
-            s_w = np.atleast_1d(qm.qp(op.inputs[1]).scale) \
-                .astype(np.float32)
-            sc = s_x * s_w
+            got = cs.group(label, ("wT", "biasf", "sc"),
+                           lambda: _gemm_consts(qm, op, zp, in_qp))
+            wT, biasf, sc = got["wT"], got["biasf"], got["sc"]
             act = a.get("act", "none")
             s_len, wd = g.tensors[op.outputs[0]].shape[:2]
 

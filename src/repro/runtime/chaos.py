@@ -27,6 +27,14 @@ Injectable fault classes
 * **clock skew** — ``skew_clock(seconds)``: shifts the serving
   runtime's deadline clock (``now()``), expiring queued tickets the way
   an NTP step or a suspended VM does.
+* **worker murder** — ``kill_worker(wid, mode)`` /
+  ``oom_worker(wid)``: the next batch dispatched to that worker's
+  *process* (``repro.runtime.procpool.ProcPool``) dies mid-flight —
+  ``"kill"`` SIGKILLs from the parent mid-compute, ``"segv"`` trips a
+  child-side SIGSEGV crash trampoline, ``"oom"`` aborts the child with
+  the OOM-killed exit status.  ``worker_id=-1`` murders whichever
+  worker dispatches next.  Exercises crash detection, in-flight
+  re-dispatch and off-request-path respawn (zero ticket loss).
 
 Usage::
 
@@ -60,9 +68,10 @@ class Chaos:
         self._stalls: Dict[int, float] = {}       # worker id -> seconds
         self._plan_faults: Dict[str, list] = {}   # model -> [err, ...]
         self._artifact_faults = 0
+        self._kills: Dict[int, str] = {}          # worker id -> mode
         self._skew_s = 0.0
         self.injected = {"stalls": 0, "plan_faults": 0,
-                         "artifact_faults": 0}
+                         "artifact_faults": 0, "kills": 0}
 
     # -- arming (tests / benchmarks) ----------------------------------------
     def stall_worker(self, worker_id: int, seconds: float) -> None:
@@ -83,6 +92,21 @@ class Chaos:
         """The next ``times`` disk-tier artifact reads fail."""
         with self._lock:
             self._artifact_faults += int(times)
+
+    def kill_worker(self, worker_id: int, mode: str = "kill") -> None:
+        """Murder the worker *process* during its next dispatched
+        batch (one-shot).  ``mode``: ``"kill"`` = parent-side SIGKILL
+        mid-compute; ``"segv"`` = child-side SIGSEGV crash trampoline;
+        ``"oom"`` = child aborts with exit status 137.
+        ``worker_id=-1`` targets whichever worker dispatches next."""
+        if mode not in ("kill", "segv", "oom"):
+            raise ValueError(f"unknown kill mode {mode!r}")
+        with self._lock:
+            self._kills[int(worker_id)] = mode
+
+    def oom_worker(self, worker_id: int) -> None:
+        """The worker process aborts as if the OOM killer took it."""
+        self.kill_worker(worker_id, mode="oom")
 
     def skew_clock(self, seconds: float) -> None:
         """Shift the serving deadline clock by ``seconds`` (cumulative;
@@ -110,6 +134,17 @@ class Chaos:
             self.injected["plan_faults"] += 1
         raise err if err is not None else ChaosError(
             f"chaos: poisoned plan for {model!r}")
+
+    def maybe_kill(self, worker_id: int) -> Optional[str]:
+        """The kill mode armed for this worker's next batch (or for any
+        worker via the -1 wildcard), consuming the one-shot fault."""
+        with self._lock:
+            m = self._kills.pop(int(worker_id), None)
+            if m is None:
+                m = self._kills.pop(-1, None)
+            if m is not None:
+                self.injected["kills"] += 1
+            return m
 
     def check_artifact(self, path: str) -> None:
         """Raise ``ArtifactError`` if an artifact-read fault is armed."""

@@ -49,9 +49,25 @@ class FaultMonitor:
         self.step_times: Dict[int, List[float]] = {i: []
                                                    for i in range(n_hosts)}
         self.failed: set = set()
+        self.retired: set = set()
+
+    def register(self, host_id: int) -> None:
+        """Explicitly (re-)register a host: clears any tombstone and
+        starts a fresh heartbeat record.  Spawning a worker goes through
+        here, never through an implicit first ``beat()``."""
+        self.retired.discard(host_id)
+        self.beats[host_id] = Heartbeat(host_id)
+        self.step_times[host_id] = []
+        self.failed.discard(host_id)
 
     def beat(self, host_id: int, step: int,
              step_time_s: Optional[float] = None) -> None:
+        if host_id in self.retired:
+            # a recycled worker's final heartbeat can still be in flight
+            # when retire() runs; without the tombstone it would
+            # auto-register below and resurrect the dead entry, which
+            # the supervisor then detects (and recycles) forever
+            return
         hb = self.beats.get(host_id)
         if hb is None:
             # tolerate (and auto-register) hosts that joined after
@@ -70,11 +86,13 @@ class FaultMonitor:
         _trace.instant("host_failed", "fault", args={"host": host_id})
 
     def retire(self, host_id: int) -> None:
-        """Forget a host entirely (a recycled worker): it no longer
-        counts as dead, healthy or a straggler."""
+        """Forget a host (a recycled worker): it no longer counts as
+        dead, healthy or a straggler, and its id is tombstoned — late
+        beats are dropped until :meth:`register` re-admits the id."""
         self.beats.pop(host_id, None)
         self.step_times.pop(host_id, None)
         self.failed.discard(host_id)
+        self.retired.add(host_id)
         _trace.instant("host_retired", "fault", args={"host": host_id})
 
     def dead_hosts(self, now: Optional[float] = None) -> List[int]:

@@ -1,0 +1,684 @@
+"""Process-level fault isolation for the serving runtime.
+
+:class:`ProcPool` is :class:`~repro.runtime.serving.ServerPool` with the
+execution fault domain moved out of the parent: each worker id owns a
+real OS *process* that opens every registered model's ``.rpa`` artifact
+with ``mmap=True`` (weights map copy-on-write out of the page cache —
+one physical copy shared by all workers, zero-copy), lowers its own
+``ExecPlan`` arena, and serves batches over a length-prefixed pipe
+protocol.  A segfault-class fault, an OOM kill or a runaway kernel in
+one worker leaves every other worker — and the parent — serving.
+
+Wire protocol (parent <-> child, one duplex pipe per worker)
+------------------------------------------------------------
+
+Every message is one *frame*::
+
+    b"rpa1" | u32 header_len | header JSON | raw ndarray blobs
+
+The header carries the frame type plus an ``arrays`` manifest
+(name/dtype/shape per blob, in blob order); request frames thread the
+batch's ticket **trace ids** through so child-side spans attribute to
+the originating requests.  Frame types:
+
+== =========================================================
+``ready``  child finished loading its models (pid, model list)
+``hb``     child idle heartbeat (the *only* idle liveness signal)
+``run``    parent -> child: one stacked batch (+ trace ids)
+``res``    child -> parent: stacked outputs for a ``run``
+``err``    child -> parent: typed execution error for a ``run``
+``load``   parent -> child: register one more model artifact
+``crash``  parent -> child: die *now* (chaos trampoline: segv/oom)
+``spans``  round-trip: child exports its tracer ring for merging
+``close``  parent -> child: drain and exit; child answers ``bye``
+== =========================================================
+
+Crash-fault supervision
+-----------------------
+
+The parent extends the pool's heartbeat supervision with *real* process
+liveness: a worker is dead when its pipe EOFs or its exitcode is set
+(``_extra_dead_locked``), not only when beats go stale — and idle beats
+come exclusively from child ``hb`` frames (``_idle_beat`` is a no-op
+here), so a hung-but-alive child goes heartbeat-stale even while the
+parent-side dispatcher thread is healthy.  On death the dispatcher's
+in-flight ``remote_run`` fails with :class:`~repro.runtime.serving.
+WorkerCrashed`; the executor re-dispatches the batch to the survivors
+(never failing tickets — first-fulfillment-wins settles duplicates) and
+the supervisor respawns a replacement process *off the request path* (a
+launcher thread; dispatch gates on ``_worker_ready`` until the child
+reports ready).  Zero ticket loss under worker murder is pinned by
+``tests/test_robust.py`` and the ``proc_kill`` scenario of
+``benchmarks/robust_bench.py``.
+"""
+from __future__ import annotations
+
+import itertools
+import json
+import multiprocessing as mp
+import os
+import signal
+import struct
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..obs import trace as _trace
+from . import chaos as _chaos
+from .serving import ServerPool, ServingError, WorkerCrashed
+
+FRAME_MAGIC = b"rpa1"
+_U32 = struct.Struct("<I")
+
+
+class ProtocolError(ServingError):
+    """A pipe frame failed to parse (bad magic / truncated): the
+    endpoints have desynchronized and the worker must be recycled."""
+
+
+def _frame_shell(header: dict, metas: List[dict],
+                 payload: int) -> Tuple[bytearray, int]:
+    """Allocate a frame buffer with magic + JSON header written; returns
+    ``(frame, offset_of_first_blob)``."""
+    h = dict(header)
+    if metas:
+        h["arrays"] = metas
+    hb = json.dumps(h, separators=(",", ":")).encode()
+    frame = bytearray(8 + len(hb) + payload)
+    frame[0:4] = FRAME_MAGIC
+    _U32.pack_into(frame, 4, len(hb))
+    frame[8:8 + len(hb)] = hb
+    return frame, 8 + len(hb)
+
+
+def pack_frame(header: dict,
+               arrays: Optional[Dict[str, np.ndarray]] = None
+               ) -> bytearray:
+    """Serialize one frame: magic, u32 length-prefixed JSON header,
+    then each array's raw bytes (C-contiguous) in manifest order —
+    written straight into one preallocated buffer (per-array
+    ``tobytes`` + join would copy every payload twice; the saturated
+    1-core serving path feels that)."""
+    metas: List[dict] = []
+    blobs: List[np.ndarray] = []
+    total = 0
+    for name, arr in (arrays or {}).items():
+        a = np.asarray(arr)
+        if a.ndim and not a.flags.c_contiguous:
+            a = np.ascontiguousarray(a)   # would promote 0-d to (1,)
+        metas.append({"name": name, "dtype": str(a.dtype),
+                      "shape": list(a.shape)})
+        blobs.append(a)
+        total += a.nbytes
+    frame, off = _frame_shell(header, metas, total)
+    mv = memoryview(frame)
+    for a in blobs:
+        n = a.nbytes
+        if n:
+            mv[off:off + n] = a.data.cast("B") if a.ndim else a.tobytes()
+        off += n
+    return frame
+
+
+def pack_run_frame(header: dict, feeds: List[Dict[str, np.ndarray]]
+                   ) -> bytearray:
+    """Serialize a batch of per-request feeds as one stacked run frame,
+    stacking each input *directly into the wire buffer* (a separate
+    ``np.stack`` + ``pack_frame`` pass would copy the batch three
+    times).  The child unpacks it as ordinary stacked arrays."""
+    keys = list(feeds[0])
+    metas: List[dict] = []
+    rows: Dict[str, List[np.ndarray]] = {}
+    total = 0
+    for k in keys:
+        rs = []
+        for f in feeds:
+            a = np.asarray(f[k])
+            if a.ndim and not a.flags.c_contiguous:
+                a = np.ascontiguousarray(a)
+            rs.append(a)
+        rows[k] = rs
+        metas.append({"name": k, "dtype": str(rs[0].dtype),
+                      "shape": [len(rs)] + list(rs[0].shape)})
+        total += rs[0].nbytes * len(rs)
+    frame, off = _frame_shell(header, metas, total)
+    for k in keys:
+        for r in rows[k]:
+            n = r.nbytes
+            if n:
+                stacked = np.frombuffer(frame, r.dtype.base, r.size, off)
+                np.copyto(stacked, r.reshape(-1), casting="no")
+            off += n
+    return frame
+
+
+def unpack_frame(buf: bytes, copy: bool = True
+                 ) -> Tuple[dict, Dict[str, np.ndarray]]:
+    """Parse one frame back into (header, arrays); raises
+    :class:`ProtocolError` on any structural mismatch.
+
+    ``copy=False`` returns read-only views into ``buf`` (the views keep
+    it alive) — right for the parent's result path, where rows are
+    sliced per ticket anyway; the child copies so kernels get aligned,
+    writable activations."""
+    mv = memoryview(buf)
+    if len(mv) < 8 or bytes(mv[:4]) != FRAME_MAGIC:
+        raise ProtocolError("bad frame magic")
+    (hlen,) = _U32.unpack_from(mv, 4)
+    if 8 + hlen > len(mv):
+        raise ProtocolError(f"truncated header ({hlen} declared, "
+                            f"{len(mv) - 8} available)")
+    try:
+        header = json.loads(bytes(mv[8:8 + hlen]).decode())
+    except ValueError as e:
+        raise ProtocolError(f"unparseable header: {e}") from None
+    off = 8 + hlen
+    arrays: Dict[str, np.ndarray] = {}
+    for m in header.pop("arrays", ()):
+        dt = np.dtype(m["dtype"])
+        shape = tuple(int(s) for s in m["shape"])
+        n = int(np.prod(shape, dtype=np.int64)) * dt.itemsize
+        if off + n > len(mv):
+            raise ProtocolError(f"truncated blob {m['name']!r}")
+        arr = np.frombuffer(mv[off:off + n], dtype=dt).reshape(shape)
+        arrays[m["name"]] = arr.copy() if copy else arr
+        off += n
+    if off != len(mv):
+        raise ProtocolError(f"{len(mv) - off} trailing bytes")
+    return header, arrays
+
+
+# --------------------------------------------------------------------------
+# Child process
+# --------------------------------------------------------------------------
+
+
+def _worker_main(conn, wid: int, model_paths: Dict[str, str],
+                 hb_every: float, trace_capacity: int) -> None:
+    """Worker process entry: mmap-load the artifacts, report ready,
+    then serve ``run`` frames until ``close`` (heartbeating while
+    idle — a batch in progress is *silent*, which is exactly the
+    staleness signature the parent supervises)."""
+    from repro.api.compiled import CompiledModel
+
+    tracer = _trace.enable(capacity=trace_capacity) \
+        if trace_capacity else None
+    models: Dict[str, object] = {}
+    load_errors: Dict[str, str] = {}
+
+    def _load(name: str, path: str) -> None:
+        try:
+            models[name] = CompiledModel.load(path, mmap=True)
+            load_errors.pop(name, None)
+        except Exception as e:
+            load_errors[name] = f"{type(e).__name__}: {e}"
+
+    for name, path in model_paths.items():
+        _load(name, path)
+    conn.send_bytes(pack_frame({
+        "type": "ready", "wid": wid, "pid": os.getpid(),
+        "models": sorted(models), "errors": dict(load_errors)}))
+
+    seq = 0
+    while True:
+        try:
+            if not conn.poll(hb_every):
+                conn.send_bytes(pack_frame({"type": "hb", "seq": seq}))
+                continue
+            buf = conn.recv_bytes()
+        except (EOFError, OSError):
+            return
+        header, arrays = unpack_frame(buf)
+        kind = header.get("type")
+        if kind == "close":
+            try:
+                conn.send_bytes(pack_frame({"type": "bye"}))
+            except (BrokenPipeError, OSError):
+                pass
+            return
+        if kind == "crash":
+            # chaos trampoline: die the way real faults do, not via a
+            # Python exception the frame loop could catch
+            mode = header.get("mode", "oom")
+            if mode == "segv":
+                signal.signal(signal.SIGSEGV, signal.SIG_DFL)
+                os.kill(os.getpid(), signal.SIGSEGV)
+            os._exit(137)          # OOM-killed exit status
+        if kind == "load":
+            _load(header["model"], header["path"])
+            conn.send_bytes(pack_frame(
+                {"type": "loaded", "model": header["model"],
+                 "error": load_errors.get(header["model"])}))
+            continue
+        if kind == "spans":
+            doc = tracer.chrome_trace() if tracer is not None \
+                else {"traceEvents": []}
+            conn.send_bytes(pack_frame(
+                {"type": "spans", "req": header["req"],
+                 "epoch": tracer.epoch if tracer is not None else 0.0,
+                 "pid": os.getpid(), "doc": doc}))
+            continue
+        if kind != "run":
+            continue               # unknown frame: ignore, stay alive
+        req = header["req"]
+        name = header["model"]
+        n = int(header["n"])
+        ids = header.get("trace_ids") or []
+        seq += 1
+        t0 = time.monotonic()
+        try:
+            model = models.get(name)
+            if model is None:
+                raise RuntimeError(
+                    f"worker {wid}: model {name!r} unavailable"
+                    + (f" ({load_errors[name]})"
+                       if name in load_errors else ""))
+            out = model._run_plan_batch(arrays, n)
+            if tracer is not None:
+                tracer.complete(
+                    "proc_batch", "serving", t0,
+                    trace_id=(ids[0] if ids else None),
+                    args={"model": name, "n": n, "worker": wid,
+                          "trace_ids": ids})
+            conn.send_bytes(pack_frame(
+                {"type": "res", "req": req, "seq": seq}, out))
+        except Exception as e:
+            conn.send_bytes(pack_frame(
+                {"type": "err", "req": req, "seq": seq,
+                 "cls": type(e).__name__, "msg": str(e)}))
+
+
+def _rebuild_error(cls: str, msg: str) -> Exception:
+    """Reconstruct a child-side execution error as the closest typed
+    parent-side error (the session's retry/breaker ladder discriminates
+    on type: client errors are never retried, ``PlanError`` counts
+    against the breaker)."""
+    from repro.core.execplan import PlanError
+    table = {"PlanError": PlanError, "ValueError": ValueError,
+             "TypeError": TypeError, "KeyError": KeyError,
+             "RuntimeError": RuntimeError,
+             "ChaosError": _chaos.ChaosError,
+             "TransientChaosError": _chaos.TransientChaosError}
+    return table.get(cls, ServingError)(msg)
+
+
+# --------------------------------------------------------------------------
+# Parent side
+# --------------------------------------------------------------------------
+
+
+class _Proc:
+    """Parent-side handle for one worker process."""
+
+    __slots__ = ("wid", "proc", "conn", "reader", "ready", "dead",
+                 "exitcode", "pid", "send_lock", "models", "detail",
+                 "lanes")
+
+    def __init__(self, wid: int):
+        self.wid = wid
+        #: dispatch lanes (ServerPool worker ids) feeding this process
+        self.lanes = {wid}
+        self.proc = None
+        self.conn = None
+        self.reader: Optional[threading.Thread] = None
+        self.ready = threading.Event()
+        self.dead = False
+        self.exitcode: Optional[int] = None
+        self.pid: Optional[int] = None
+        self.send_lock = threading.Lock()
+        self.models: set = set()
+        self.detail = ""
+
+    def send(self, frame: bytes) -> None:
+        conn = self.conn
+        if conn is None or self.dead:
+            raise WorkerCrashed(self.wid, self.detail or "process gone")
+        with self.send_lock:
+            conn.send_bytes(frame)
+
+
+class ProcPool(ServerPool):
+    """:class:`ServerPool` whose workers are separate OS processes.
+
+    Dispatch, admission control, EDF/priority scheduling, heartbeat
+    supervision and recycling are all inherited — this subclass swaps
+    the execution transport (``remote_run`` over the pipe protocol) and
+    the liveness sources (child ``hb`` frames + exitcodes)."""
+
+    mode = "process"
+
+    def __init__(self, execute, *,
+                 model_paths: Optional[Dict[str, str]] = None,
+                 child_trace_capacity: int = 65536,
+                 lanes_per_proc: int = 2, **kw):
+        # subclass state first: the base __init__ spawns workers, which
+        # calls straight back into our overridden _spawn_locked
+        self._ctx = mp.get_context("spawn")
+        self._plock = threading.RLock()
+        self._procs: Dict[int, _Proc] = {}
+        self._model_paths: Dict[str, str] = dict(model_paths or {})
+        self._pending: Dict[int, tuple] = {}
+        self._req_ids = itertools.count(1)
+        self._boot_failures = 0    # consecutive died-before-ready spawns
+        self._child_trace_capacity = int(child_trace_capacity) \
+            if _trace.active() is not None else 0
+        #: dispatch lanes per child process.  One lane ping-pongs with
+        #: the child (send batch -> wait -> claim next), leaving the
+        #: child idle for the whole parent-side turnaround every batch;
+        #: a second lane keeps the pipe primed with the next batch so a
+        #: saturated child never waits on the parent (the fault-free
+        #: process-pool throughput gate in benchmarks.robust_bench).
+        self._lanes = max(1, int(lanes_per_proc))
+        #: lane wid -> its process (many lanes share one _Proc)
+        self._lane_proc: Dict[int, _Proc] = {}
+        kw["workers"] = int(kw.get("workers", 2)) * self._lanes
+        super().__init__(execute, **kw)
+
+    # -- model registry ----------------------------------------------------
+    def register_model(self, name: str, path: str) -> None:
+        """Hand one model's artifact to every worker (and to all future
+        spawns).  Children mmap it copy-on-write; the pipe is ordered,
+        so a batch submitted after this call never races the load."""
+        with self._plock:
+            self._model_paths[name] = path
+            procs = [p for p in self._procs.values()
+                     if p.conn is not None and not p.dead]
+        for p in procs:
+            try:
+                p.send(pack_frame({"type": "load", "model": name,
+                                   "path": path}))
+            except (WorkerCrashed, BrokenPipeError, OSError):
+                pass               # dying worker: its replacement spawns
+                                   # with the updated path snapshot
+
+    # -- spawning (off the request path) -----------------------------------
+    def _spawn_locked(self, wid: int) -> None:
+        with self._plock:
+            p = next((q for q in self._procs.values()
+                      if not q.dead and len(q.lanes) < self._lanes),
+                     None)
+            if p is not None:
+                # share an existing child process: a second dispatch
+                # lane keeps its pipe primed with the next batch
+                p.lanes.add(wid)
+                self._lane_proc[wid] = p
+            else:
+                p = _Proc(wid)
+                self._procs[wid] = p
+                self._lane_proc[wid] = p
+                threading.Thread(target=self._launch, args=(wid, p),
+                                 name=f"npu-proc-launch-{wid}",
+                                 daemon=True).start()
+        super()._spawn_locked(wid)
+
+    def _launch(self, wid: int, p: _Proc) -> None:
+        """Launcher thread: process spawn + artifact load take ~1s —
+        never on a dispatcher thread (dispatch gates on
+        ``_worker_ready`` and the supervisor beats booting workers)."""
+        boots = self._boot_failures
+        if boots:                  # crash-loop backoff: a child that dies
+            time.sleep(min(0.05 * (2 ** min(boots, 6)), 2.0))
+        try:                       # before ready must not spin respawns
+            with self._plock:
+                paths = dict(self._model_paths)
+                parent_conn, child_conn = self._ctx.Pipe(duplex=True)
+                p.conn = parent_conn
+            proc = self._ctx.Process(
+                target=_worker_main,
+                args=(child_conn, wid, paths,
+                      max(0.01, self.heartbeat_timeout_s / 4),
+                      self._child_trace_capacity),
+                name=f"npu-proc-{wid}", daemon=True)
+            proc.start()
+            child_conn.close()
+            p.proc = proc
+            p.reader = threading.Thread(
+                target=self._reader, args=(wid, p),
+                name=f"npu-proc-reader-{wid}", daemon=True)
+            p.reader.start()
+        except Exception as e:     # spawn failed: supervisor recycles
+            p.detail = repr(e)
+            self._mark_dead(p)
+
+    # -- per-process reader thread -----------------------------------------
+    def _reader(self, wid: int, p: _Proc) -> None:
+        """Demux one child's frames: heartbeats feed the FaultMonitor,
+        replies wake their pending ``remote_run``, EOF marks death."""
+        conn = p.conn
+        while True:
+            try:
+                buf = conn.recv_bytes()
+                header, arrays = unpack_frame(buf, copy=False)
+            except (EOFError, OSError):
+                break
+            except ProtocolError as e:
+                p.detail = str(e)  # desynchronized: recycle the worker
+                break
+            kind = header.get("type")
+            if kind == "hb":
+                seq = int(header.get("seq", 0))
+                for lane in tuple(p.lanes):
+                    self.monitor.beat(lane, seq)
+            elif kind == "ready":
+                p.pid = header.get("pid")
+                p.models = set(header.get("models", ()))
+                if header.get("errors"):
+                    p.detail = "; ".join(
+                        f"{n}: {e}"
+                        for n, e in header["errors"].items())
+                p.ready.set()
+                self._boot_failures = 0
+                for lane in tuple(p.lanes):
+                    self.monitor.beat(lane, 0)
+                _trace.instant("proc_ready", "fault",
+                               args={"worker": wid, "pid": p.pid})
+                with self._cv:
+                    self._cv.notify_all()
+            elif kind in ("res", "err", "spans"):
+                # any reply is liveness evidence: a saturated child is
+                # never idle long enough to emit hb frames
+                for lane in tuple(p.lanes):
+                    self.monitor.beat(lane, int(header.get("req", 0)))
+                with self._plock:
+                    slot = self._pending.pop(header["req"], None)
+                if slot is not None:
+                    ev, box = slot[0], slot[1]
+                    if kind == "res":
+                        box["out"] = arrays
+                    elif kind == "err":
+                        box["err"] = (header.get("cls", ""),
+                                      header.get("msg", ""))
+                    else:
+                        box["spans"] = (float(header.get("epoch", 0.0)),
+                                        header.get("doc") or
+                                        {"traceEvents": []})
+                    ev.set()
+            elif kind == "bye":
+                break
+            # "loaded" acks and unknown frames: nothing to do
+        self._mark_dead(p)
+
+    def _mark_dead(self, p: _Proc) -> None:
+        if p.dead:
+            return
+        p.dead = True
+        if not p.ready.is_set():
+            self._boot_failures += 1
+        if p.proc is not None:
+            p.proc.join(timeout=0.5)
+            p.exitcode = p.proc.exitcode
+        with self._plock:
+            stale = [k for k, s in self._pending.items() if s[2] is p]
+            slots = [self._pending.pop(k) for k in stale]
+        for ev, box, _ in slots:
+            box["crash"] = True
+            ev.set()
+        _trace.instant("proc_dead", "fault",
+                       args={"worker": p.wid, "pid": p.pid,
+                             "exitcode": p.exitcode})
+        with self._cv:
+            self._cv.notify_all()
+
+    # -- remote execution ---------------------------------------------------
+    def remote_run(self, wid: int, name: str, feeds: List[dict],
+                   trace_ids: Optional[List[int]] = None) -> List[dict]:
+        """Stack ``feeds``, ship them to worker ``wid``'s process, and
+        unstack the reply.  Raises :class:`WorkerCrashed` if the process
+        dies with the batch in flight (the executor re-dispatches) and
+        rebuilds typed child-side errors otherwise."""
+        p = self._lane_proc.get(wid)
+        if p is None or p.dead or not p.ready.is_set():
+            raise WorkerCrashed(wid, (p.detail if p else "")
+                                or "no live process")
+        c = _chaos.active()
+        kill_mode = c.maybe_kill(wid) if c is not None else None
+        req = next(self._req_ids)
+        ev = threading.Event()
+        box: dict = {}
+        with self._plock:
+            if p.dead:
+                raise WorkerCrashed(wid, p.detail or "process died")
+            self._pending[req] = (ev, box, p)
+        try:
+            if kill_mode in ("segv", "oom"):
+                # crash trampoline: the child dies on this frame, the
+                # run frame behind it is lost in the pipe — a faithful
+                # mid-flight crash
+                p.send(pack_frame({"type": "crash", "mode": kill_mode}))
+            elif kill_mode == "kill":
+                # SIGKILL with the batch claimed and in flight: no
+                # goodbye frame, the parent only ever sees pipe EOF
+                if p.proc is not None:
+                    p.proc.kill()
+                    p.proc.join(0.1)
+            p.send(pack_run_frame(
+                {"type": "run", "req": req, "model": name,
+                 "n": len(feeds), "trace_ids": list(trace_ids or ())},
+                feeds))
+        except (WorkerCrashed, BrokenPipeError, OSError) as e:
+            with self._plock:
+                self._pending.pop(req, None)
+            # a failed send is definitive: mark the worker dead *now* so
+            # its dispatcher thread stops claiming (waiting for the
+            # reader's EOF would let it crash-loop through the queue)
+            self._mark_dead(p)
+            raise WorkerCrashed(wid, p.detail or repr(e)) from None
+        # the reader sets ``ev`` on every outcome — result, child error,
+        # pipe EOF (_mark_dead) and pool close (close kills the child,
+        # EOF follows).  The long-timeout re-check is pure paranoia; a
+        # short poll here costs real throughput (each timeout wake
+        # contends the global pool lock, ~10 extra wakeups per batch
+        # across the lanes on a saturated 1-core box)
+        while not ev.wait(1.0):
+            if p.dead or box:
+                break
+            if not self._running:
+                with self._plock:
+                    self._pending.pop(req, None)
+                raise WorkerCrashed(wid, "pool closed")
+        if "out" in box:
+            out = box["out"]
+            return [{k: v[i] for k, v in out.items()}
+                    for i in range(len(feeds))]
+        if "err" in box:
+            raise _rebuild_error(*box["err"])
+        raise WorkerCrashed(
+            wid, p.detail or (f"exitcode {p.exitcode}"
+                              if p.exitcode is not None else "pipe EOF"))
+
+    # -- ServerPool hooks ---------------------------------------------------
+    def _worker_ready(self, wid: int) -> bool:
+        p = self._lane_proc.get(wid)
+        return (p is not None and p.ready.is_set() and not p.dead)
+
+    def _idle_beat(self, wid: int, seq: int) -> None:
+        """No parent-side idle beats: the child's ``hb`` frames are the
+        only idle liveness signal, so a hung child goes stale even
+        while its dispatcher thread spins healthily."""
+
+    def _extra_dead_locked(self) -> List[int]:
+        dead = []
+        for wid, p in list(self._lane_proc.items()):
+            if p.dead:
+                dead.append(wid)
+            elif p.proc is not None and p.proc.exitcode is not None:
+                dead.append(wid)
+        return dead
+
+    def _on_recycle_locked(self, wid: int) -> None:
+        p = self._lane_proc.pop(wid, None)
+        if p is None:
+            return
+        p.lanes.discard(wid)
+        try:
+            if p.proc is not None and p.proc.is_alive():
+                p.proc.kill()
+        except Exception:
+            pass
+        try:
+            if p.conn is not None:
+                p.conn.close()     # reader EOFs -> _mark_dead -> pending
+        except Exception:          # remote_runs fail with WorkerCrashed
+            pass
+
+    def _on_close(self) -> None:
+        procs = list(self._procs.values())
+        for p in procs:
+            if p.dead or p.conn is None:
+                continue
+            try:
+                p.send(pack_frame({"type": "close"}))
+            except (WorkerCrashed, BrokenPipeError, OSError):
+                pass
+        deadline = time.monotonic() + 1.0
+        for p in procs:
+            if p.proc is None:
+                continue
+            p.proc.join(max(0.0, deadline - time.monotonic()))
+            if p.proc.is_alive():
+                p.proc.kill()
+                p.proc.join(0.5)
+            if p.exitcode is None:
+                p.exitcode = p.proc.exitcode
+
+    # -- observability ------------------------------------------------------
+    def collect_child_traces(self, timeout: float = 2.0
+                             ) -> List[Tuple[float, dict]]:
+        """Pull every live child's tracer ring: a list of
+        ``(child_epoch, chrome_trace_doc)`` pairs ready for
+        :func:`repro.obs.trace.merge_chrome_traces`."""
+        out: List[Tuple[float, dict]] = []
+        for wid, p in sorted(self._procs.items()):
+            if p.dead or not p.ready.is_set():
+                continue
+            req = next(self._req_ids)
+            ev = threading.Event()
+            box: dict = {}
+            with self._plock:
+                self._pending[req] = (ev, box, p)
+            try:
+                p.send(pack_frame({"type": "spans", "req": req}))
+            except (WorkerCrashed, BrokenPipeError, OSError):
+                with self._plock:
+                    self._pending.pop(req, None)
+                continue
+            if ev.wait(timeout) and "spans" in box:
+                out.append(box["spans"])
+            else:
+                with self._plock:
+                    self._pending.pop(req, None)
+        return out
+
+    def worker_health(self) -> Dict[int, Dict[str, object]]:
+        out = super().worker_health()
+        for wid, h in out.items():
+            p = self._lane_proc.get(wid)
+            if p is None:
+                continue
+            h["pid"] = p.pid
+            h["ready"] = p.ready.is_set()
+            h["exitcode"] = p.exitcode if p.exitcode is not None else (
+                p.proc.exitcode if p.proc is not None else None)
+        return out

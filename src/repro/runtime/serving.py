@@ -34,10 +34,10 @@ Fault injection for all of the above lives in
 """
 from __future__ import annotations
 
+import heapq
 import math
 import threading
 import time
-from collections import deque
 from typing import Callable, Dict, List, Optional, Tuple
 
 from ..obs import trace as _trace
@@ -82,6 +82,18 @@ class DeadlineExceeded(ServingError):
 class WorkerLost(ServingError):
     """The session shut down (or a worker died unrecoverably) with this
     request still queued — the terminal error of a drained ticket."""
+
+
+class WorkerCrashed(ServingError):
+    """A worker *process* died (SIGKILL/SIGSEGV/OOM) with this batch in
+    flight.  Never a terminal ticket error: the executor catches it and
+    re-dispatches the batch to a surviving worker (first-fulfillment-wins
+    tickets settle any duplicated work)."""
+
+    def __init__(self, worker: int, detail: str = ""):
+        self.worker = int(worker)
+        super().__init__(f"worker {worker} crashed"
+                         + (f": {detail}" if detail else ""))
 
 
 class FlushError(ServingError):
@@ -296,8 +308,18 @@ class ServerPool:
     ``execute(name, entries, worker_id)`` is the session's robust batch
     executor: it must fulfill or fail every ticket in ``entries`` and
     never raise (the pool still backstops it).  The pool owns admission
-    control, deadline-driven dispatch, heartbeat-based failure
-    detection, in-flight re-dispatch and worker recycling."""
+    control, SLO-aware dispatch, heartbeat-based failure detection,
+    in-flight re-dispatch and worker recycling.
+
+    **Dispatch policy** (SLO-aware, not FIFO): within a model, queued
+    entries drain earliest-deadline-first (deadline-less entries rank
+    last, in submission order); across models, a due batch from a
+    higher ``set_priority()`` class always dispatches before a
+    lower one.  Shedding prefers low-priority / least-urgent work: a
+    full queue evicts its *latest*-deadline entry for an
+    earlier-deadline arrival, and a full pool (``max_queue_total``)
+    evicts from the lowest-priority backlogged model before shedding a
+    higher-priority arrival."""
 
     #: dispatch estimate before a model has served enough batches for a
     #: meaningful p99 (and the admission-control retry-hint fallback)
@@ -306,9 +328,13 @@ class ServerPool:
     MIN_EST_SAMPLES = 4
     #: recompute the memoized p99 after this many new samples
     EST_REFRESH = 16
+    #: worker fault domain ("thread" here; "process" in
+    #: :class:`repro.runtime.procpool.ProcPool`)
+    mode = "thread"
 
     def __init__(self, execute: Callable, *, workers: int = 2,
                  max_batch: int = 8, max_queue: int = 64,
+                 max_queue_total: Optional[int] = None,
                  linger_ms: float = 2.0,
                  heartbeat_timeout_s: float = 0.5,
                  straggler_backup_after_s: Optional[float] = None,
@@ -316,12 +342,14 @@ class ServerPool:
         self._execute = execute
         self.max_batch = int(max_batch)
         self.max_queue = int(max_queue)
+        self.max_queue_total = (None if max_queue_total is None
+                                else int(max_queue_total))
         self.linger_s = float(linger_ms) / 1e3
         self.heartbeat_timeout_s = float(heartbeat_timeout_s)
         self.backup_after_s = (straggler_backup_after_s
                                if straggler_backup_after_s is not None
                                else 4 * self.heartbeat_timeout_s)
-        self.monitor = FaultMonitor(n_hosts=workers,
+        self.monitor = FaultMonitor(n_hosts=0,
                                     timeout_s=heartbeat_timeout_s)
         self.dispatcher = BackupDispatcher(self.monitor)
         self.registry = registry if registry is not None \
@@ -340,14 +368,19 @@ class ServerPool:
         self._est_memo: Dict[str, Tuple[int, float]] = {}
 
         self._cv = threading.Condition()
-        self._queues: Dict[str, deque] = {}
+        #: name -> EDF min-heap of (deadline_key, seq, feed, ticket, enq)
+        self._queues: Dict[str, List[tuple]] = {}
+        self.priorities: Dict[str, int] = {}
         self._inflight: Dict[int, _InFlight] = {}
         self._workers: Dict[int, _Worker] = {}
         self._running = True
         self._next_wid = workers
         self._seq = 0
+        self._enq_seq = 0        # submission order within a deadline class
+        self._requeue_seq = 0    # negative: re-dispatched work goes first
         self.counters = {"dispatched_batches": 0, "dispatched_requests": 0,
                          "shed": 0, "deadline_misses": 0,
+                         "priority_evictions": 0,
                          "redispatched_batches": 0, "recycled_workers": 0,
                          "speculative_backups": 0}
         self.deadline_misses: Dict[str, int] = {}
@@ -358,6 +391,12 @@ class ServerPool:
         self._supervisor = threading.Thread(
             target=self._supervise, name="npu-pool-supervisor", daemon=True)
         self._supervisor.start()
+
+    def set_priority(self, name: str, priority: int) -> None:
+        """Assign the model's dispatch priority class (default 0;
+        higher dispatches first and is preferred when shedding)."""
+        with self._cv:
+            self.priorities[name] = int(priority)
 
     # -- dispatch estimate (p99 of served batches) --------------------------
     def _dispatch_est_ms(self, name: str, p: float = 99.0) -> float:
@@ -378,26 +417,98 @@ class ServerPool:
         return est
 
     # -- admission ----------------------------------------------------------
+    @staticmethod
+    def _dl_key(ticket: Ticket) -> float:
+        return ticket.deadline if ticket.deadline is not None else math.inf
+
+    def _push_locked(self, name: str, feed, ticket: Ticket,
+                     requeue: bool = False) -> None:
+        q = self._queues.setdefault(name, [])
+        if requeue:
+            # re-dispatched work is the pool's oldest: negative seq ranks
+            # it ahead of every queued entry in the same deadline class
+            self._requeue_seq -= 1
+            seq = self._requeue_seq
+        else:
+            self._enq_seq += 1
+            seq = self._enq_seq
+        heapq.heappush(q, (self._dl_key(ticket), seq, feed, ticket,
+                           _chaos.now()))
+
+    def _requeue_locked(self, name: str, entries) -> int:
+        """Push a failed/straggling batch's still-live entries back for
+        another worker (first-fulfillment-wins settles duplicates)."""
+        live = 0
+        for feed, ticket in entries:
+            if ticket.done:
+                continue
+            self._push_locked(name, feed, ticket, requeue=True)
+            live += 1
+        if live:
+            self._cv.notify_all()
+        return live
+
+    def _evict_locked(self, name: str) -> bool:
+        """Evict the least-urgent (latest-deadline, newest) entry of the
+        model's queue to admit more urgent work; False if empty."""
+        q = self._queues.get(name)
+        if not q:
+            return False
+        victim = max(q, key=lambda e: (e[0], e[1]))
+        q.remove(victim)
+        heapq.heapify(q)
+        _, _, _, ticket, _ = victim
+        self.counters["shed"] += 1
+        self.counters["priority_evictions"] += 1
+        self.shed[name] = self.shed.get(name, 0) + 1
+        _trace.instant("priority_eviction", "serving",
+                       trace_id=ticket.trace_id,
+                       args={"model": name, "depth": len(q)})
+        ticket._fail(Overloaded(name, len(q), self._retry_hint(name)))
+        return True
+
+    def _retry_hint(self, name: str) -> float:
+        # retry hint from the typical (p50) batch time — the tail
+        # estimate would over-back-off healthy clients
+        q = self._queues.get(name, ())
+        h = self._batch_ms.labels(model=name)
+        est = h.percentile(50) \
+            if h.count >= self.MIN_EST_SAMPLES else 10.0
+        return max(1.0, est * (len(q) / max(1, self.max_batch)))
+
     def submit(self, name: str, feed, ticket: Ticket) -> None:
         with self._cv:
             if not self._running:
                 raise ServingError("pool is closed")
-            q = self._queues.setdefault(name, deque())
+            prio = self.priorities.get(name, 0)
+            q = self._queues.setdefault(name, [])
+            if self.max_queue_total is not None and \
+                    sum(len(x) for x in self._queues.values()) >= \
+                    self.max_queue_total and len(q) < self.max_queue:
+                # pool-wide saturation: prefer shedding a lower-priority
+                # model's least-urgent entry over this arrival
+                victims = sorted(
+                    (n for n, x in self._queues.items()
+                     if x and self.priorities.get(n, 0) < prio),
+                    key=lambda n: self.priorities.get(n, 0))
+                if not (victims and self._evict_locked(victims[0])):
+                    self._shed_locked(name, ticket, len(q))
             if len(q) >= self.max_queue:
-                self.counters["shed"] += 1
-                self.shed[name] = self.shed.get(name, 0) + 1
-                # retry hint from the typical (p50) batch time — the
-                # tail estimate would over-back-off healthy clients
-                h = self._batch_ms.labels(model=name)
-                est = h.percentile(50) \
-                    if h.count >= self.MIN_EST_SAMPLES else 10.0
-                retry = max(1.0, est * (len(q) / max(1, self.max_batch)))
-                _trace.instant("shed", "serving",
-                               trace_id=ticket.trace_id,
-                               args={"model": name, "depth": len(q)})
-                raise Overloaded(name, len(q), retry)
-            q.append((feed, ticket, _chaos.now()))
+                # model queue full: an earlier-deadline arrival evicts
+                # the queue's latest-deadline entry; anything else sheds
+                worst = max(q, key=lambda e: (e[0], e[1]))
+                if not (self._dl_key(ticket) < worst[0]
+                        and self._evict_locked(name)):
+                    self._shed_locked(name, ticket, len(q))
+            self._push_locked(name, feed, ticket)
             self._cv.notify()
+
+    def _shed_locked(self, name: str, ticket: Ticket, depth: int):
+        self.counters["shed"] += 1
+        self.shed[name] = self.shed.get(name, 0) + 1
+        _trace.instant("shed", "serving", trace_id=ticket.trace_id,
+                       args={"model": name, "depth": depth})
+        raise Overloaded(name, depth, self._retry_hint(name))
 
     def queue_depth(self, name: Optional[str] = None) -> int:
         with self._cv:
@@ -420,30 +531,38 @@ class ServerPool:
                       ) -> Tuple[Optional[Tuple[str, List]], float]:
         """Pick the most urgent dispatchable model batch, or the time
         until one becomes due.  A batch is due when it is full, when its
-        head entry has lingered ``linger_ms``, or when its earliest
-        deadline minus the model's recent batch time arrives."""
-        best_name, best_due, next_due = None, math.inf, math.inf
+        oldest entry has lingered ``linger_ms``, or when its earliest
+        deadline minus the model's recent batch time arrives.  Among
+        due models the highest priority class wins, breaking ties by
+        urgency; entries pop in EDF order."""
+        best, next_due = None, math.inf
         for name, q in self._queues.items():
             if not q:
                 continue
-            _, ticket, enq = q[0]
-            due = enq + self.linger_s
-            if ticket.deadline is not None:
+            # q[0] is the EDF head (earliest deadline); linger is keyed
+            # to the *oldest* entry so deadline-less work still flushes
+            due = min(e[4] for e in q) + self.linger_s
+            head_dl = q[0][0]
+            if math.isfinite(head_dl):
                 est = self._dispatch_est_ms(name) / 1e3
-                due = min(due, ticket.deadline - est)
+                due = min(due, head_dl - est)
             if len(q) >= self.max_batch:
                 due = now
             if due <= now:
-                if due < best_due:
-                    best_name, best_due = name, due
+                cand = (-self.priorities.get(name, 0), due, name)
+                if best is None or cand < best:
+                    best = cand
             else:
                 next_due = min(next_due, due)
-        if best_name is None:
+        if best is None:
             return None, next_due
+        best_name = best[2]
         q = self._queues[best_name]
         entries = []
         while q and len(entries) < self.max_batch:
-            feed, ticket, _ = q.popleft()
+            _, _, feed, ticket, _ = heapq.heappop(q)
+            if ticket.done:
+                continue           # settled elsewhere (requeue duplicate)
             if ticket.deadline is not None and now > ticket.deadline:
                 self._miss_locked(best_name, ticket, now)
                 continue
@@ -458,8 +577,20 @@ class ServerPool:
         w.thread = threading.Thread(target=self._worker_loop, args=(wid,),
                                     name=f"npu-worker-{wid}", daemon=True)
         self._workers[wid] = w
-        self.monitor.beat(wid, 0)          # registers replacement ids too
+        self.monitor.register(wid)         # explicit: clears tombstones
         w.thread.start()
+
+    def _worker_ready(self, wid: int) -> bool:
+        """Whether this worker may claim work (process pools gate on
+        the child process having finished loading its models)."""
+        return True
+
+    def _idle_beat(self, wid: int, seq: int) -> None:
+        """Heartbeat for an idle worker.  Thread pools beat from the
+        dispatcher thread itself; process pools leave this to the child
+        process's heartbeat frames, so a hung child goes stale even
+        while its parent-side dispatcher is healthy."""
+        self.monitor.beat(wid, seq)
 
     def _worker_loop(self, wid: int) -> None:
         beat_every = max(0.01, self.heartbeat_timeout_s / 4)
@@ -469,9 +600,15 @@ class ServerPool:
                 if w is None or w.abandoned or not self._running:
                     return
                 now = _chaos.now()
+                if not self._worker_ready(wid):
+                    # still booting (process spawn/model load): beat so
+                    # the supervisor doesn't recycle a healthy boot
+                    self.monitor.beat(wid, w.seq)
+                    self._cv.wait(beat_every)
+                    continue
                 claim, next_due = self._claim_locked(now)
                 if claim is None:
-                    self.monitor.beat(wid, w.seq)
+                    self._idle_beat(wid, w.seq)
                     wait = beat_every if next_due is math.inf else \
                         min(beat_every, max(0.0, next_due - now))
                     self._cv.wait(wait)
@@ -520,6 +657,11 @@ class ServerPool:
                 self._cv.notify_all()
 
     # -- supervision: detect, re-dispatch, recycle --------------------------
+    def _extra_dead_locked(self) -> List[int]:
+        """Extra dead-worker ids beyond heartbeat staleness (process
+        pools report child exitcodes here)."""
+        return []
+
     def _supervise(self) -> None:
         interval = max(0.02, self.heartbeat_timeout_s / 4)
         while True:
@@ -527,10 +669,13 @@ class ServerPool:
             with self._cv:
                 if not self._running:
                     return
-                dead = [wid for wid in self.monitor.dead_hosts()
+                dead = {wid for wid in self.monitor.dead_hosts()
                         if wid in self._workers
-                        and not self._workers[wid].abandoned]
-                for wid in dead:
+                        and not self._workers[wid].abandoned}
+                dead.update(wid for wid in self._extra_dead_locked()
+                            if wid in self._workers
+                            and not self._workers[wid].abandoned)
+                for wid in sorted(dead):
                     self._recycle_locked(wid)
                 # stragglers: speculative backup (first result wins)
                 stragglers = set(self.monitor.stragglers())
@@ -542,33 +687,32 @@ class ServerPool:
                             now - inf.started < 2 * self.backup_after_s):
                         continue
                     inf.backed_up = True
-                    live = [(f, t) for f, t in inf.entries if not t.done]
-                    q = self._queues.setdefault(inf.name, deque())
-                    q.extendleft((f, t, _chaos.now())
-                                 for f, t in reversed(live))
+                    live = self._requeue_locked(inf.name, inf.entries)
                     self.dispatcher.backups_issued.append(
                         (inf.seq, wid, -1))
                     self.counters["speculative_backups"] += 1
                     _trace.instant("speculative_backup", "fault",
                                    args={"model": inf.name,
                                          "worker": wid,
-                                         "live": len(live)})
+                                         "live": live})
                     self._cv.notify_all()
 
+    def _on_recycle_locked(self, wid: int) -> None:
+        """Subclass hook: tear down the recycled worker's process/pipe
+        resources (called under the pool lock, old worker abandoned)."""
+
     def _recycle_locked(self, wid: int) -> None:
-        """A worker stopped heartbeating mid-batch: re-dispatch its
-        in-flight work to the healthy workers, abandon the thread (it
-        drops its duplicate results if it ever wakes) and spawn a
-        replacement."""
+        """A worker stopped heartbeating mid-batch (or its process
+        died): re-dispatch its in-flight work to the healthy workers,
+        abandon the thread (it drops its duplicate results if it ever
+        wakes) and spawn a replacement."""
         w = self._workers[wid]
         w.abandoned = True
         inf = self._inflight.pop(wid, None)
         new_wid = self._next_wid
         self._next_wid += 1
         if inf is not None:
-            live = [(f, t) for f, t in inf.entries if not t.done]
-            q = self._queues.setdefault(inf.name, deque())
-            q.extendleft((f, t, _chaos.now()) for f, t in reversed(live))
+            self._requeue_locked(inf.name, inf.entries)
             self.counters["redispatched_batches"] += 1
             self.dispatcher.backups_issued.append((inf.seq, wid, new_wid))
         self.monitor.retire(wid)
@@ -576,8 +720,24 @@ class ServerPool:
         _trace.instant("worker_recycled", "fault",
                        args={"worker": wid, "replacement": new_wid,
                              "redispatched": inf is not None})
+        self._on_recycle_locked(wid)
         self._spawn_locked(new_wid)
         self._cv.notify_all()
+
+    def redispatch(self, name: str, entries, wid: int) -> None:
+        """A dispatched batch lost its worker (:class:`WorkerCrashed`):
+        hand the still-live entries to the survivors — or, if the pool
+        is shutting down, terminate them with a typed error."""
+        with self._cv:
+            if self._running:
+                if self._requeue_locked(name, entries):
+                    self.counters["redispatched_batches"] += 1
+                    _trace.instant("crash_redispatch", "fault",
+                                   args={"model": name, "worker": wid})
+                return
+        for _, ticket in entries:
+            ticket._fail(WorkerLost(
+                f"{name}: worker {wid} lost during shutdown"))
 
     # -- draining / shutdown ------------------------------------------------
     def drain(self, names=None, timeout: Optional[float] = None) -> bool:
@@ -596,18 +756,23 @@ class ServerPool:
         with self._cv:
             return self._cv.wait_for(clear, timeout)
 
+    def _on_close(self) -> None:
+        """Subclass hook: tear down worker processes (called after the
+        pool stops, before the dispatcher threads are joined)."""
+
     def close(self, timeout: float = 5.0) -> None:
         with self._cv:
             self._running = False
             leftovers = []
             for name, q in self._queues.items():
                 while q:
-                    feed, ticket, _ = q.popleft()
+                    _, _, feed, ticket, _ = heapq.heappop(q)
                     leftovers.append((name, ticket))
             self._cv.notify_all()
         for name, ticket in leftovers:
             ticket._fail(WorkerLost(f"{name}: session closed with the "
                                     f"request still queued"))
+        self._on_close()
         deadline = time.monotonic() + timeout
         for w in list(self._workers.values()):
             if w.thread is not None and not w.abandoned:

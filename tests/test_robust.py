@@ -16,10 +16,12 @@ import pytest
 import repro.api as api
 import repro.runtime.chaos as chaos
 from repro.api import DeadlineExceeded, FlushError, Overloaded, WorkerLost
+from repro.api.compiled import CompiledModel
 from repro.core import program_cache_clear, program_cache_configure, \
     program_cache_info
 from repro.runtime.fault import FaultMonitor
-from repro.runtime.serving import CircuitBreaker, LatencyHistogram
+from repro.runtime.serving import CircuitBreaker, \
+    LatencyHistogram, ServerPool, Ticket
 
 from test_execplan import random_graph, _inputs
 
@@ -235,26 +237,37 @@ def test_breaker_trips_then_serves_oracle_then_recovers():
         assert st["breaker"]["state"] == "open"
         assert st["breaker_trips"] == 1 and st["plan_failures"] == 2
 
+        # keep the plan poisoned through the first *background* probe:
+        # it must fail, stay open and re-arm itself (recovery no longer
+        # piggybacks on request batches)
+        c.poison_plan("m0", times=1)
+
         # open: requests degrade to the interpretive oracle — correct
         t = sess.submit("m0", x)
         _check_output(sess, "m0", t.result(), x)
-        assert sess.stats()["models"]["m0"]["degraded_requests"] == 1
+        assert sess.stats()["models"]["m0"]["degraded_requests"] >= 1
 
-        # keep the plan poisoned: the recovery probe must fail and
-        # re-open the breaker rather than half-heal
-        time.sleep(0.15)
-        c.poison_plan("m0", times=1)
-        t = sess.submit("m0", x)
-        _check_output(sess, "m0", t.result(), x)
-        st = sess.stats()["models"]["m0"]
+        deadline = time.monotonic() + 5.0
+        while time.monotonic() < deadline:
+            st = sess.stats()["models"]["m0"]
+            if st["failed_recoveries"] >= 1:
+                break
+            time.sleep(0.02)
         assert st["failed_recoveries"] == 1
         assert st["breaker"]["state"] == "open"
 
-    time.sleep(0.15)                         # chaos gone: probe heals
+    # chaos gone: the re-armed probe heals the breaker with no request
+    # traffic at all (an idle model recovers too)
+    deadline = time.monotonic() + 5.0
+    while time.monotonic() < deadline:
+        st = sess.stats()["models"]["m0"]
+        if st["breaker"]["state"] == "closed":
+            break
+        time.sleep(0.02)
+    assert st["breaker"]["state"] == "closed" and st["recoveries"] == 1
     t = sess.submit("m0", x)
     _check_output(sess, "m0", t.result(), x)
     st = sess.stats()["models"]["m0"]
-    assert st["breaker"]["state"] == "closed" and st["recoveries"] == 1
     assert st["latency"]["count"] > 0 and st["latency"]["p99_ms"] > 0
 
 
@@ -458,3 +471,268 @@ def test_concurrent_submitters_one_pool():
     assert not errs, errs
     assert len(done) > 0
     sess.close()
+
+
+# --------------------------------------------------------------------------
+# fault monitor: retire tombstones
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_fault_monitor_retire_tombstone_drops_late_beats():
+    """A recycled worker's id is tombstoned: its straggler beats are
+    dropped (no zombie resurrection in the registry), and only an
+    explicit register() — the replacement spawn — re-admits the id."""
+    mon = FaultMonitor(n_hosts=0, timeout_s=1.0)
+    mon.register(3)
+    mon.beat(3, step=0, step_time_s=0.1)
+    mon.retire(3)
+    mon.beat(3, step=1, step_time_s=0.1)     # late beat from the corpse
+    assert 3 not in mon.beats                # swallowed, not re-admitted
+    assert mon.dead_hosts(now=99.0) == []    # and never reported dead
+    mon.register(3)                          # replacement reuses the id
+    mon.beat(3, step=2, step_time_s=0.1)
+    assert 3 in mon.beats
+
+
+# --------------------------------------------------------------------------
+# EDF dispatch + priority classes (queue unit tests, workers=0)
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_edf_pop_order_within_model():
+    """Within one model's queue, batches pop earliest-deadline-first;
+    deadline-less work rides behind every dated entry."""
+    pool = ServerPool(lambda name, entries: None, workers=0,
+                      max_batch=4, linger_ms=0.0)
+    try:
+        now = chaos.now()
+        for label, dl in (("A", now + 200.0), ("B", now + 50.0),
+                          ("C", None), ("D", now + 100.0)):
+            pool.submit("m0", label, Ticket(None, "m0", dl))
+        with pool._cv:
+            claim, _ = pool._claim_locked(chaos.now())
+        assert claim is not None
+        name, entries = claim
+        assert name == "m0"
+        assert [feed for feed, _ in entries] == ["B", "D", "A", "C"]
+    finally:
+        pool.close()
+
+
+@pytest.mark.fast
+def test_priority_class_dispatch_across_models():
+    """Across models, the higher priority class dispatches first even
+    when the lower-priority queue has waited longer."""
+    pool = ServerPool(lambda name, entries: None, workers=0,
+                      max_batch=4, linger_ms=0.0)
+    try:
+        pool.set_priority("hi", 1)
+        for i in range(2):
+            pool.submit("lo", f"lo{i}", Ticket(None, "lo"))
+        for i in range(2):
+            pool.submit("hi", f"hi{i}", Ticket(None, "hi"))
+        time.sleep(0.002)                    # step past the zero linger
+        with pool._cv:
+            first, _ = pool._claim_locked(chaos.now())
+            second, _ = pool._claim_locked(chaos.now())
+        assert first is not None and first[0] == "hi"
+        assert second is not None and second[0] == "lo"
+    finally:
+        pool.close()
+
+
+@pytest.mark.fast
+def test_pool_saturation_sheds_low_priority_first():
+    """Pool-wide saturation evicts a lower-priority model's least
+    urgent entry to admit high-priority work; a low-priority arrival
+    with no victim below it is shed."""
+    pool = ServerPool(lambda name, entries: None, workers=0,
+                      max_batch=4, max_queue=8, max_queue_total=3,
+                      linger_ms=1e6)
+    try:
+        pool.set_priority("hi", 1)
+        lo = [Ticket(None, "lo") for _ in range(3)]
+        for i, t in enumerate(lo):
+            pool.submit("lo", f"lo{i}", t)
+        t_hi = Ticket(None, "hi")
+        pool.submit("hi", "hi0", t_hi)       # evicts one lo entry
+        assert pool.counters["priority_evictions"] == 1
+        assert sum(1 for t in lo
+                   if isinstance(t.error, Overloaded)) == 1
+        assert not t_hi.done                 # admitted, not shed
+        with pytest.raises(Overloaded):      # no victim below priority 0
+            pool.submit("lo", "lox", Ticket(None, "lo"))
+        assert pool.queue_depth("hi") == 1
+    finally:
+        pool.close()
+
+
+# --------------------------------------------------------------------------
+# process pool: mmap'd worker processes, crash recovery
+# --------------------------------------------------------------------------
+
+
+def _proc_session(n=2):
+    sess = api.Session(workers=("process", n), max_batch=4,
+                       heartbeat_timeout_s=2.0)
+    sess.add(random_graph(0), name="m0", precision="int8")
+    return sess
+
+
+@pytest.mark.chaos
+def test_process_pool_parity():
+    """workers=("process", n) serves through real child processes (own
+    pids, mmap'd artifacts) with the same outputs as the in-process
+    interpretive oracle."""
+    import os
+    sess = _proc_session()
+    try:
+        feeds = [_feed(sess, seed=i) for i in range(8)]
+        ts = [sess.submit("m0", f) for f in feeds]
+        for t, f in zip(ts, feeds):
+            _check_output(sess, "m0", t.result(timeout=30), f)
+        health = sess._pool.worker_health()
+        pids = {h["pid"] for h in health.values() if h.get("pid")}
+        assert pids and os.getpid() not in pids
+        assert sess.stats()["pool"]["dispatched_requests"] >= 8
+    finally:
+        sess.close()
+
+
+@pytest.mark.chaos
+@pytest.mark.parametrize("mode", ["kill", "segv", "oom"])
+def test_process_pool_crash_zero_ticket_loss(mode):
+    """SIGKILL / SIGSEGV / simulated-OOM abort of a worker process with
+    its batch in flight: the batch re-dispatches to survivors, every
+    ticket resolves correctly, and the replacement worker spawns off
+    the request path."""
+    sess = _proc_session()
+    try:
+        feeds = [_feed(sess, seed=i) for i in range(10)]
+        with chaos.inject() as c:
+            c.kill_worker(-1, mode=mode)
+            ts = [sess.submit("m0", f) for f in feeds]
+            # zero ticket loss: every ticket resolves with parity,
+            # served by the surviving worker — no respawn on this path
+            for t, f in zip(ts, feeds):
+                _check_output(sess, "m0", t.result(timeout=30), f)
+            assert c.stats()["kills"] == 1
+        assert sess.stats()["models"]["m0"]["crash_redispatches"] >= 1
+        # ... and the supervisor respawns the replacement afterwards
+        deadline = time.monotonic() + 20
+        while time.monotonic() < deadline:
+            st = sess.stats()["pool"]
+            ready = [h for h in sess._pool.worker_health().values()
+                     if h.get("ready")]
+            if st.get("recycled_workers", 0) >= 1 and len(ready) >= 2:
+                break
+            time.sleep(0.1)
+        assert sess.stats()["pool"]["recycled_workers"] >= 1
+        assert len([h for h in sess._pool.worker_health().values()
+                    if h.get("ready")]) >= 2
+    finally:
+        sess.close()
+
+
+# --------------------------------------------------------------------------
+# artifact v3: persisted lowered-plan constants
+# --------------------------------------------------------------------------
+
+
+def _tamper_zip(src, dst, member, fn):
+    """Rewrite a zip, transforming one member's bytes with fn (return
+    None to drop the member)."""
+    import zipfile
+    with zipfile.ZipFile(src) as zin, \
+            zipfile.ZipFile(dst, "w", zipfile.ZIP_STORED) as zout:
+        for item in zin.infolist():
+            blob = zin.read(item.filename)
+            if item.filename == member:
+                blob = fn(blob)
+                if blob is None:
+                    continue
+            zout.writestr(item.filename, blob)
+
+
+def test_v3_artifact_serves_plan_consts(tmp_path):
+    """save() persists the lowered-plan kernel constants; a loading
+    worker's first plan serves them (computed == 0) with exact parity."""
+    m = api.compile(random_graph(3), precision="int8")
+    x = _inputs(m.graph, 1, 0)[0]
+    want = m(x, engine="plan")
+    p = str(tmp_path / "m.rpa")
+    m.save(p)
+    assert m.plan_cache_info()["consts"] > 0
+    m2 = CompiledModel.load(p, mmap=True)
+    got = m2(x, engine="plan")
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+    info = m2.plan_cache_info()
+    assert info["consts_computed"] == 0 and info["consts_served"] > 0
+    # invalidation never trusts persisted consts again: fresh recompute
+    m2.invalidate_plans()
+    got = m2(x, engine="plan")
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+    assert m2.plan_cache_info()["consts_computed"] > 0
+
+
+def test_consts_free_artifact_recomputes(tmp_path):
+    """Back-compat: an artifact written without plan constants (the
+    pre-v3 layout) loads fine and re-derives them on first plan."""
+    from repro.api import artifact as artifact_mod
+    m = api.compile(random_graph(4), precision="int8")
+    x = _inputs(m.graph, 1, 0)[0]
+    want = m(x, engine="plan")
+    p = str(tmp_path / "old.rpa")
+    artifact_mod.save_model(
+        p, name=m.name, graph=m.graph, cfg=m.cfg, options=m.options,
+        result=m.result, weights=m.weights, precision=m.precision,
+        quant_meta=m.semantics.meta()
+        if hasattr(m.semantics, "meta") else None,
+        qweights=m.qm.qweights, packed=m.qm.packed,
+        calib_error=m.qm.calib_error)        # no plan_consts=
+    m2 = CompiledModel.load(p)
+    got = m2(x, engine="plan")
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+    info = m2.plan_cache_info()
+    assert info["consts_computed"] > 0 and info["consts_served"] == 0
+
+
+def test_corrupt_plan_const_member_rejected(tmp_path):
+    """A flipped byte inside a persisted constant fails the sha256
+    manifest — the artifact is rejected, never served."""
+    from repro.core.serialize import ArtifactError
+    m = api.compile(random_graph(3), precision="int8")
+    p = str(tmp_path / "m.rpa")
+    m.save(p)
+    bad = str(tmp_path / "bad.rpa")
+    _tamper_zip(p, bad, "arrays/pl/0000.npy",
+                lambda b: b[:-1] + bytes([b[-1] ^ 0xFF]))
+    with pytest.raises(ArtifactError):
+        CompiledModel.load(bad)
+
+
+def test_missing_plan_const_member_rejected(tmp_path):
+    """A planconsts index that references a missing array member is a
+    typed ArtifactError, not a KeyError deep in lowering."""
+    import json
+    from repro.core.serialize import ArtifactError
+    m = api.compile(random_graph(3), precision="int8")
+    p = str(tmp_path / "m.rpa")
+    m.save(p)
+
+    def drop_from_manifest(blob):
+        meta = json.loads(blob.decode("utf-8"))
+        del meta["manifest"]["arrays/pl/0000.npy"]
+        return json.dumps(meta).encode("utf-8")
+
+    bad = str(tmp_path / "bad.rpa")
+    _tamper_zip(p, bad, "arrays/pl/0000.npy", lambda b: None)
+    _tamper_zip(bad, str(tmp_path / "bad2.rpa"), "meta.json",
+                drop_from_manifest)
+    with pytest.raises(ArtifactError, match="missing"):
+        CompiledModel.load(str(tmp_path / "bad2.rpa"))
