@@ -1,0 +1,523 @@
+"""Fleet-serving benchmark: replicated pools under replica death,
+stalls, and silent corruption.
+
+Drives a :class:`repro.runtime.fleet.Fleet` (N replica Sessions, each
+its own worker pool) with **open-loop bursty traffic** while
+:mod:`repro.runtime.chaos` injects one fault class per scenario:
+
+  * ``baseline``       — fault-free fleet traffic (throughput + p99
+    reference; exports the fleet Chrome trace + metrics);
+  * ``unhedged_stalls``— closed-loop traffic while workers randomly
+    stall mid-batch with the pool supervisor *disabled* (long
+    heartbeat): the client tail eats every stall.  Closed-loop is the
+    regime where hedging is honest — in a saturated open loop the tail
+    is queueing, and a hedge there only duplicates load;
+  * ``hedged_stalls``  — identical stall schedule, hedging on: the
+    router re-issues slow requests to the other replica after the
+    p99-derived timeout, and the **hedged p99 must not exceed the
+    unhedged p99** (the speculative-execution payoff, gated);
+  * ``replica_kill``   — whole replica pools die mid-burst: queued
+    attempts fail over to survivors with backoff, dead replicas recycle
+    in the background, **zero ticket loss**;
+  * ``bitflip``        — one replica silently flips output bits (no
+    error is ever raised): the sampling auditor's interp-oracle
+    re-execution must catch it and **quarantine the replica** (gated).
+
+After the scenarios, a rolling-update drill (canary-verified swap of
+every replica, then a chaos-corrupted canary that must *reject* with
+zero replicas swapped) and a paired fleet-vs-single-pool throughput
+measurement (equal total workers; the fleet layer's routing tax is
+gated at ``FLEET_RATIO_FLOOR``).
+
+The fleet robustness contract mirrors the pool-level one, one layer
+up: **every fleet ticket terminates** — with a result or a typed
+error — under every scenario, and corruption that never raises is
+still caught and contained.
+
+Writes ``BENCH_fleet.json``.
+
+    PYTHONPATH=src python -m benchmarks.fleet_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+
+import repro.api as api
+import repro.runtime.chaos as chaos
+from repro.api import (DeadlineExceeded, Overloaded, UpdateRejected,
+                       WorkerLost)
+from repro.obs import trace as obs_trace
+from repro.obs.trace import validate_chrome_trace
+
+MODEL = ("mobilenet_v2", 0.25)     # same serving regime as robust_bench
+BATCH = 4
+REPLICAS = 2
+WORKERS = 2                        # per replica; the single-pool
+                                   # comparator gets REPLICAS * WORKERS
+
+#: event names the exported fleet trace must contain — every routing
+#: decision leaves a mark, and the hedged scenario must show the
+#: hedge machinery actually firing
+REQUIRED_FLEET_EVENTS = ("fleet_route",)
+REQUIRED_HEDGE_EVENTS = ("fleet_hedge", "fleet_hedge_win")
+
+
+def _visible_cpus() -> int:
+    try:
+        return len(os.sched_getaffinity(0))
+    except AttributeError:
+        return os.cpu_count() or 1
+
+
+#: fault-free fleet throughput floor vs one pool with the same total
+#: worker count.  The fleet adds a router hop, per-attempt ticket
+#:  indirection and health scoring per request; with >= 2 CPUs that
+#: overlaps worker compute and must come near-free (>= 0.90x).  On a
+#: 1-CPU host every routing decision serializes with the kernels, so
+#: the floor drops to a documented 0.75 instead of failing on a box
+#: where 0.90 is structurally unreachable.
+FLEET_RATIO_FLOOR = 0.90 if _visible_cpus() >= 2 else 0.75
+
+#: per-scenario p99 ceilings (ms) — generous, box-independent; they
+#: catch *unbounded* tails (lost wakeup, stranded backoff), not box
+#: speed.  unhedged_stalls eats full stalls by design.
+P99_BOUND_MS = {"baseline": 2_000.0, "unhedged_stalls": 10_000.0,
+                "hedged_stalls": 5_000.0, "replica_kill": 15_000.0,
+                "bitflip": 5_000.0}
+
+
+def _check_fleet_trace(doc: Dict, hedged: bool) -> List[str]:
+    problems = list(validate_chrome_trace(doc))
+    names = {e.get("name") for e in doc.get("traceEvents", [])}
+    want = REQUIRED_FLEET_EVENTS + (REQUIRED_HEDGE_EVENTS
+                                    if hedged else ())
+    for n in want:
+        if n not in names:
+            problems.append(f"missing required fleet event {n!r}")
+    return problems
+
+
+def _fleet(**kw):
+    kw.setdefault("replicas", REPLICAS)
+    kw.setdefault("workers", WORKERS)
+    kw.setdefault("max_batch", BATCH)
+    kw.setdefault("max_queue", 256)
+    kw.setdefault("linger_ms", 1.0)
+    return api.Session.fleet(**kw)
+
+
+def _percentile(lat_ms: List[float], p: float) -> float:
+    if not lat_ms:
+        return 0.0
+    return float(np.percentile(np.asarray(lat_ms), p))
+
+
+def run_scenario(scenario: str, duration_s: float, seed: int = 0,
+                 trace_out: Optional[str] = None,
+                 metrics_out: Optional[str] = None) -> Dict:
+    """One fault class, one fresh Fleet.  The stall pair runs
+    closed-loop (per-request client latency is the comparison the
+    hedging gate needs); the rest run open-loop bursty traffic and
+    gate termination, not latency shape."""
+    rng = np.random.default_rng(seed)
+    name, scale = MODEL
+    closed_loop = scenario in ("unhedged_stalls", "hedged_stalls")
+    hedged = scenario in ("baseline", "hedged_stalls", "replica_kill")
+    tracer = obs_trace.enable() if trace_out else None
+    kw = dict(hedge=hedged)
+    if closed_loop:
+        # the pool supervisor must NOT rescue stalls — only hedging
+        # may; and a stall storm deserves a bigger hedge budget than
+        # the steady-state default
+        kw.update(heartbeat_timeout_s=60.0, hedge_budget=0.5)
+    if scenario == "bitflip":
+        kw.update(audit_fraction=0.35, audit_threshold=3)
+    fleet = _fleet(**kw)
+    m = fleet.add(name, precision="int8", res_scale=scale)
+    feed = rng.normal(size=m.graph.inputs[0].shape).astype(np.float32)
+
+    # fault-free warmup: builds every replica's plans and seeds the
+    # fleet latency histogram the p99-derived hedge timeout reads —
+    # matched to the scenario's regime (the closed-loop pair must not
+    # inherit a burst-queueing p99, or the hedge timeout would be as
+    # long as the stalls it exists to cut)
+    if closed_loop:
+        for _ in range(32):
+            fleet.submit(name, feed).result(timeout=120)
+    else:
+        warm = [fleet.submit(name, feed) for _ in range(32)]
+        for t in warm:
+            t.result(timeout=120)
+    fleet.flush(60)
+
+    tickets = []
+    client_lat: List[float] = []
+    submitted = 0
+    ok = misses = failed = 0
+    next_fault = 0.0
+    t0 = time.monotonic()
+    with chaos.inject() as c:
+        if scenario == "bitflip":          # replica r1 lies from t=0
+            c.corrupt_output(name, times=1_000_000, tag="r1")
+        if closed_loop:
+            # one request at a time; every 5th arms a worker stall the
+            # next claim eats — the tail is anomaly-driven by design
+            i = 0
+            while time.monotonic() - t0 < duration_s:
+                if i % 5 == 0:
+                    c.stall_worker(int(rng.integers(0, WORKERS)),
+                                   seconds=float(rng.uniform(0.3, 0.5)))
+                s0 = time.monotonic()
+                t = fleet.submit(name, feed)
+                tickets.append(t)
+                submitted += 1
+                try:
+                    t.result(timeout=120)
+                    ok += 1
+                except (WorkerLost, Overloaded, chaos.ChaosError,
+                        Exception):
+                    failed += 1
+                client_lat.append((time.monotonic() - s0) * 1e3)
+                i += 1
+        else:
+            while time.monotonic() - t0 < duration_s:
+                el = time.monotonic() - t0
+                if el >= next_fault:
+                    if scenario == "replica_kill":
+                        c.kill_pool(int(rng.integers(0, REPLICAS)))
+                        next_fault = el + 2.0   # recycle lands between
+                    else:
+                        next_fault = float("inf")
+                burst = int(rng.integers(1, 2 * BATCH + 1))
+                for _ in range(burst):
+                    deadline = float(rng.uniform(100, 1000)) \
+                        if scenario == "replica_kill" \
+                        and rng.random() < 0.2 else None
+                    tickets.append(fleet.submit(name, feed,
+                                                deadline_ms=deadline))
+                    submitted += 1
+                time.sleep(float(rng.uniform(0.0, 0.02)))
+
+            # drain: every fleet ticket terminates with a value or a
+            # typed error — the fleet-level zero-ticket-loss contract
+            for t in tickets:
+                try:
+                    t.result(timeout=120)
+                    ok += 1
+                except DeadlineExceeded:
+                    misses += 1
+                except (WorkerLost, Overloaded, chaos.ChaosError,
+                        Exception):
+                    failed += 1
+        lost = sum(1 for t in tickets if not t.done)
+        if scenario == "bitflip":
+            # give the background auditor time to cross the threshold
+            deadline = time.monotonic() + 30
+            while time.monotonic() < deadline:
+                if fleet.stats()["quarantines"] >= 1:
+                    break
+                time.sleep(0.1)
+        injected = dict(c.injected)
+    wall = time.monotonic() - t0
+
+    s = fleet.stats()
+    if closed_loop:
+        lat = {"p50_ms": _percentile(client_lat, 50),
+               "p99_ms": _percentile(client_lat, 99)}
+    else:
+        lat = s["latency"].get(name, {})
+    if metrics_out:
+        with open(metrics_out, "w") as f:
+            f.write(fleet.metrics())
+    fleet.close()
+    trace_problems: List[str] = []
+    if tracer is not None:
+        obs_trace.disable()
+        doc = tracer.chrome_trace()
+        with open(trace_out, "w") as f:
+            json.dump(doc, f)
+        trace_problems = _check_fleet_trace(doc, hedged=hedged)
+        for p in trace_problems[:5]:
+            print(f"  [trace] {p}", file=sys.stderr)
+    row = {
+        "scenario": scenario,
+        "duration_s": round(wall, 2),
+        "submitted": submitted,
+        "ok": ok,
+        "deadline_misses": misses,
+        "failed_typed": failed,
+        "lost": lost,
+        "zero_ticket_loss": bool(lost == 0
+                                 and ok + misses + failed
+                                 == len(tickets)),
+        "req_s": round(ok / wall, 1),
+        "p50_ms": round(lat.get("p50_ms", 0.0), 2),
+        "p99_ms": round(lat.get("p99_ms", 0.0), 2),
+        "p99_bound_ms": P99_BOUND_MS[scenario],
+        "p99_bounded": bool(lat.get("p99_ms", 0.0)
+                            <= P99_BOUND_MS[scenario]),
+        "hedges": s["hedges"],
+        "hedge_wins": s["hedge_wins"],
+        "redispatches": s["redispatches"],
+        "pool_deaths": s["pool_deaths"],
+        "recycles": s["recycles"],
+        "quarantines": s["quarantines"],
+        "audit_ok": s["audit_ok"],
+        "audit_mismatch": s["audit_mismatch"],
+        "replicas": {str(rid): r["state"]
+                     for rid, r in s["replicas"].items()},
+        "injected": injected,
+    }
+    if tracer is not None:
+        row["trace_events"] = len(tracer)
+        row["trace_problems"] = len(trace_problems)
+        row["trace_ok"] = not trace_problems
+    return row
+
+
+def rolling_update_drill() -> Dict:
+    """Canary-gated rolling update under live traffic: a clean artifact
+    swaps every replica one at a time while requests keep serving; a
+    chaos-corrupted canary must reject with zero replicas swapped."""
+    rng = np.random.default_rng(11)
+    name, scale = MODEL
+    fleet = _fleet(hedge=False)
+    try:
+        m = fleet.add(name, precision="int8", res_scale=scale)
+        feed = rng.normal(size=m.graph.inputs[0].shape
+                          ).astype(np.float32)
+        for _ in range(8):
+            fleet.submit(name, feed).result(timeout=120)
+        with tempfile.TemporaryDirectory() as tmp:
+            path = os.path.join(tmp, "fleet_update.rpa")
+            m.save(path)
+            # traffic stays open-loop across the swap
+            inflight = [fleet.submit(name, feed) for _ in range(16)]
+            swapped = fleet.update(name, path)
+            for t in inflight:
+                t.result(timeout=120)
+            served_through = all(t.done and t.error is None
+                                 for t in inflight)
+            rolled_back = False
+            with chaos.inject() as c:
+                c.corrupt_canary(name, times=1)
+                try:
+                    fleet.update(name, path)
+                except UpdateRejected:
+                    rolled_back = True
+            # the rejected update left every replica live on the old
+            # (still canary-clean) artifact
+            post = fleet.submit(name, feed).result(timeout=120)
+        s = fleet.stats()
+        return {
+            "swapped": swapped,
+            "served_through_update": bool(served_through),
+            "updates_ok": s["updates_ok"],
+            "updates_rolled_back": s["updates_rolled_back"],
+            "rollback_rejected_cleanly": bool(
+                rolled_back and post is not None
+                and all(st == "live"
+                        for st in fleet.replicas().values())),
+        }
+    finally:
+        fleet.close()
+
+
+def paired_fleet_throughput(rounds: int) -> Dict:
+    """Fleet (REPLICAS x WORKERS) vs one Session pool with the same
+    total worker count, measured *paired* (rounds alternate) so host
+    drift cannot bias the ratio.  Best round each, req/s."""
+    name, scale = MODEL
+    rng = np.random.default_rng(7)
+    fleet = _fleet(hedge=False)
+    sess = api.Session(max_batch=BATCH, workers=REPLICAS * WORKERS,
+                       max_queue=256, linger_ms=1.0,
+                       heartbeat_timeout_s=5.0)
+    n_round = 128
+    bests = {"fleet": 0.0, "single": 0.0}
+    try:
+        fm = fleet.add(name, precision="int8", res_scale=scale)
+        sm = sess.add(name, precision="int8", res_scale=scale,
+                      warmup=True)
+        feeds = {
+            "fleet": rng.normal(size=fm.graph.inputs[0].shape
+                                ).astype(np.float32),
+            "single": rng.normal(size=sm.graph.inputs[0].shape
+                                 ).astype(np.float32)}
+        # warmup round each (plan builds on every worker)
+        ts = [fleet.submit(name, feeds["fleet"])
+              for _ in range(n_round)]
+        for t in ts:
+            t.result(timeout=120)
+        ts = [sess.submit(name, feeds["single"]) for _ in range(n_round)]
+        sess.flush(name)
+        for _ in range(rounds):
+            t0 = time.monotonic()
+            ts = [fleet.submit(name, feeds["fleet"])
+                  for _ in range(n_round)]
+            for t in ts:
+                t.result(timeout=120)
+            bests["fleet"] = max(bests["fleet"],
+                                 n_round / (time.monotonic() - t0))
+            t0 = time.monotonic()
+            ts = [sess.submit(name, feeds["single"])
+                  for _ in range(n_round)]
+            sess.flush(name)
+            dt = time.monotonic() - t0
+            assert all(t.done and t.error is None for t in ts)
+            bests["single"] = max(bests["single"], n_round / dt)
+    finally:
+        fleet.close()
+        sess.close()
+    return {"fleet_req_s": round(bests["fleet"], 1),
+            "single_pool_req_s": round(bests["single"], 1),
+            "ratio": round(bests["fleet"]
+                           / max(1e-9, bests["single"]), 3)}
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="shorter scenarios; the throughput gate is "
+                         "warn-only")
+    ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument("--trace-out", default="TRACE_fleet.json",
+                    help="Chrome trace from the hedged_stalls scenario "
+                         "(routing + hedge decisions as instants)")
+    ap.add_argument("--metrics-out", default="METRICS_fleet.prom",
+                    help="Prometheus exposition of the baseline "
+                         "fleet's repro_fleet_* families")
+    args = ap.parse_args(argv)
+
+    duration = 1.5 if args.quick else 4.0
+    scenarios = ["baseline", "unhedged_stalls", "hedged_stalls",
+                 "replica_kill", "bitflip"]
+    rows = []
+    for i, sc in enumerate(scenarios):
+        print(f"[fleet_bench] scenario {sc} ({duration:.0f}s) ...",
+              flush=True)
+        # seed the stall schedules identically so hedged vs unhedged
+        # compare against the same fault sequence
+        seed = 1 if sc in ("unhedged_stalls", "hedged_stalls") else i
+        row = run_scenario(
+            sc, duration, seed=seed,
+            trace_out=args.trace_out if sc == "hedged_stalls" else None,
+            metrics_out=args.metrics_out if sc == "baseline" else None)
+        rows.append(row)
+        print(f"  {row['req_s']:8.1f} req/s   p50 {row['p50_ms']:7.2f}"
+              f" ms   p99 {row['p99_ms']:8.2f} ms   loss {row['lost']}"
+              f"   hedges {row['hedges']}   deaths "
+              f"{row['pool_deaths']}   quarantines "
+              f"{row['quarantines']}", flush=True)
+
+    print("[fleet_bench] rolling-update drill ...", flush=True)
+    update = rolling_update_drill()
+    print("[fleet_bench] measuring fleet vs single-pool throughput "
+          "(paired) ...", flush=True)
+    thr = paired_fleet_throughput(rounds=3 if args.quick else 6)
+
+    unhedged = next(r for r in rows
+                    if r["scenario"] == "unhedged_stalls")
+    hedged = next(r for r in rows if r["scenario"] == "hedged_stalls")
+    kill = next(r for r in rows if r["scenario"] == "replica_kill")
+    flip = next(r for r in rows if r["scenario"] == "bitflip")
+
+    result = {
+        "model": MODEL[0],
+        "replicas": REPLICAS,
+        "workers_per_replica": WORKERS,
+        "batch": BATCH,
+        "cpus_visible": _visible_cpus(),
+        "scenarios": rows,
+        "update": update,
+        "throughput": thr,
+        "fleet_ratio_floor": FLEET_RATIO_FLOOR,
+        # ---- gates -------------------------------------------------
+        "all_zero_ticket_loss": all(r["zero_ticket_loss"]
+                                    for r in rows),
+        "all_p99_bounded": all(r["p99_bounded"] for r in rows),
+        "replica_kill_zero_loss": bool(kill["zero_ticket_loss"]),
+        "replica_kill_exercised": bool(kill["pool_deaths"] >= 1
+                                       and kill["recycles"] >= 1),
+        "hedging_exercised": bool(hedged["hedges"] >= 1
+                                  and hedged["hedge_wins"] >= 1),
+        "hedged_p99_le_unhedged": bool(hedged["p99_ms"]
+                                       <= unhedged["p99_ms"]),
+        "unhedged_p99_ms": unhedged["p99_ms"],
+        "hedged_p99_ms": hedged["p99_ms"],
+        "auditor_quarantined": bool(flip["quarantines"] >= 1
+                                    and flip["audit_mismatch"]
+                                    >= 3),
+        "update_ok": bool(update["swapped"] == REPLICAS
+                          and update["served_through_update"]),
+        "rollback_ok": bool(update["rollback_rejected_cleanly"]),
+        "meets_fleet_throughput": bool(thr["ratio"]
+                                       >= FLEET_RATIO_FLOOR),
+        "trace_ok": bool(hedged.get("trace_ok", False)),
+        "trace_path": args.trace_out,
+        "metrics_path": args.metrics_out,
+    }
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"[fleet_bench] zero-loss {result['all_zero_ticket_loss']}   "
+          f"hedged p99 {hedged['p99_ms']:.1f} ms vs unhedged "
+          f"{unhedged['p99_ms']:.1f} ms   fleet/single "
+          f"{thr['ratio']:.3f} (floor {FLEET_RATIO_FLOOR:.2f}, "
+          f"{_visible_cpus()} cpu) -> {args.out}")
+
+    if not result["all_zero_ticket_loss"]:
+        print("[fleet_bench] FAIL: fleet ticket loss detected",
+              file=sys.stderr)
+        return 1
+    if not result["all_p99_bounded"]:
+        print("[fleet_bench] FAIL: p99 exceeded its scenario bound",
+              file=sys.stderr)
+        return 1
+    if not result["replica_kill_exercised"]:
+        print("[fleet_bench] FAIL: replica_kill did not exercise the "
+              "failover path (no death / recycle)", file=sys.stderr)
+        return 1
+    if not result["hedging_exercised"]:
+        print("[fleet_bench] FAIL: hedging never fired under stalls",
+              file=sys.stderr)
+        return 1
+    if not result["hedged_p99_le_unhedged"]:
+        print("[fleet_bench] FAIL: hedging did not improve the stall "
+              f"tail (hedged {hedged['p99_ms']} ms > unhedged "
+              f"{unhedged['p99_ms']} ms)", file=sys.stderr)
+        return 1
+    if not result["auditor_quarantined"]:
+        print("[fleet_bench] FAIL: the auditor did not quarantine the "
+              "silently-corrupting replica", file=sys.stderr)
+        return 1
+    if not result["update_ok"] or not result["rollback_ok"]:
+        print("[fleet_bench] FAIL: rolling update / canary rollback "
+              "drill failed", file=sys.stderr)
+        return 1
+    if not result["trace_ok"]:
+        print("[fleet_bench] FAIL: exported fleet trace failed "
+              "schema/coverage validation", file=sys.stderr)
+        return 1
+    if not result["meets_fleet_throughput"]:
+        if args.quick:
+            print("[fleet_bench] WARNING: quick-mode fleet throughput "
+                  f"< {FLEET_RATIO_FLOOR:.2f}x single pool (noisy "
+                  "box?) — full bench enforces it", file=sys.stderr)
+            return 0
+        print(f"[fleet_bench] FAIL: fleet slower than "
+              f"{FLEET_RATIO_FLOOR:.2f}x a single pool with equal "
+              "total workers", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

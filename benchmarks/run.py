@@ -63,6 +63,7 @@ def main(argv=None):
     ap.add_argument("--skip-fusion", action="store_true")
     ap.add_argument("--skip-serve", action="store_true")
     ap.add_argument("--skip-robust", action="store_true")
+    ap.add_argument("--skip-fleet", action="store_true")
     ap.add_argument("--skip-decode", action="store_true")
     ap.add_argument("--cache-dir", default=None,
                     help="enable the on-disk program-cache tier at this "
@@ -90,7 +91,7 @@ def main(argv=None):
         import sys as _sys
         print("=" * 72)
         print("QUICK SMOKE (pytest -m fast + compile/quant/fusion/serve/"
-              "robust benches --quick)")
+              "robust/fleet/decode benches --quick)")
         print("=" * 72)
         rc = subprocess.call(
             [_sys.executable, "-m", "pytest", "-q", "-m", "fast"])
@@ -115,6 +116,10 @@ def main(argv=None):
         r = robust_bench.main(["--quick",
                                "--out", "BENCH_robust_quick.json"])
         entries.append(("robust", "BENCH_robust_quick.json", r))
+        from . import fleet_bench
+        r = fleet_bench.main(["--quick",
+                              "--out", "BENCH_fleet_quick.json"])
+        entries.append(("fleet", "BENCH_fleet_quick.json", r))
         from . import decode_bench
         r = decode_bench.main(["--quick",
                                "--out", "BENCH_decode_quick.json"])
@@ -211,6 +216,19 @@ def main(argv=None):
         r = robust_bench.main(["--quick", "--out", path]
                               if args.fast else [])
         entries.append(("robust", path, r))
+        rc |= r
+
+    if not args.skip_fleet:
+        print("=" * 72)
+        print("FLEET SERVING (replicated pools: hedging, failover, "
+              "audit, BENCH_fleet.json)")
+        print("=" * 72)
+        from . import fleet_bench
+        path = "BENCH_fleet_quick.json" if args.fast \
+            else "BENCH_fleet.json"
+        r = fleet_bench.main(["--quick", "--out", path]
+                             if args.fast else [])
+        entries.append(("fleet", path, r))
         rc |= r
 
     if not args.skip_decode:

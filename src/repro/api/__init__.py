@@ -34,20 +34,26 @@ from repro.core.npu import NEUTRON_2TOPS, NPUConfig
 from repro.core.pipeline import CompilerOptions, compile_graph
 from repro.core.serialize import ArtifactError
 
-from repro.runtime.serving import (CircuitBreaker, DeadlineExceeded,
-                                   FlushError, Overloaded, ServingError,
+from repro.runtime.serving import (Cancelled, CircuitBreaker,
+                                   DeadlineExceeded, FlushError,
+                                   FrameCorrupt, Overloaded, ServingError,
                                    Ticket, WorkerLost)
 
 from .compiled import CompiledModel, resolve_semantics
 from .decode import DecodeSession
 from .session import Session
 
+from repro.runtime.fleet import Fleet, FleetError, UpdateRejected
+
 __all__ = [
     "compile", "CompiledModel", "Session", "DecodeSession",
     "ArtifactError", "CompilerOptions", "resolve_semantics",
     # serving robustness surface
     "ServingError", "Overloaded", "DeadlineExceeded", "FlushError",
-    "WorkerLost", "Ticket", "CircuitBreaker",
+    "WorkerLost", "Ticket", "CircuitBreaker", "Cancelled",
+    "FrameCorrupt",
+    # fleet-level serving
+    "Fleet", "FleetError", "UpdateRejected",
 ]
 
 Source = Union[str, Graph, GraphBuilder, Tuple[Graph, GraphBuilder],

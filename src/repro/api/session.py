@@ -52,6 +52,7 @@ counters and per-worker health.
 from __future__ import annotations
 
 import os
+import random
 import tempfile
 import threading
 import time
@@ -66,8 +67,9 @@ from repro.core.pipeline import (CompilerOptions, program_cache_configure,
 from repro.obs import trace as _trace
 from repro.obs.metrics import LogHistogram, MetricsRegistry
 from repro.runtime import chaos as _chaos
-from repro.runtime.serving import (CircuitBreaker, DeadlineExceeded,
-                                   FlushError, LatencyHistogram,
+from repro.runtime.serving import (Cancelled, CircuitBreaker,
+                                   DeadlineExceeded, FlushError,
+                                   FrameCorrupt, LatencyHistogram,
                                    Overloaded, ServerPool, Ticket,
                                    WorkerCrashed)
 
@@ -93,7 +95,8 @@ class Session:
                  heartbeat_timeout_s: float = 0.5,
                  breaker_threshold: int = 3,
                  breaker_cooldown_s: float = 2.0,
-                 retry_backoff_ms: float = 10.0):
+                 retry_backoff_ms: float = 10.0,
+                 tag: Optional[str] = None):
         self.cfg = config or NEUTRON_2TOPS
         self.options = options
         self.max_batch = int(max_batch)
@@ -101,6 +104,10 @@ class Session:
         self.breaker_threshold = int(breaker_threshold)
         self.breaker_cooldown_s = float(breaker_cooldown_s)
         self.retry_backoff_s = float(retry_backoff_ms) / 1e3
+        #: chaos-attribution tag (fleet replicas pass their replica id
+        #: so per-replica faults — silent output corruption — can be
+        #: aimed at one session among many in the same process)
+        self.tag = tag
         # only forward knobs the caller actually set — the store is
         # process-wide and an omitted knob must not reset prior config
         if cache_dir is not None:
@@ -166,6 +173,17 @@ class Session:
                 self._pool = ServerPool(self._execute_entries,
                                         workers=n_workers, **kw)
 
+    @classmethod
+    def fleet(cls, replicas: int = 2, **kw) -> "Fleet":  # noqa: F821
+        """Construct a :class:`~repro.runtime.fleet.Fleet` of
+        ``replicas`` Sessions (each with its own worker pool, modeling
+        one host) behind a single health-routed, hedged ``submit()``
+        surface.  Keyword arguments are forwarded to
+        :class:`~repro.runtime.fleet.Fleet`; per-session knobs
+        (``workers``, ``max_batch``, …) reach every replica."""
+        from repro.runtime.fleet import Fleet
+        return Fleet(replicas=replicas, session_factory=cls, **kw)
+
     def __enter__(self) -> "Session":
         return self
 
@@ -198,9 +216,9 @@ class Session:
                          "artifact": 0},
             # robustness counters
             "shed": 0, "deadline_misses": 0, "degraded_requests": 0,
-            "retries": 0, "plan_failures": 0, "breaker_trips": 0,
-            "recoveries": 0, "failed_recoveries": 0,
-            "crash_redispatches": 0,
+            "retries": 0, "submit_retries": 0, "plan_failures": 0,
+            "breaker_trips": 0, "recoveries": 0, "failed_recoveries": 0,
+            "crash_redispatches": 0, "frame_corrupt": 0, "cancelled": 0,
         })
 
     def _count(self, name: str, counter: str, n: int = 1) -> None:
@@ -393,7 +411,9 @@ class Session:
         return out
 
     def submit(self, name: str, inputs: Inputs,
-               deadline_ms: Optional[float] = None) -> Ticket:
+               deadline_ms: Optional[float] = None,
+               retries: int = 0,
+               retry_cap_ms: float = 250.0) -> Ticket:
         """Queue one request for micro-batching and return its
         :class:`Ticket`.
 
@@ -403,12 +423,39 @@ class Session:
         executes fails with ``DeadlineExceeded`` instead of running
         stale work.  When the model's bounded queue (``max_queue``) is
         full the request is shed with :class:`Overloaded` carrying a
-        retry-after hint."""
+        retry-after hint.
+
+        ``retries=N`` turns the shed into client-side retry: each
+        :class:`Overloaded` is retried after an exponential backoff
+        with *full jitter* — ``sleep(U(0, min(cap, hint * 2**attempt)))``
+        seeded from the shed hint's p50-derived ``retry_after_ms`` and
+        capped at ``retry_cap_ms`` — so synchronized retry storms decor-
+        relate.  The deadline is absolute: backoff spends it, it never
+        extends it.  Retries count into ``repro_retries_total``."""
         self._get(name)                       # fail fast on bad names
         now = _chaos.now()
         deadline = None
         if deadline_ms is not None:
             deadline = now + float(deadline_ms) / 1e3
+        for attempt in range(int(retries)):
+            try:
+                return self._submit_once(name, inputs, deadline,
+                                         deadline_ms)
+            except Overloaded as e:
+                self._count(name, "submit_retries")
+                base = min(float(retry_cap_ms),
+                           max(1.0, e.retry_after_ms) * (2 ** attempt))
+                delay_s = random.random() * base / 1e3
+                if deadline is not None and \
+                        _chaos.now() + delay_s >= deadline:
+                    raise          # backoff would outlive the deadline
+                time.sleep(delay_s)
+        return self._submit_once(name, inputs, deadline, deadline_ms)
+
+    def _submit_once(self, name: str, inputs: Inputs,
+                     deadline: Optional[float],
+                     deadline_ms: Optional[float]) -> Ticket:
+        now = _chaos.now()
         ticket = Ticket(self, name, deadline)
         with _trace.maybe_span("submit", "serving",
                                trace_id=ticket.trace_id, model=name,
@@ -447,6 +494,28 @@ class Session:
             self.flush(ticket.name)
         except FlushError:
             pass          # the ticket's own stored error is re-raised
+
+    def _cancel(self, ticket: Ticket) -> bool:
+        """:meth:`Ticket.cancel` body: settle the ticket ``Cancelled``
+        (first-wins — a real result that already landed stands) and
+        free its queue slot so a cancelled request stops holding
+        admission capacity."""
+        won = ticket._fail(Cancelled(ticket.name))
+        if won:
+            self._count(ticket.name, "cancelled")
+            _trace.instant("cancel", "serving", trace_id=ticket.trace_id,
+                           args={"model": ticket.name})
+        # purge the queue slot either way: a settled ticket would be
+        # skipped on claim, but its heap entry still occupies capacity
+        if self._pool is not None:
+            self._pool.discard(ticket.name, ticket)
+        else:
+            q = self._queue.get(ticket.name)
+            if q:
+                n0 = len(q)
+                q[:] = [e for e in q if e[1] is not ticket]
+                self._queue_depth -= n0 - len(q)
+        return won
 
     # -- robust batch execution (shared by sync flush and the pool) ---------
     def _plan_run(self, name: str, model: CompiledModel, feeds,
@@ -549,6 +618,24 @@ class Session:
                 ticket._fail(err)
         return None
 
+    def _frame_redispatch(self, name: str, entries,
+                          err: FrameCorrupt) -> None:
+        """A pipe frame failed its CRC: the batch's bytes are
+        untrusted but the worker and its stream are intact (the
+        transport is length-prefixed — corruption can't desync it).
+        Re-dispatch the batch so a healthy worker serves it; no ticket
+        fails, nothing counts against the breaker, nobody recycles."""
+        self._count(name, "frame_corrupt")
+        _trace.instant("frame_redispatch", "fault",
+                       args={"model": name, "worker": err.worker,
+                             "n": len(entries)})
+        if self._pool is not None:
+            self._pool.redispatch(name, entries, err.worker)
+        else:                      # sync session: no pool to re-home to
+            for _, ticket in entries:
+                ticket._fail(err)
+        return None
+
     def _execute_entries(self, name: str, entries, worker=None
                          ) -> Optional[BaseException]:
         """Execute one claimed batch, fulfilling or failing every ticket
@@ -584,6 +671,8 @@ class Session:
                                       trace_ids)
             except WorkerCrashed as e:
                 return self._crash_redispatch(name, entries, e)
+            except FrameCorrupt as e:
+                return self._frame_redispatch(name, entries, e)
             except _CLIENT_ERRORS as e:
                 err = e
             except Exception as e:
@@ -595,6 +684,8 @@ class Session:
                                           trace_ids)
                 except WorkerCrashed as e2:
                     return self._crash_redispatch(name, entries, e2)
+                except FrameCorrupt as e2:
+                    return self._frame_redispatch(name, entries, e2)
                 except Exception as e2:
                     err = e2
             if outs is not None:
@@ -637,6 +728,12 @@ class Session:
             for _, ticket in entries:
                 ticket._fail(err)
             return err
+        c = _chaos.active()
+        if c is not None and c.maybe_corrupt_output(name, self.tag):
+            # silent corruption: serve *wrong bytes* with no error —
+            # the fault class only the fleet's interp-oracle audit
+            # sampler can catch (and quarantine the replica for)
+            outs = [_chaos.flip_outputs(o) for o in outs]
         hist = self._hist(name)
         done_t = time.monotonic()
         for (_, ticket), out in zip(entries, outs):
@@ -716,7 +813,14 @@ class Session:
          "tickets expired before execution"),
         ("degraded_requests", "repro_degraded_requests_total",
          "requests served by the interpretive oracle (breaker open)"),
-        ("retries", "repro_retries_total", "transient batch retries"),
+        ("retries", "repro_retries_total",
+         "retries: transient batch + client-side submit"),
+        ("submit_retries", "repro_submit_retries_total",
+         "client-side submit retries after Overloaded sheds"),
+        ("cancelled", "repro_cancelled_total",
+         "tickets cancelled by the caller"),
+        ("frame_corrupt", "repro_frame_corrupt_total",
+         "batches re-dispatched after a corrupt pipe frame"),
         ("plan_failures", "repro_plan_failures_total",
          "plan-engine batch failures"),
         ("breaker_trips", "repro_breaker_trips_total",
@@ -747,6 +851,11 @@ class Session:
                     v += pool.shed.get(n, 0)
                 elif key == "deadline_misses" and pool is not None:
                     v += pool.deadline_misses.get(n, 0)
+                elif key == "retries":
+                    # repro_retries_total is the satellite's umbrella:
+                    # transient batch retries + client submit retries
+                    # (broken out in repro_submit_retries_total)
+                    v += st.get("submit_retries", 0)
                 fam.set_total(v, model=n)
         compiles = reg.counter("repro_compiles_total",
                                "model compiles by cache tier",

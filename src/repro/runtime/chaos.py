@@ -35,6 +35,24 @@ Injectable fault classes
   the OOM-killed exit status.  ``worker_id=-1`` murders whichever
   worker dispatches next.  Exercises crash detection, in-flight
   re-dispatch and off-request-path respawn (zero ticket loss).
+* **pool murder** — ``kill_pool(replica)``: the fleet router
+  (``repro.runtime.fleet``) tears the whole replica pool down — every
+  worker lost at once, the host-death fault class.  Queued attempts
+  fail ``WorkerLost`` and the router re-homes them on the surviving
+  replicas with bounded backoff (zero ticket loss).
+* **frame corruption** — ``corrupt_frames(times=N)``: flips one bit in
+  the blob payload of the next N process-pool data frames on the
+  parent's receive path.  The frame's CRC32 must catch it, fail only
+  that batch with a typed ``FrameCorrupt`` and re-dispatch — never
+  recycle the stream.
+* **silent output corruption** — ``corrupt_output(model, times=N,
+  tag=...)``: the tagged session serves *wrong bytes* for the model's
+  next N batches without any error — the bit-flip fault class that
+  only an end-to-end audit (the fleet's interp-oracle re-execution
+  sampler) can catch.
+* **artifact-swap corruption** — ``corrupt_canary(model, times=N)``:
+  the next rolling-update canary for the model sees corrupted plan
+  outputs; ``Fleet.update`` must reject the swap and roll back.
 
 Usage::
 
@@ -70,8 +88,15 @@ class Chaos:
         self._artifact_faults = 0
         self._kills: Dict[int, str] = {}          # worker id -> mode
         self._skew_s = 0.0
+        self._pool_kills: list = []               # fleet replica ids
+        self._frame_faults = 0
+        #: (model, session tag or None) -> remaining silent corruptions
+        self._output_faults: Dict[tuple, int] = {}
+        self._canary_faults: Dict[str, int] = {}  # model -> remaining
         self.injected = {"stalls": 0, "plan_faults": 0,
-                         "artifact_faults": 0, "kills": 0}
+                         "artifact_faults": 0, "kills": 0,
+                         "pool_kills": 0, "frame_flips": 0,
+                         "output_flips": 0, "canary_corruptions": 0}
 
     # -- arming (tests / benchmarks) ----------------------------------------
     def stall_worker(self, worker_id: int, seconds: float) -> None:
@@ -113,6 +138,38 @@ class Chaos:
         positive = forward, expiring pending deadlines)."""
         with self._lock:
             self._skew_s += float(seconds)
+
+    def kill_pool(self, replica: int) -> None:
+        """Mark a whole fleet replica pool for death: the fleet router
+        consumes the arm on its next tick and tears the replica's pool
+        down (every worker lost at once — the host-death fault)."""
+        with self._lock:
+            self._pool_kills.append(int(replica))
+
+    def corrupt_frames(self, times: int = 1) -> None:
+        """Flip one bit in the blob payload of the next ``times``
+        process-pool data frames on the parent's receive path."""
+        with self._lock:
+            self._frame_faults += int(times)
+
+    def corrupt_output(self, model: str, times: int = 1,
+                       tag: Optional[str] = None) -> None:
+        """The tagged session (``Session(tag=...)``; ``tag=None``
+        matches any session) silently serves perturbed outputs for the
+        model's next ``times`` batches — no error raised, nothing trips
+        a breaker.  Only an end-to-end audit catches it."""
+        with self._lock:
+            key = (model, tag)
+            self._output_faults[key] = \
+                self._output_faults.get(key, 0) + int(times)
+
+    def corrupt_canary(self, model: str, times: int = 1) -> None:
+        """The model's next ``times`` rolling-update canary runs see
+        corrupted plan outputs (a bad artifact swap); ``Fleet.update``
+        must reject the swap and roll back."""
+        with self._lock:
+            self._canary_faults[model] = \
+                self._canary_faults.get(model, 0) + int(times)
 
     # -- probes (the serving runtime) ---------------------------------------
     def maybe_stall_s(self, worker_id: int) -> float:
@@ -156,6 +213,58 @@ class Chaos:
         from repro.core.serialize import ArtifactError
         raise ArtifactError(f"chaos: corrupted artifact {path}")
 
+    def take_pool_kills(self) -> list:
+        """Drain (and count) every armed replica-pool kill."""
+        with self._lock:
+            kills, self._pool_kills = self._pool_kills, []
+            self.injected["pool_kills"] += len(kills)
+            return kills
+
+    def maybe_flip_frame(self, buf: bytes) -> bytes:
+        """Flip one bit in a pipe frame's blob payload if a frame fault
+        is armed.  Frames without a blob payload (heartbeats, ready
+        acks) pass through unconsumed — the fault targets data frames,
+        whose CRC failure is attributable to one pending batch."""
+        import struct as _struct
+        if len(buf) < 12:
+            return buf
+        (hlen,) = _struct.unpack_from("<I", buf, 4)
+        blob_off = 12 + hlen
+        if len(buf) <= blob_off:
+            return buf             # headers-only frame: not a target
+        with self._lock:
+            if self._frame_faults <= 0:
+                return buf
+            self._frame_faults -= 1
+            self.injected["frame_flips"] += 1
+        b = bytearray(buf)
+        b[blob_off] ^= 0x40
+        return bytes(b)
+
+    def maybe_corrupt_output(self, model: str,
+                             tag: Optional[str] = None) -> bool:
+        """Consume one armed silent-output corruption for this
+        (model, session tag) — exact tag match first, then the
+        ``tag=None`` wildcard."""
+        with self._lock:
+            for key in ((model, tag), (model, None)):
+                n = self._output_faults.get(key, 0)
+                if n > 0:
+                    self._output_faults[key] = n - 1
+                    self.injected["output_flips"] += 1
+                    return True
+            return False
+
+    def check_canary(self, model: str) -> bool:
+        """Consume one armed canary corruption for this model."""
+        with self._lock:
+            n = self._canary_faults.get(model, 0)
+            if n > 0:
+                self._canary_faults[model] = n - 1
+                self.injected["canary_corruptions"] += 1
+                return True
+            return False
+
     def now(self) -> float:
         with self._lock:
             return time.monotonic() + self._skew_s
@@ -163,6 +272,25 @@ class Chaos:
     def stats(self) -> Dict[str, int]:
         with self._lock:
             return dict(self.injected)
+
+
+def flip_outputs(out: Dict[str, object]) -> Dict[str, object]:
+    """Silently perturb one element of one output array — the
+    bit-flip-class corruption a CRC can't see (it happens *before*
+    serialization) and only an end-to-end interp-oracle audit catches.
+    Returns a new dict; the input arrays are never mutated."""
+    import numpy as np
+    bad = dict(out)
+    for k in sorted(bad):
+        v = np.asarray(bad[k])
+        if not v.size:
+            continue
+        w = v.copy()
+        flat = w.reshape(-1)
+        flat[0] = flat[0] + (1e3 if w.dtype.kind == "f" else 64)
+        bad[k] = w
+        return bad
+    return bad
 
 
 #: the armed schedule, or None (production).  Runtime code reads this

@@ -14,7 +14,18 @@ Wire protocol (parent <-> child, one duplex pipe per worker)
 
 Every message is one *frame*::
 
-    b"rpa1" | u32 header_len | header JSON | raw ndarray blobs
+    b"rpa2" | u32 header_len | u32 crc32 | header JSON | raw blobs
+
+where ``crc32`` covers everything after itself (header + blobs).  The
+pipe transport is length-prefixed, so a flipped bit in transit can
+never desynchronize framing — it corrupts one frame's *payload*.  The
+CRC turns that into a typed, attributable fault:
+:func:`unpack_frame` raises :class:`~repro.runtime.serving.
+FrameCorrupt` carrying the frame's header (headers that still parse
+identify the pending request), the reader fails *only that batch*, and
+the executor re-dispatches it to a healthy worker.  Only a frame whose
+header is itself unreadable degrades to :class:`ProtocolError` and a
+worker recycle.
 
 The header carries the frame type plus an ``arrays`` manifest
 (name/dtype/shape per blob, in blob order); request frames thread the
@@ -61,36 +72,51 @@ import signal
 import struct
 import threading
 import time
+import zlib
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from ..obs import trace as _trace
 from . import chaos as _chaos
-from .serving import ServerPool, ServingError, WorkerCrashed
+from .serving import FrameCorrupt, ServerPool, ServingError, WorkerCrashed
 
-FRAME_MAGIC = b"rpa1"
+FRAME_MAGIC = b"rpa2"
 _U32 = struct.Struct("<I")
+#: magic(4) | header_len u32 | crc32 u32
+_HDR_OFF = 12
 
 
 class ProtocolError(ServingError):
-    """A pipe frame failed to parse (bad magic / truncated): the
-    endpoints have desynchronized and the worker must be recycled."""
+    """A pipe frame failed to parse (bad magic / truncated / unreadable
+    header): the endpoints have desynchronized and the worker must be
+    recycled.  A frame that *parses* but fails its CRC raises
+    :class:`~repro.runtime.serving.FrameCorrupt` instead — an
+    attributable single-batch fault, not a stream fault."""
 
 
 def _frame_shell(header: dict, metas: List[dict],
                  payload: int) -> Tuple[bytearray, int]:
     """Allocate a frame buffer with magic + JSON header written; returns
-    ``(frame, offset_of_first_blob)``."""
+    ``(frame, offset_of_first_blob)``.  The CRC field is zero until
+    :func:`_seal_frame` stamps it (after the blobs are written)."""
     h = dict(header)
     if metas:
         h["arrays"] = metas
     hb = json.dumps(h, separators=(",", ":")).encode()
-    frame = bytearray(8 + len(hb) + payload)
+    frame = bytearray(_HDR_OFF + len(hb) + payload)
     frame[0:4] = FRAME_MAGIC
     _U32.pack_into(frame, 4, len(hb))
-    frame[8:8 + len(hb)] = hb
-    return frame, 8 + len(hb)
+    frame[_HDR_OFF:_HDR_OFF + len(hb)] = hb
+    return frame, _HDR_OFF + len(hb)
+
+
+def _seal_frame(frame: bytearray) -> bytearray:
+    """Stamp the frame's CRC32 over header + blobs (everything after
+    the CRC field itself)."""
+    crc = zlib.crc32(memoryview(frame)[_HDR_OFF:]) & 0xFFFFFFFF
+    _U32.pack_into(frame, 8, crc)
+    return frame
 
 
 def pack_frame(header: dict,
@@ -119,7 +145,7 @@ def pack_frame(header: dict,
         if n:
             mv[off:off + n] = a.data.cast("B") if a.ndim else a.tobytes()
         off += n
-    return frame
+    return _seal_frame(frame)
 
 
 def pack_run_frame(header: dict, feeds: List[Dict[str, np.ndarray]]
@@ -151,7 +177,7 @@ def pack_run_frame(header: dict, feeds: List[Dict[str, np.ndarray]]
                 stacked = np.frombuffer(frame, r.dtype.base, r.size, off)
                 np.copyto(stacked, r.reshape(-1), casting="no")
             off += n
-    return frame
+    return _seal_frame(frame)
 
 
 def unpack_frame(buf: bytes, copy: bool = True
@@ -162,19 +188,35 @@ def unpack_frame(buf: bytes, copy: bool = True
     ``copy=False`` returns read-only views into ``buf`` (the views keep
     it alive) — right for the parent's result path, where rows are
     sliced per ticket anyway; the child copies so kernels get aligned,
-    writable activations."""
+    writable activations.
+
+    Integrity: the frame's CRC32 is verified first.  A mismatch raises
+    :class:`~repro.runtime.serving.FrameCorrupt` carrying the parsed
+    header when the corruption spared it (the caller fails just that
+    frame's batch); only an unreadable header — framing itself
+    untrustworthy — raises :class:`ProtocolError`."""
     mv = memoryview(buf)
-    if len(mv) < 8 or bytes(mv[:4]) != FRAME_MAGIC:
+    if len(mv) < _HDR_OFF or bytes(mv[:4]) != FRAME_MAGIC:
         raise ProtocolError("bad frame magic")
     (hlen,) = _U32.unpack_from(mv, 4)
-    if 8 + hlen > len(mv):
+    (want_crc,) = _U32.unpack_from(mv, 8)
+    if _HDR_OFF + hlen > len(mv):
         raise ProtocolError(f"truncated header ({hlen} declared, "
-                            f"{len(mv) - 8} available)")
+                            f"{len(mv) - _HDR_OFF} available)")
+    crc_ok = (zlib.crc32(mv[_HDR_OFF:]) & 0xFFFFFFFF) == want_crc
     try:
-        header = json.loads(bytes(mv[8:8 + hlen]).decode())
+        header = json.loads(bytes(mv[_HDR_OFF:_HDR_OFF + hlen]).decode())
     except ValueError as e:
+        if not crc_ok:
+            raise ProtocolError(
+                "corrupt frame with unreadable header (crc mismatch)"
+            ) from None
         raise ProtocolError(f"unparseable header: {e}") from None
-    off = 8 + hlen
+    if not crc_ok:
+        raise FrameCorrupt(
+            detail=f"crc mismatch on {header.get('type')!r} frame",
+            header=header)
+    off = _HDR_OFF + hlen
     arrays: Dict[str, np.ndarray] = {}
     for m in header.pop("arrays", ()):
         dt = np.dtype(m["dtype"])
@@ -230,7 +272,18 @@ def _worker_main(conn, wid: int, model_paths: Dict[str, str],
             buf = conn.recv_bytes()
         except (EOFError, OSError):
             return
-        header, arrays = unpack_frame(buf)
+        try:
+            header, arrays = unpack_frame(buf)
+        except FrameCorrupt as e:
+            # a run frame arrived with flipped payload bits: refuse to
+            # execute untrusted inputs, answer a typed error so the
+            # parent fails (and re-dispatches) only this batch
+            req = (e.header or {}).get("req")
+            if req is not None:
+                conn.send_bytes(pack_frame(
+                    {"type": "err", "req": req,
+                     "cls": "FrameCorrupt", "msg": str(e)}))
+            continue
         kind = header.get("type")
         if kind == "close":
             try:
@@ -296,6 +349,8 @@ def _rebuild_error(cls: str, msg: str) -> Exception:
     on type: client errors are never retried, ``PlanError`` counts
     against the breaker)."""
     from repro.core.execplan import PlanError
+    if cls == "FrameCorrupt":      # child refused a corrupt run frame
+        return FrameCorrupt(detail=msg)
     table = {"PlanError": PlanError, "ValueError": ValueError,
              "TypeError": TypeError, "KeyError": KeyError,
              "RuntimeError": RuntimeError,
@@ -450,8 +505,29 @@ class ProcPool(ServerPool):
         while True:
             try:
                 buf = conn.recv_bytes()
+                c = _chaos.active()
+                if c is not None:
+                    buf = c.maybe_flip_frame(buf)
                 header, arrays = unpack_frame(buf, copy=False)
             except (EOFError, OSError):
+                break
+            except FrameCorrupt as e:
+                # payload integrity fault, framing intact: fail only
+                # the pending batch this frame answered (the executor
+                # re-dispatches it to a healthy worker) and keep
+                # reading — the stream is NOT poisoned
+                req = (e.header or {}).get("req")
+                with self._plock:
+                    slot = self._pending.pop(req, None) \
+                        if req is not None else None
+                if slot is not None:
+                    ev, box = slot[0], slot[1]
+                    box["corrupt"] = str(e)
+                    ev.set()
+                    _trace.instant("frame_corrupt", "fault",
+                                   args={"worker": wid, "req": req})
+                    continue
+                p.detail = str(e)  # unattributable: recycle the worker
                 break
             except ProtocolError as e:
                 p.detail = str(e)  # desynchronized: recycle the worker
@@ -582,8 +658,13 @@ class ProcPool(ServerPool):
             out = box["out"]
             return [{k: v[i] for k, v in out.items()}
                     for i in range(len(feeds))]
+        if "corrupt" in box:
+            raise FrameCorrupt(wid, box["corrupt"])
         if "err" in box:
-            raise _rebuild_error(*box["err"])
+            err = _rebuild_error(*box["err"])
+            if isinstance(err, FrameCorrupt):
+                err.worker = wid   # attribute the child-side refusal
+            raise err
         raise WorkerCrashed(
             wid, p.detail or (f"exitcode {p.exitcode}"
                               if p.exitcode is not None else "pipe EOF"))

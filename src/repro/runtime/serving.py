@@ -96,6 +96,36 @@ class WorkerCrashed(ServingError):
                          + (f": {detail}" if detail else ""))
 
 
+class Cancelled(ServingError):
+    """The caller cancelled this ticket (:meth:`Ticket.cancel`) before
+    it produced a result.  Settlement is first-wins: a cancel that
+    races the real result loses cleanly (``cancel()`` returns False and
+    ``result()`` returns the value)."""
+
+    def __init__(self, model: str):
+        self.model = model
+        super().__init__(f"{model}: request cancelled")
+
+
+class FrameCorrupt(ServingError):
+    """A process-pool pipe frame failed its CRC32 integrity check.
+    Message boundaries survive corruption (the pipe transport is
+    length-prefixed), so this is a *payload* fault, not a protocol
+    desync: only the one batch the frame carried fails, and the
+    executor re-dispatches it to a healthy worker instead of recycling
+    the stream (:class:`~repro.runtime.procpool.ProtocolError` is the
+    desync case).  ``header`` holds the frame's parsed header when the
+    corruption spared it (how the reader attributes the fault to its
+    pending request)."""
+
+    def __init__(self, worker: int = -1, detail: str = "",
+                 header: Optional[dict] = None):
+        self.worker = int(worker)
+        self.header = header
+        super().__init__(f"worker {worker}: corrupt frame"
+                         + (f": {detail}" if detail else ""))
+
+
 class FlushError(ServingError):
     """One or more models' batches failed during a drain.  Every other
     model's requests were still executed; ``errors`` maps each failed
@@ -124,7 +154,7 @@ class Ticket:
 
     __slots__ = ("name", "deadline", "submitted_at", "trace_id",
                  "_session", "_event", "_lock", "_done", "_value",
-                 "_error")
+                 "_error", "_cbs")
 
     def __init__(self, session, name: str,
                  deadline: Optional[float] = None):
@@ -138,24 +168,58 @@ class Ticket:
         self._done = False
         self._value = None
         self._error: Optional[BaseException] = None
+        self._cbs: List[Callable] = []
+
+    def _settle_locked(self) -> List[Callable]:
+        self._done = True
+        cbs, self._cbs = self._cbs, []
+        return cbs
 
     def _fulfill(self, value) -> bool:
         with self._lock:
             if self._done:
                 return False
-            self._done = True
             self._value = value
+            cbs = self._settle_locked()
         self._event.set()
+        for fn in cbs:
+            fn(self)
         return True
 
     def _fail(self, error: BaseException) -> bool:
         with self._lock:
             if self._done:
                 return False
-            self._done = True
             self._error = error
+            cbs = self._settle_locked()
         self._event.set()
+        for fn in cbs:
+            fn(self)
         return True
+
+    def on_done(self, fn: Callable[["Ticket"], None]) -> None:
+        """Register ``fn(ticket)`` to run once when the ticket settles
+        (immediately if it already has).  Callbacks run on whichever
+        thread settles the ticket — possibly a pool worker holding the
+        pool lock — so they must not block or call back into the
+        settling pool (the fleet router obeys this by only recording
+        state and waking its own thread)."""
+        with self._lock:
+            if not self._done:
+                self._cbs.append(fn)
+                return
+        fn(self)
+
+    def cancel(self) -> bool:
+        """Cancel the request.  A ticket still queued is dropped before
+        dispatch (its EDF heap slot freed); one already in flight
+        settles :class:`Cancelled` unless the real result wins the race
+        first.  Returns True when the cancellation settled the ticket,
+        False when it had already settled (its result/error stands)."""
+        sess = self._session
+        if sess is not None and hasattr(sess, "_cancel"):
+            return sess._cancel(self)
+        return self._fail(Cancelled(self.name))
 
     @property
     def done(self) -> bool:
@@ -515,6 +579,22 @@ class ServerPool:
             if name is not None:
                 return len(self._queues.get(name, ()))
             return sum(len(q) for q in self._queues.values())
+
+    def discard(self, name: str, ticket: Ticket) -> int:
+        """Drop a (cancelled) ticket's queued entries, freeing their
+        EDF heap slots immediately — a cancelled ticket must not hold
+        queue capacity until a worker pops past it.  Entries already
+        claimed by a worker are left to settle first-wins."""
+        with self._cv:
+            q = self._queues.get(name)
+            if not q:
+                return 0
+            keep = [e for e in q if e[3] is not ticket]
+            removed = len(q) - len(keep)
+            if removed:
+                q[:] = keep
+                heapq.heapify(q)
+        return removed
 
     # -- dispatch (deadline-driven auto-flush) ------------------------------
     def _miss_locked(self, name: str, ticket: Ticket, now: float) -> None:

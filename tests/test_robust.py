@@ -736,3 +736,174 @@ def test_missing_plan_const_member_rejected(tmp_path):
                 drop_from_manifest)
     with pytest.raises(ArtifactError, match="missing"):
         CompiledModel.load(str(tmp_path / "bad2.rpa"))
+
+
+# --------------------------------------------------------------------------
+# frame integrity: CRC32 on the pipe protocol
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_frame_crc_roundtrip_and_blob_flip():
+    """Every frame carries a CRC32; a flipped payload byte surfaces as
+    a typed FrameCorrupt that still carries the parsed header (so the
+    fault is attributable to one request), while a header flip — the
+    framing itself untrustworthy — stays a ProtocolError."""
+    from repro.runtime import procpool
+    from repro.runtime.procpool import ProtocolError, unpack_frame
+    from repro.runtime.serving import FrameCorrupt
+
+    arrs = {"y": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    buf = bytes(procpool.pack_frame({"type": "res", "req": 7}, arrs))
+    header, out = unpack_frame(buf)
+    assert header["req"] == 7
+    np.testing.assert_array_equal(out["y"], arrs["y"])
+
+    flipped = bytearray(buf)
+    flipped[-3] ^= 0x40                    # inside the blob region
+    with pytest.raises(FrameCorrupt) as ei:
+        unpack_frame(bytes(flipped))
+    assert ei.value.header["req"] == 7     # fault is attributable
+
+    hdr_flip = bytearray(buf)
+    hdr_flip[procpool._HDR_OFF] ^= 0x40    # breaks the JSON open-brace
+    with pytest.raises(ProtocolError, match="unreadable header"):
+        unpack_frame(bytes(hdr_flip))
+
+
+@pytest.mark.fast
+def test_chaos_frame_flip_targets_payload_frames():
+    """The chaos bit-flip injector corrupts exactly one payload-bearing
+    frame; headers-only frames (heartbeats) pass through with the arm
+    unconsumed, so the fault always lands where a batch can feel it."""
+    from repro.runtime import procpool
+    from repro.runtime.serving import FrameCorrupt
+
+    hb = bytes(procpool.pack_frame({"type": "hb", "w": 0, "seq": 1}))
+    res = bytes(procpool.pack_frame({"type": "res", "req": 3},
+                                    {"y": np.ones(4, np.float32)}))
+    with chaos.inject() as c:
+        c.corrupt_frames(1)
+        assert c.maybe_flip_frame(hb) == hb          # passthrough
+        assert c.stats()["frame_flips"] == 0         # arm unconsumed
+        bad = c.maybe_flip_frame(res)
+        assert bad != res and c.stats()["frame_flips"] == 1
+        assert c.maybe_flip_frame(res) == res        # one-shot
+    with pytest.raises(FrameCorrupt):
+        procpool.unpack_frame(bad)
+    procpool.unpack_frame(res)                       # original intact
+
+
+@pytest.mark.chaos
+def test_process_pool_frame_corruption_zero_ticket_loss():
+    """A bit-flipped reply frame fails only its own batch — the batch
+    re-dispatches and every ticket still resolves with parity, with no
+    worker recycled (the stream is not poisoned: length-prefixed
+    framing survives payload corruption)."""
+    sess = _proc_session()
+    try:
+        feeds = [_feed(sess, seed=i) for i in range(8)]
+        with chaos.inject() as c:
+            c.corrupt_frames(1)
+            ts = [sess.submit("m0", f) for f in feeds]
+            for t, f in zip(ts, feeds):
+                _check_output(sess, "m0", t.result(timeout=30), f)
+            assert c.stats()["frame_flips"] == 1
+        assert sess.stats()["models"]["m0"]["frame_corrupt"] >= 1
+        assert sess.stats()["pool"]["recycled_workers"] == 0
+    finally:
+        sess.close()
+
+
+# --------------------------------------------------------------------------
+# client-side retry budgets and request cancellation
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.fast
+def test_submit_retries_absorb_shed_until_queue_drains():
+    """submit(retries=N) retries an Overloaded shed with jittered
+    exponential backoff seeded from the shed hint, succeeding once a
+    drain frees the bounded queue."""
+    sess = api.Session(max_queue=2)
+    sess.add(random_graph(0), name="m0", precision="int8")
+    try:
+        x = _feed(sess)
+        for _ in range(2):
+            sess.submit("m0", x)                   # fill the queue
+        with pytest.raises(Overloaded):
+            sess.submit("m0", x)                   # retries=0: shed
+
+        th = threading.Thread(
+            target=lambda: (time.sleep(0.01), sess.flush("m0")))
+        th.start()
+        t = sess.submit("m0", x, retries=12, retry_cap_ms=100.0)
+        th.join()
+        _check_output(sess, "m0", t.result(timeout=30), x)
+        assert sess.stats()["models"]["m0"]["submit_retries"] >= 1
+    finally:
+        sess.close()
+
+
+@pytest.mark.fast
+def test_submit_retries_respect_deadline():
+    """The retry loop never sleeps past the request deadline: a queue
+    that stays full sheds with Overloaded before the deadline burns."""
+    sess = api.Session(max_queue=1)
+    sess.add(random_graph(0), name="m0", precision="int8")
+    try:
+        x = _feed(sess)
+        sess.submit("m0", x)
+        t0 = time.monotonic()
+        with pytest.raises(Overloaded):
+            sess.submit("m0", x, deadline_ms=80.0, retries=50,
+                        retry_cap_ms=1000.0)
+        assert (time.monotonic() - t0) < 1.0
+    finally:
+        sess.close()
+
+
+@pytest.mark.fast
+def test_cancel_queued_drops_from_edf_queue():
+    """Cancelling a ticket still queued settles it Cancelled and frees
+    its EDF heap slot immediately; the pool keeps serving."""
+    sess = _session(workers=1, linger_ms=500.0)   # linger: stays queued
+    try:
+        x = _feed(sess)
+        t = sess.submit("m0", x)
+        assert sess._pool.queue_depth("m0") == 1
+        assert t.cancel() is True
+        assert sess._pool.queue_depth("m0") == 0  # heap slot freed
+        with pytest.raises(api.Cancelled):
+            t.result(timeout=5)
+        assert t.cancel() is False                # already settled
+        t2 = sess.submit("m0", x)
+        _check_output(sess, "m0", t2.result(timeout=30), x)
+        assert sess.stats()["models"]["m0"]["cancelled"] == 1
+    finally:
+        sess.close()
+
+
+@pytest.mark.chaos
+def test_cancel_in_flight_first_settlement_wins():
+    """Cancelling a ticket already executing races the real result:
+    exactly one settlement wins (Cancelled or the value, never both,
+    never neither) and the pool is undisturbed either way."""
+    sess = _session(workers=1, linger_ms=1.0, heartbeat_timeout_s=30.0)
+    try:
+        x = _feed(sess)
+        with chaos.inject() as c:
+            c.stall_worker(0, seconds=0.4)
+            t = sess.submit("m0", x)
+            time.sleep(0.1)                       # claimed, stalled
+            won = t.cancel()
+        if won:
+            with pytest.raises(api.Cancelled):
+                t.result(timeout=30)
+            assert sess.stats()["models"]["m0"]["cancelled"] == 1
+        else:
+            _check_output(sess, "m0", t.result(timeout=30), x)
+        t2 = sess.submit("m0", x)
+        _check_output(sess, "m0", t2.result(timeout=30), x)
+    finally:
+        sess.close()
